@@ -1,0 +1,128 @@
+"""Shared harness for the rNVM benchmarks.
+
+Throughput is ops / virtual-second on the deterministic fabric model
+(repro.core.sim), mirroring the paper's testbed constants.  KOPS numbers are
+therefore reproducible bit-for-bit; compare the *ratios* against Table 3.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core import FEConfig, FrontEnd, NVMBackend
+from repro.core.structures import (
+    RemoteBPTree,
+    RemoteBST,
+    RemoteHashTable,
+    RemoteMVBPTree,
+    RemoteMVBST,
+    RemoteQueue,
+    RemoteSkipList,
+    RemoteStack,
+)
+
+# paper Table 3 values (KOPS) for side-by-side reporting
+PAPER_TABLE3 = {
+    "queue":    {"sym": 1199, "symb": 2279, "naive": 301, "r": 833, "rcb": 1678},
+    "stack":    {"sym": 1087, "symb": 2255, "naive": 285, "r": 828, "rcb": 1449},
+    "hashtable": {"sym": 1097, "naive": 315, "r": 385, "rc": 445},
+    "skiplist": {"sym": 125.2, "symb": 209.0, "naive": 5.0, "r": 7.7, "rc": 40.4, "rcb": 66.0},
+    "bst":      {"sym": 84.5, "symb": 151.0, "naive": 19.0, "r": 22.9, "rc": 59.5, "rcb": 134.2},
+    "bptree":   {"sym": 305.2, "symb": 343.0, "naive": 11.5, "r": 13.7, "rc": 77.1, "rcb": 184.3},
+    "mv_bst":   {"sym": 42.2, "symb": 146.1, "naive": 7.0, "r": 12.3, "rc": 28.4, "rcb": 88.9},
+    "mv_bpt":   {"sym": 18.6, "symb": 76.0, "naive": 7.4, "r": 9.8, "rc": 17.8, "rcb": 60.2},
+}
+
+VARIANTS: Dict[str, Callable[..., FEConfig]] = {
+    "sym": lambda **kw: FEConfig(symmetric=True),
+    "symb": lambda **kw: FEConfig(symmetric=True, sym_batch=True, batch_ops=kw.get("batch", 1024)),
+    "naive": lambda **kw: FEConfig.naive(),
+    "r": lambda **kw: FEConfig.r(),
+    "rc": lambda **kw: FEConfig.rc(cache_bytes=kw.get("cache_bytes", 6 << 20)),
+    "rcb": lambda **kw: FEConfig.rcb(batch_ops=kw.get("batch", 1024),
+                                     cache_bytes=kw.get("cache_bytes", 6 << 20)),
+}
+
+
+def make_fe(variant: str, capacity=1 << 28, **kw) -> FrontEnd:
+    be = NVMBackend(capacity=capacity)
+    return FrontEnd(be, VARIANTS[variant](**kw))
+
+
+def kops(n_ops: int, ns: float) -> float:
+    return n_ops / ns * 1e6 if ns > 0 else float("inf")
+
+
+def cache_bytes_for(structure: str, n: int, frac: float) -> int:
+    node = {"bst": 32, "bptree": 256, "skiplist": 136, "mv_bst": 32, "mv_bpt": 256,
+            "hashtable": 32}.get(structure, 64)
+    return max(4096, int(n * node * frac))
+
+
+def build_structure(fe: FrontEnd, name: str, structure: str, preload: int,
+                    seed: int = 0):
+    """Create + preload a structure; returns (obj, preloaded_keys)."""
+    rng = random.Random(seed)
+    keys = rng.sample(range(preload * 8), preload)
+    if structure == "stack":
+        s = RemoteStack(fe, name)
+        for i in range(preload):
+            s.push(i)
+        obj = s
+    elif structure == "queue":
+        s = RemoteQueue(fe, name)
+        for i in range(preload):
+            s.enqueue(i)
+        obj = s
+    elif structure == "hashtable":
+        obj = RemoteHashTable(fe, name, n_buckets=max(1024, preload // 4))
+        for k in keys:
+            obj.put(k, k)
+    elif structure == "skiplist":
+        obj = RemoteSkipList(fe, name)
+        for k in sorted(keys):
+            obj.insert(k, k)
+    elif structure == "bst":
+        obj = RemoteBST(fe, name)
+        for k in keys:  # random order: realistic depth
+            obj.insert(k, k)
+    elif structure == "bptree":
+        obj = RemoteBPTree(fe, name)
+        for k in keys:
+            obj.insert(k, k)
+    elif structure == "mv_bst":
+        obj = RemoteMVBST(fe, name)
+        obj.build_from_sorted(sorted((k, k) for k in keys))
+    elif structure == "mv_bpt":
+        obj = RemoteMVBPTree(fe, name)
+        obj.build_from_sorted(sorted((k, k) for k in keys))
+    else:
+        raise ValueError(structure)
+    fe.drain(obj.h)
+    return obj, keys
+
+
+def run_write_workload(fe: FrontEnd, obj, structure: str, n_ops: int,
+                       write_frac: float = 1.0, seed: int = 1) -> float:
+    """100%-write (insert/push) workload by default; returns virtual ns."""
+    rng = random.Random(seed)
+    t0 = fe.clock.now
+    if structure in ("stack", "queue"):
+        push = obj.push if structure == "stack" else obj.enqueue
+        pop = obj.pop if structure == "stack" else obj.dequeue
+        for i in range(n_ops):
+            if rng.random() < write_frac:
+                push(i)
+            else:
+                pop()
+    else:
+        hi = 1 << 30
+        for _ in range(n_ops):
+            k = rng.randrange(hi)
+            if rng.random() < write_frac:
+                obj.insert(k, k) if hasattr(obj, "insert") else obj.put(k, k)
+            else:
+                (obj.find(k) if hasattr(obj, "find") else obj.get(k))
+    fe.drain(obj.h)
+    return fe.clock.now - t0

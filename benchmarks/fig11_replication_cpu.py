@@ -1,0 +1,78 @@
+"""Figure 11 + §10.2 replication: CPU utilization split (front-end ~100%
+busy, blade a few %, justifying ASIC/FPGA blades) and the cost of
+replication done by the blade (free for the front-end) vs replication
+driven by the front-end (20~40% degradation, per the paper)."""
+
+from __future__ import annotations
+
+import random
+
+from repro.core import FEConfig, FrontEnd, NVMBackend
+from repro.core.structures import RemoteBST
+
+from .common import cache_bytes_for, kops
+
+PRELOAD = 10000
+OPS = 2500
+
+
+class FEDrivenReplicationFrontEnd(FrontEnd):
+    """A front-end that streams every log append to a second blade itself
+    (the paper's strawman alternative to blade-side mirroring)."""
+
+    def flush_oplog(self, h, sync=True):
+        staged = list(h.oplog_staged)
+        super().flush_oplog(h, sync)
+        if staged:
+            n = sum(len(s) for s in staged)
+            self._round(n, nvm_write=True)  # second copy to the mirror blade
+
+    def flush_memlogs(self, h, sync=False):
+        n = sum(len(v) + 13 for v in h.wbuf.values()) + 9 if h.wbuf else 0
+        super().flush_memlogs(h, sync)
+        if n:
+            self._pipelined_write(n)
+            self.clock.advance(self.cost.rtt_ns)  # wait mirror ack before return
+
+
+def _bench(fe_cls, mirrors: int):
+    be = NVMBackend(capacity=1 << 28, num_mirrors=mirrors)
+    fe = fe_cls(be, FEConfig.rcb(batch_ops=256,
+                                 cache_bytes=cache_bytes_for("bst", PRELOAD, 0.10)))
+    t = RemoteBST(fe, "t")
+    for k in random.Random(0).sample(range(1 << 24), PRELOAD):
+        t.insert(k, k)
+    fe.drain(t.h)
+    start_fe, start_be = fe.clock.now, be.clock.now
+    fe.busy_ns = 0.0
+    rng = random.Random(3)
+    for _ in range(OPS):
+        k = rng.randrange(1 << 24)
+        t.insert(k, k)
+    fe.drain(t.h)
+    elapsed = fe.clock.now - start_fe
+    return {
+        "kops": kops(OPS, elapsed),
+        "fe_busy": fe.busy_ns / elapsed,
+        "be_busy": (be.clock.now - start_be) / elapsed,
+    }
+
+
+def main():
+    blade_rep = _bench(FrontEnd, mirrors=1)
+    no_rep = _bench(FrontEnd, mirrors=0)
+    fe_rep = _bench(FEDrivenReplicationFrontEnd, mirrors=0)
+    overhead_blade = 1 - blade_rep["kops"] / no_rep["kops"]
+    overhead_fe = 1 - fe_rep["kops"] / no_rep["kops"]
+    print(f"fig11 no-replication : {no_rep['kops']:8.1f} KOPS  "
+          f"fe_busy={no_rep['fe_busy']*100:5.1f}% be_busy={no_rep['be_busy']*100:5.1f}%")
+    print(f"fig11 blade mirrors=1: {blade_rep['kops']:8.1f} KOPS  "
+          f"(overhead {overhead_blade*100:4.1f}%  — paper: ~0%)")
+    print(f"fig11 FE-driven rep. : {fe_rep['kops']:8.1f} KOPS  "
+          f"(overhead {overhead_fe*100:4.1f}%  — paper: 20~40%)")
+    return {"no_rep": no_rep, "blade_rep": blade_rep, "fe_rep": fe_rep,
+            "overhead_blade": overhead_blade, "overhead_fe": overhead_fe}
+
+
+if __name__ == "__main__":
+    main()

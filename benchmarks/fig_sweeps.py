@@ -1,0 +1,70 @@
+"""Figures 7, 8, 12: batch-size sweep, cache-size sweep, workload mixes."""
+
+from __future__ import annotations
+
+from .common import build_structure, cache_bytes_for, kops, make_fe, run_write_workload
+
+BATCH_STRUCTS = ["bst", "bptree", "skiplist", "mv_bst", "mv_bpt"]
+CACHE_STRUCTS = ["bst", "bptree", "skiplist"]
+MIX_STRUCTS = ["bst", "bptree", "mv_bst", "mv_bpt"]
+
+
+def fig7_batch_sweep(preload=20000, n_ops=2000,
+                     batches=(1, 16, 64, 256, 1024, 4048)):
+    out = {}
+    for s in BATCH_STRUCTS:
+        row = {}
+        for b in batches:
+            fe = make_fe("rcb", batch=b, cache_bytes=cache_bytes_for(s, preload, 0.10))
+            obj, _ = build_structure(fe, s, s, preload)
+            row[b] = kops(n_ops, run_write_workload(fe, obj, s, n_ops))
+        out[s] = row
+    return out
+
+
+def fig8_cache_sweep(preload=20000, n_ops=2000,
+                     fracs=(0.01, 0.05, 0.10, 0.25, 0.50, 1.0)):
+    out = {}
+    for s in CACHE_STRUCTS + ["mv_bst", "mv_bpt"]:
+        row = {}
+        for f in fracs:
+            fe = make_fe("rcb", batch=1024, cache_bytes=cache_bytes_for(s, preload, f))
+            obj, _ = build_structure(fe, s, s, preload)
+            row[f] = kops(n_ops, run_write_workload(fe, obj, s, n_ops))
+        out[s] = row
+    return out
+
+
+def fig12_workloads(preload=20000, n_ops=2000,
+                    write_fracs=(1.0, 0.5, 0.25, 0.10, 0.0)):
+    out = {}
+    for s in MIX_STRUCTS:
+        row = {}
+        for wf in write_fracs:
+            fe = make_fe("rcb", batch=1024, cache_bytes=cache_bytes_for(s, preload, 0.10))
+            obj, _ = build_structure(fe, s, s, preload)
+            row[wf] = kops(n_ops, run_write_workload(fe, obj, s, n_ops, write_frac=wf))
+        out[s] = row
+    return out
+
+
+def main():
+    print("== Fig 7: throughput (KOPS) vs batch size ==")
+    f7 = fig7_batch_sweep()
+    for s, row in f7.items():
+        print(f"{s:10s} " + " ".join(f"{b}:{v:8.1f}" for b, v in row.items()))
+        gain = row[1024] / row[1]
+        print(f"{'':10s} batch1024/batch1 = {gain:.2f}x")
+    print("== Fig 8: throughput (KOPS) vs cache size (fraction of data) ==")
+    f8 = fig8_cache_sweep()
+    for s, row in f8.items():
+        print(f"{s:10s} " + " ".join(f"{int(f*100)}%:{v:8.1f}" for f, v in row.items()))
+    print("== Fig 12: throughput (KOPS) vs write fraction ==")
+    f12 = fig12_workloads()
+    for s, row in f12.items():
+        print(f"{s:10s} " + " ".join(f"w{int(wf*100)}%:{v:8.1f}" for wf, v in row.items()))
+    return {"fig7": f7, "fig8": f8, "fig12": f12}
+
+
+if __name__ == "__main__":
+    main()

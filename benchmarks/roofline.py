@@ -1,0 +1,51 @@
+"""Roofline report: formats the dry-run JSONs into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline [reports/dryrun_single_pod.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def fmt_table(records) -> str:
+    lines = []
+    hdr = (f"| {'arch':20s} | {'shape':11s} | {'t_compute':>9s} | {'t_memory':>9s} "
+           f"| {'t_collective':>12s} | {'bound':>10s} | {'6ND/HLO':>7s} | {'GB/dev':>7s} |")
+    lines.append(hdr)
+    lines.append("|" + "-" * (len(hdr) - 2) + "|")
+    for r in records:
+        if r.get("status") != "ok" or "roofline" not in r:
+            lines.append(f"| {r['arch']:20s} | {r['shape']:11s} | FAIL: {r.get('error','')[:60]}")
+            continue
+        ro = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        gb = (mem.get("argument_bytes_per_device", 0)) / 1e9
+        lines.append(
+            f"| {r['arch']:20s} | {r['shape']:11s} | {ro['compute_s']:8.3f}s | "
+            f"{ro['memory_s']:8.3f}s | {ro['collective_s']:11.3f}s | "
+            f"{ro['bottleneck']:>10s} | {r.get('useful_flops_fraction', 0):7.2f} | {gb:7.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun_single_pod.json"
+    records = json.load(open(path))
+    print(f"hardware model: {PEAK_FLOPS/1e12:.0f} TF/s bf16, "
+          f"{HBM_BW/1e9:.0f} GB/s HBM, {ICI_BW/1e9:.0f} GB/s/link ICI per chip")
+    print(fmt_table(records))
+    ok = [r for r in records if r.get("status") == "ok" and "roofline" in r]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["compute_s"] /
+                    max(r["roofline"]["bound_s"], 1e-12))
+        most_coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']}")
+        print(f"most collective-bound:   {most_coll['arch']} x {most_coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

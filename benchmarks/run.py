@@ -1,0 +1,102 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (us_per_call is virtual
+microseconds per operation on the paper's fabric model; derived is the
+headline ratio the paper reports for that experiment).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller sizes")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table2,table3,fig7,fig9,fig10,fig11,apps")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    preload, n_ops = (8000, 1200) if args.quick else (15000, 2500)
+
+    csv = []
+
+    def emit(name, us_per_call, derived):
+        csv.append(f"{name},{us_per_call:.3f},{derived}")
+
+    def want(name):
+        return only is None or name in only
+
+    if want("table2"):
+        from .table2_allocators import main as t2
+        rows = t2()
+        emit("table2_two_tier_1024_alloc", 1.0 / rows["two-tier-1024"][0],
+             f"vs_pmem={rows['two-tier-1024'][0] / rows['pmem'][0]:.2f}x")
+
+    if want("table3"):
+        from .table3_throughput import main as t3
+        rows = t3(preload=preload, n_ops=n_ops)
+        for row in rows:
+            s = row["structure"]
+            best = row.get("rcb") or row.get("rc")
+            speed = best / row["naive"]
+            emit(f"table3_{s}_rcb", 1e3 / best, f"rcb_vs_naive={speed:.1f}x")
+        speeds = [(r.get("rcb") or r.get("rc")) / r["naive"] for r in rows]
+        emit("table3_speedup_band", 0.0,
+             f"min={min(speeds):.1f}x_max={max(speeds):.1f}x_paper=6-22x")
+
+    if want("fig7"):
+        from .fig_sweeps import main as sweeps
+        out = sweeps()
+        row = out["fig7"]["mv_bst"]
+        emit("fig7_mvbst_batch1024", 1e3 / row[1024],
+             f"batch_gain={row[1024]/row[1]:.2f}x_paper=3.38x")
+
+    if want("fig9"):
+        from .fig9_scalability import main as f9
+        out = f9(reader_counts=(1, 6))
+        lock6, mv6 = out["lock"][6], out["mv"][6]
+        emit("fig9_mv_reader_advantage", 1e3 / mv6["reader_kops_avg"],
+             f"mv_vs_lock_readers={mv6['reader_kops_avg']/lock6['reader_kops_avg']:.2f}x_paper=3.0-3.2x")
+        wdeg_lock = 1 - out["lock"][6]["writer_kops"] / out["lock"][1]["writer_kops"]
+        wdeg_mv = 1 - out["mv"][6]["writer_kops"] / out["mv"][1]["writer_kops"]
+        emit("fig9_writer_degradation", 0.0,
+             f"lock={wdeg_lock*100:.0f}%_mv={wdeg_mv*100:.0f}%_paper=26%/8%")
+
+    if want("fig10"):
+        from .fig10_multi_frontend import main as f10
+        out = f10(counts=(1, 7))
+        emit("fig10_7_frontends", 1e3 / out[7]["per_client_kops"],
+             f"degradation={out[7]['degradation']*100:.0f}%_paper=7-20%")
+
+    if want("fig11"):
+        from .fig11_replication_cpu import main as f11
+        out = f11()
+        emit("fig11_blade_replication", 0.0,
+             f"overhead={out['overhead_blade']*100:.1f}%_fe_driven={out['overhead_fe']*100:.1f}%")
+
+    if want("apps"):
+        from .common import kops, make_fe
+        from repro.core.apps import SmallBank, TATP
+        for name, mk in [("smallbank", lambda fe: SmallBank(fe, "sb", n_accounts=50000)),
+                         ("tatp", lambda fe: TATP(fe, "tp", n_subscribers=5000))]:
+            for variant in ("sym", "naive", "r", "rc"):
+                fe = make_fe(variant)
+                app = mk(fe)
+                if name == "tatp":
+                    app.populate(5000)
+                t0 = fe.clock.now
+                app.run_mix(n_ops, write_frac=1.0, seed=1)
+                (fe.drain(app.h) if name == "smallbank" else app.drain())
+                k = kops(n_ops, fe.clock.now - t0)
+                emit(f"apps_{name}_{variant}", 1e3 / k, f"kops={k:.1f}")
+
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Table 2: allocator throughput (MOPS) — Glibc / Pmem / RPC / two-tier
+(slab 128B and 1024B).  Glibc/Pmem are modeled with their published
+latencies; RPC and two-tier run the real allocator code over the fabric
+model."""
+
+from __future__ import annotations
+
+from repro.core import FEConfig, FrontEnd, NVMBackend
+
+PAPER = {
+    "glibc": (21.0, 57.0),
+    "pmem": (1.42, 1.38),
+    "rpc": (0.33, 0.88),
+    "two-tier-128": (1.33, 2.41),
+    "two-tier-1024": (6.42, 13.90),
+}
+
+ALLOC_SIZE = 32
+N = 20000
+
+
+def _two_tier(slab: int):
+    be = NVMBackend(capacity=1 << 26, block_size=slab)
+    fe = FrontEnd(be, FEConfig.rcb())
+    t0 = fe.clock.now
+    addrs = [fe.alloc(ALLOC_SIZE) for _ in range(N)]
+    t_alloc = fe.clock.now - t0
+    t0 = fe.clock.now
+    for a in addrs:
+        fe.free(a)
+    t_free = fe.clock.now - t0
+    return N / t_alloc * 1e3, N / t_free * 1e3  # MOPS
+
+
+def _rpc():
+    """Every alloc/free is a round-trip RPC to the blade."""
+    be = NVMBackend(capacity=1 << 26, block_size=64)
+    fe = FrontEnd(be, FEConfig.rcb())
+    t0 = fe.clock.now
+    addrs = [fe._backend_alloc(1) for _ in range(N)]
+    t_alloc = fe.clock.now - t0
+    t0 = fe.clock.now
+    for a in addrs:
+        fe._backend_free(a, 1)
+    t_free = fe.clock.now - t0
+    return N / t_alloc * 1e3, N / t_free * 1e3
+
+
+def run():
+    rows = {}
+    rows["glibc"] = (1e3 / 48.0, 1e3 / 18.0)          # ~48ns malloc, ~18ns free
+    rows["pmem"] = (1e3 / 700.0, 1e3 / 720.0)         # persistent allocator latency
+    rows["rpc"] = _rpc()
+    rows["two-tier-128"] = _two_tier(128)
+    rows["two-tier-1024"] = _two_tier(1024)
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'allocator':16s}{'alloc MOPS':>12s}{'free MOPS':>12s}{'paper':>16s}")
+    for name, (a, f) in rows.items():
+        pa, pf = PAPER[name]
+        print(f"{name:16s}{a:12.2f}{f:12.2f}{pa:10.2f}/{pf:<6.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

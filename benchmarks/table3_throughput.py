@@ -1,0 +1,53 @@
+"""Table 3: throughput (KOPS) of the eight data structures under
+Symmetric / Symmetric-B / naive / rNVM-R / rNVM-RC / rNVM-RCB, 100% write
+workload, one-to-one deployment.  Cells the paper leaves empty ('-') are
+skipped for the same reasons (O(1) structures don't batch; stack/queue
+combine batch+cache)."""
+
+from __future__ import annotations
+
+from .common import PAPER_TABLE3, build_structure, cache_bytes_for, kops, make_fe, run_write_workload
+
+STRUCTURES = ["queue", "stack", "hashtable", "skiplist", "bst", "bptree", "mv_bst", "mv_bpt"]
+SKIP = {("hashtable", "symb"), ("hashtable", "rcb"),
+        ("queue", "rc"), ("stack", "rc"),
+        ("queue", "symb"), ("stack", "symb")}
+SKIP -= {("queue", "symb"), ("stack", "symb")}  # paper does report these
+VARIANTS = ["sym", "symb", "naive", "r", "rc", "rcb"]
+
+
+def run(preload: int = 30000, n_ops: int = 3000):
+    rows = []
+    for structure in STRUCTURES:
+        row = {"structure": structure}
+        for variant in VARIANTS:
+            if (structure, variant) in SKIP:
+                row[variant] = None
+                continue
+            cache = cache_bytes_for(structure, preload, 0.10)  # 10% of data
+            fe = make_fe(variant, cache_bytes=cache)
+            obj, _ = build_structure(fe, structure, structure, preload)
+            ns = run_write_workload(fe, obj, structure, n_ops, write_frac=1.0)
+            row[variant] = kops(n_ops, ns)
+        rows.append(row)
+    return rows
+
+
+def main(preload: int = 30000, n_ops: int = 3000):
+    rows = run(preload, n_ops)
+    hdr = f"{'structure':11s}" + "".join(f"{v:>10s}" for v in VARIANTS)
+    print(hdr + f"{'RCB/naive':>11s}{'paper':>9s}")
+    for row in rows:
+        s = row["structure"]
+        line = f"{s:11s}"
+        for v in VARIANTS:
+            line += f"{row[v]:10.1f}" if row[v] else f"{'-':>10s}"
+        speedup = (row.get("rcb") or row.get("rc") or 0) / row["naive"]
+        paper = PAPER_TABLE3.get(s, {})
+        p_speed = (paper.get("rcb") or paper.get("rc", 0)) / paper.get("naive", 1)
+        print(line + f"{speedup:10.1f}x{p_speed:8.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

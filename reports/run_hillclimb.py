@@ -1,0 +1,37 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys, time, traceback
+sys.path.insert(0, "src")
+from repro.launch.dryrun import analyze_cell
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh()
+EXPERIMENTS = [
+    # (tag, arch, shape, overrides)
+    ("kimi_decode_baseline", "kimi-k2-1t-a32b", "decode_32k", None),
+    ("mamba_train_bf16scan", "falcon-mamba-7b", "train_4k", {"scan_bf16": True}),
+    ("llava_train_padheads", "llava-next-34b", "train_4k", {"pad_heads": 8}),
+    ("kimi_train_savedots", "kimi-k2-1t-a32b", "train_4k", {"remat": "save_dots"}),
+    ("llama_train_padheads", "llama3.2-3b", "train_4k", {"pad_heads": 8}),
+    ("mamba_prefill_bf16scan", "falcon-mamba-7b", "prefill_32k", {"scan_bf16": True}),
+    ("llava_train_padheads_savedots", "llava-next-34b", "train_4k",
+     {"pad_heads": 8, "remat": "save_dots"}),
+]
+out = []
+for tag, arch, shape, ov in EXPERIMENTS:
+    t0 = time.time()
+    try:
+        rec = analyze_cell(arch, shape, mesh, overrides=ov)
+        rec["tag"] = tag
+        rec["status"] = "ok"
+        r = rec["roofline"]
+        print(f"[hc] {tag}: tc={r['compute_s']:.3f} tm={r['memory_s']:.3f} "
+              f"tn={r['collective_s']:.3f} bound={r['bottleneck']} "
+              f"useful={rec['useful_flops_fraction']:.2f} ({time.time()-t0:.0f}s)", flush=True)
+    except Exception as e:
+        rec = {"tag": tag, "status": "fail", "error": str(e),
+               "traceback": traceback.format_exc()[-1500:]}
+        print(f"[hc] {tag}: FAIL {e}", flush=True)
+    out.append(rec)
+    json.dump(out, open("reports/hillclimb.json", "w"), indent=1, default=float)
+print("hillclimb done")

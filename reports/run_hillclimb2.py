@@ -1,0 +1,27 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys, time, traceback
+sys.path.insert(0, "src")
+from repro.launch.dryrun import analyze_cell
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh()
+EXPERIMENTS = [
+    ("kimi_train_noremat", "kimi-k2-1t-a32b", "train_4k", {"remat": "none"}),
+    ("llama_train_padheads_savedots", "llama3.2-3b", "train_4k",
+     {"pad_heads": 8, "remat": "save_dots"}),
+]
+out = json.load(open("reports/hillclimb.json"))
+for tag, arch, shape, ov in EXPERIMENTS:
+    try:
+        rec = analyze_cell(arch, shape, mesh, overrides=ov)
+        rec["tag"] = tag; rec["status"] = "ok"
+        r = rec["roofline"]
+        print(f"[hc] {tag}: tc={r['compute_s']:.3f} tm={r['memory_s']:.3f} "
+              f"tn={r['collective_s']:.3f} bound={r['bottleneck']}", flush=True)
+    except Exception as e:
+        rec = {"tag": tag, "status": "fail", "error": str(e)}
+        print(f"[hc] {tag}: FAIL {e}", flush=True)
+    out.append(rec)
+    json.dump(out, open("reports/hillclimb.json", "w"), indent=1, default=float)
+print("done")

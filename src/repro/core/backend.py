@@ -1,0 +1,371 @@
+"""The back-end NVM blade.
+
+Passive by design (paper §3.1): it never initiates communication; it exposes
+only the small fixed API set — one-sided read/write, ``remote_tx_write``
+(append memory logs + commit + checksum), slab alloc/free over a persistent
+bitmap, and 64-bit atomics — so the whole blade could be an ASIC/FPGA.
+
+Layout of the NVM arena::
+
+    [0,            NAMING_END)   global-naming region: fixed 8-byte slots at
+                                 well-known offsets (root pointers, log heads,
+                                 LPNs, allocation metadata)
+    [NAMING_END,   BITMAP_END)   persistent allocation bitmap (1 bit / block)
+    [BITMAP_END,   capacity)     block heap: data areas + log areas
+
+Everything needed for recovery lives in the arena itself; ``recover()``
+rebuilds all volatile state (free lists, log-head caches) from bytes, and
+``decode_txs`` drops torn tails by checksum, per paper §4.2/§7.5.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Optional
+
+from .oplog import MemLog, decode_oplogs, decode_txs, encode_oplog, encode_tx
+from .sim import Clock, CostModel, Link, Stats
+
+NAME_SLOT = 40  # 32B name + 8B value
+NUM_NAME_SLOTS = 512
+NAMING_END = NUM_NAME_SLOTS * NAME_SLOT
+
+
+class CrashError(RuntimeError):
+    """Raised when the blade is down (transient or permanent failure)."""
+
+
+class Mirror:
+    """A read-only mirror blade: receives the replicated log channel.
+
+    The primary replicates every arena mutation (memory/operation logs,
+    naming updates, atomics) before commit; on permanent primary failure the
+    mirror's arena *is* a byte-exact replacement (paper §4.3).
+    """
+
+    def __init__(self, capacity: int):
+        self.arena = bytearray(capacity)
+        self.bytes_replicated = 0
+
+    def apply(self, addr: int, data: bytes) -> None:
+        self.arena[addr : addr + len(data)] = data
+        self.bytes_replicated += len(data)
+
+
+class NVMBackend:
+    """One NVM blade: arena + fixed API + replication + crash/recovery."""
+
+    def __init__(
+        self,
+        capacity: int = 1 << 26,
+        block_size: int = 256,
+        cost: Optional[CostModel] = None,
+        num_mirrors: int = 1,
+    ):
+        self.cost = cost or CostModel()
+        self.capacity = capacity
+        self.block_size = block_size
+        self.arena = bytearray(capacity)
+        self.link = Link(self.cost)
+        self.clock = Clock()
+        self.stats = Stats()
+        self.mirrors: List[Mirror] = [Mirror(capacity) for _ in range(num_mirrors)]
+        self.alive = True
+        # fail the next physical write after `fail_after` bytes (test hook)
+        self._torn_write_at: Optional[int] = None
+        # per-(address, epoch) atomic-op counts (same-address serialization)
+        self._atomic_contention: Dict = {}
+
+        n_blocks = capacity // block_size
+        self.bitmap_start = NAMING_END
+        self.bitmap_len = (n_blocks + 7) // 8
+        self.heap_start = _align(self.bitmap_start + self.bitmap_len, block_size)
+        self.n_blocks = (capacity - self.heap_start) // block_size
+        self._free: List[int] = []      # recycled single blocks
+        self._next_fresh = 0            # bump pointer into never-used blocks
+        self._names: Dict[str, int] = {}  # name -> slot index (cache of arena)
+        self._log_areas: Dict[str, "LogArea"] = {}
+
+    # ------------------------------------------------------------------ util
+    def _check_alive(self) -> None:
+        if not self.alive:
+            raise CrashError("back-end blade is down")
+
+    def _phys_write(self, addr: int, data: bytes, replicate: bool = True) -> None:
+        """The single choke point for arena mutation (torn-write fault hook)."""
+        if self._torn_write_at is not None:
+            cut = self._torn_write_at
+            self._torn_write_at = None
+            data = data[:cut]
+            self.arena[addr : addr + len(data)] = data
+            self.alive = False  # power loss mid-write
+            return
+        self.arena[addr : addr + len(data)] = data
+        if replicate:
+            for m in self.mirrors:
+                m.apply(addr, data)
+        self.clock.advance(self.cost.nvm_write_ns)
+
+    # ------------------------------------------------------- one-sided verbs
+    def read(self, addr: int, size: int) -> bytes:
+        self._check_alive()
+        return bytes(self.arena[addr : addr + size])
+
+    def write(self, addr: int, data: bytes) -> None:
+        self._check_alive()
+        self._phys_write(addr, data)
+
+    def atomic_read(self, addr: int) -> int:
+        self._check_alive()
+        return struct.unpack_from("<Q", self.arena, addr)[0]
+
+    def atomic_add(self, addr: int, delta: int) -> int:
+        self._check_alive()
+        old = self.atomic_read(addr)
+        self._phys_write(addr, struct.pack("<Q", (old + delta) % (1 << 64)))
+        return old
+
+    def atomic_cas(self, addr: int, expected: int, new: int) -> bool:
+        self._check_alive()
+        old = self.atomic_read(addr)
+        if old != expected:
+            return False
+        self._phys_write(addr, struct.pack("<Q", new))
+        return True
+
+    # --------------------------------------------------------- global naming
+    def name_slot_addr(self, name: str) -> int:
+        """Address of the 8-byte value slot for `name` (well-known location)."""
+        if name in self._names:
+            return self._names[name] * NAME_SLOT + 32
+        key = name.encode()[:32].ljust(32, b"\x00")
+        # linear probe over the fixed table; persist the key bytes
+        for slot in range(NUM_NAME_SLOTS):
+            base = slot * NAME_SLOT
+            cur = bytes(self.arena[base : base + 32])
+            if cur == key:
+                self._names[name] = slot
+                return base + 32
+            if cur == b"\x00" * 32:
+                self._phys_write(base, key)
+                self._names[name] = slot
+                return base + 32
+        raise RuntimeError("naming region full")
+
+    def get_name(self, name: str) -> int:
+        return self.atomic_read(self.name_slot_addr(name))
+
+    def set_name(self, name: str, value: int) -> None:
+        self._phys_write(self.name_slot_addr(name), struct.pack("<Q", value))
+
+    # ----------------------------------------------------- block allocation
+    def alloc_blocks(self, n: int = 1) -> int:
+        """Allocate `n` contiguous blocks; returns the arena address.
+
+        The persistent bitmap is updated in the arena so allocation status
+        survives a crash (paper §4.4: "persistent bitmap ... fast recovery").
+        """
+        self._check_alive()
+        if n == 1 and self._free:
+            b = self._free.pop()
+            self._set_bit(b, True)
+            return self.heap_start + b * self.block_size
+        # bump-allocate a (contiguous) run from never-used blocks
+        if self._next_fresh + n > self.n_blocks:
+            raise MemoryError(f"NVM blade out of blocks (need {n} contiguous)")
+        lo = self._next_fresh
+        self._next_fresh += n
+        for b in range(lo, lo + n):
+            self._set_bit(b, True)
+        return self.heap_start + lo * self.block_size
+
+    def free_blocks(self, addr: int, n: int = 1) -> None:
+        self._check_alive()
+        b0 = (addr - self.heap_start) // self.block_size
+        for b in range(b0, b0 + n):
+            self._set_bit(b, False)
+            self._free.append(b)
+
+    def _set_bit(self, block: int, val: bool) -> None:
+        byte = self.bitmap_start + block // 8
+        mask = 1 << (block % 8)
+        cur = self.arena[byte]
+        self.arena[byte] = (cur | mask) if val else (cur & ~mask)
+        for m in self.mirrors:
+            m.apply(byte, bytes([self.arena[byte]]))
+
+    # -------------------------------------------------------------- log areas
+    def create_log_area(self, name: str, size_blocks: int) -> "LogArea":
+        addr = self.alloc_blocks(size_blocks)
+        area = LogArea(self, name, addr, size_blocks * self.block_size)
+        self._log_areas[name] = area
+        self.set_name(f"{name}.addr", addr)
+        self.set_name(f"{name}.size", area.size)
+        self.set_name(f"{name}.head", 0)
+        self.set_name(f"{name}.applied", 0)
+        return area
+
+    def get_log_area(self, name: str) -> "LogArea":
+        return self._log_areas[name]
+
+    # ------------------------------------------------- transactional interface
+    def tx_append(self, area: "LogArea", payload: bytes) -> int:
+        """Land a pre-encoded transaction (or op-log batch) in a log area.
+
+        This is what a one-sided RDMA_Write into the log region does; the
+        head pointer (LPN) bump is part of the same write on real hardware
+        (the commit flag delimits entries), here modeled by the head slot.
+        """
+        self._check_alive()
+        if area.head + len(payload) > area.size:
+            area.compact()
+        while area.head + len(payload) > area.size:
+            self._grow_area(area)  # log rotation onto a larger region
+        off = area.head
+        self._phys_write(area.addr + off, payload)
+        if not self.alive:  # torn write tripped mid-append
+            return off
+        area.head = off + len(payload)
+        self.set_name(f"{area.name}.head", area.head)
+        return off
+
+    def _grow_area(self, area: "LogArea") -> None:
+        """Double a log area: allocate a fresh region, move the live suffix,
+        update the global-naming pointers (log rotation)."""
+        new_blocks = 2 * (area.size // self.block_size)
+        new_addr = self.alloc_blocks(new_blocks)
+        live = bytes(self.arena[area.addr + area.applied : area.addr + area.head])
+        self._phys_write(new_addr, live)
+        self.free_blocks(area.addr, area.size // self.block_size)
+        area.addr = new_addr
+        area.size = new_blocks * self.block_size
+        area.head = len(live)
+        area.applied = 0
+        self.set_name(f"{area.name}.addr", new_addr)
+        self.set_name(f"{area.name}.size", area.size)
+        self.set_name(f"{area.name}.head", area.head)
+        self.set_name(f"{area.name}.applied", 0)
+
+    def tx_apply(self, area: "LogArea") -> int:
+        """Replay committed-but-unapplied memory logs into the data area.
+
+        Runs on the blade (paper workflow step 6); front-ends never wait on
+        it.  Returns the number of transactions applied.
+        """
+        self._check_alive()
+        buf = self.arena[area.addr + area.applied : area.addr + area.head]
+        txs, consumed = decode_txs(bytes(buf))
+        nbytes = 0
+        for tx in txs:
+            for entry in tx:
+                self._phys_write(entry.addr, entry.data)
+                nbytes += len(entry.data)
+        area.applied += consumed
+        self.set_name(f"{area.name}.applied", area.applied)
+        self.clock.advance(nbytes * self.cost.backend_apply_ns_per_byte)
+        self.stats.tx_commits += len(txs)
+        return len(txs)
+
+    # ------------------------------------------------------ crash / recovery
+    def crash(self) -> None:
+        """Transient power failure: volatile state is lost, the arena persists."""
+        self.alive = False
+
+    def schedule_torn_write(self, keep_bytes: int) -> None:
+        """Test hook: the next physical write persists only its first
+        `keep_bytes` bytes, then the blade loses power (paper §4.2)."""
+        self._torn_write_at = keep_bytes
+
+    def reboot(self) -> "NVMBackend":
+        """Restart after a transient failure.
+
+        Rebuild all volatile state from the arena: naming cache, free lists
+        from the persistent bitmap, log-area heads; validate each log area's
+        tail transaction by checksum and truncate torn appends; then replay
+        any committed-but-unapplied memory logs (paper §7.5).
+        """
+        self.alive = True
+        self._torn_write_at = None
+        # naming cache
+        self._names.clear()
+        names: Dict[str, int] = {}
+        for slot in range(NUM_NAME_SLOTS):
+            base = slot * NAME_SLOT
+            raw = bytes(self.arena[base : base + 32]).rstrip(b"\x00")
+            if raw:
+                names[raw.decode()] = slot
+        self._names = names
+        # allocation state from the persistent bitmap
+        used = [
+            b
+            for b in range(self.n_blocks)
+            if (self.arena[self.bitmap_start + b // 8] >> (b % 8)) & 1
+        ]
+        self._next_fresh = (used[-1] + 1) if used else 0
+        used_set = set(used)
+        self._free = [b for b in range(self._next_fresh) if b not in used_set]
+        # log areas: validate tails, truncate torn bytes, replay
+        areas = sorted({n.rsplit(".", 1)[0] for n in names if n.endswith(".addr")})
+        self._log_areas = {}
+        for name in areas:
+            addr = self.get_name(f"{name}.addr")
+            size = self.get_name(f"{name}.size")
+            head = self.get_name(f"{name}.head")
+            applied = self.get_name(f"{name}.applied")
+            area = LogArea(self, name, addr, size)
+            area.applied = applied
+            if name.endswith(".oplog"):
+                # op logs are replayed by the *front-end*; just trust head.
+                area.head = head
+            else:
+                # a torn append may have landed bytes past the recorded head,
+                # or head may have been bumped for a torn tx: scan + validate.
+                buf = bytes(self.arena[addr + applied : addr + size])
+                _, consumed = decode_txs(buf)
+                area.head = applied + consumed
+                self.set_name(f"{name}.head", area.head)
+            self._log_areas[name] = area
+            if not name.endswith(".oplog"):
+                self.tx_apply(area)
+        return self
+
+    def promote_mirror(self, idx: int = 0) -> "NVMBackend":
+        """Permanent primary failure: build a fresh blade from a mirror."""
+        fresh = NVMBackend(
+            self.capacity, self.block_size, self.cost, num_mirrors=len(self.mirrors)
+        )
+        fresh.arena = bytearray(self.mirrors[idx].arena)
+        return fresh.reboot()
+
+
+class LogArea:
+    """An append-only log region inside a blade's arena."""
+
+    def __init__(self, backend: NVMBackend, name: str, addr: int, size: int):
+        self.backend = backend
+        self.name = name
+        self.addr = addr
+        self.size = size
+        self.head = 0      # append offset
+        self.applied = 0   # replay watermark (LPN)
+
+    def compact(self) -> None:
+        """Drop fully-applied prefix (checkpointing the log)."""
+        live = bytes(
+            self.backend.arena[self.addr + self.applied : self.addr + self.head]
+        )
+        self.backend._phys_write(self.addr, live.ljust(self.size, b"\x00")[: self.size])
+        self.head -= self.applied
+        self.applied = 0
+        self.backend.set_name(f"{self.name}.head", self.head)
+        self.backend.set_name(f"{self.name}.applied", 0)
+
+    def read_unapplied(self) -> bytes:
+        return bytes(self.backend.arena[self.addr + self.applied : self.addr + self.head])
+
+    def read_all(self) -> bytes:
+        return bytes(self.backend.arena[self.addr : self.addr + self.head])
+
+
+def _align(x: int, a: int) -> int:
+    return (x + a - 1) // a * a

@@ -1,0 +1,104 @@
+"""Front-end DRAM page cache (paper §7.2).
+
+A hash map translates NVM addresses to cached local pages.  Three eviction
+policies are provided, matching the paper's micro-benchmark:
+
+  * ``lru``    — exact LRU (highest hit rate, most bookkeeping),
+  * ``rr``     — random replacement (cheapest, worst hit rate),
+  * ``hybrid`` — the paper's policy: draw a random candidate set of
+                 ``rr_set_size`` pages, evict the least-recently-used page
+                 *of that set* (LRU quality at RR cost).
+
+Eviction never writes back: the write workflow has already staged memory
+logs to the back-end, so cached pages are clean by construction.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Dict, Optional
+
+
+class PageCache:
+    def __init__(
+        self,
+        capacity_bytes: int,
+        policy: str = "hybrid",
+        rr_set_size: int = 32,
+        seed: int = 0,
+    ):
+        assert policy in ("lru", "rr", "hybrid")
+        self.capacity = capacity_bytes
+        self.policy = policy
+        self.rr_set_size = rr_set_size
+        self.pages: Dict[int, bytearray] = {}
+        self.last_used: Dict[int, int] = {}
+        self.used_bytes = 0
+        self.tick = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._rng = random.Random(seed)
+
+    # ------------------------------------------------------------------- api
+    def get(self, addr: int) -> Optional[bytearray]:
+        self.tick += 1
+        page = self.pages.get(addr)
+        if page is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.last_used[addr] = self.tick
+        return page
+
+    def put(self, addr: int, data: bytes) -> None:
+        self.tick += 1
+        old = self.pages.get(addr)
+        if old is not None:
+            self.used_bytes -= len(old)
+        page = bytearray(data)
+        while self.used_bytes + len(page) > self.capacity and self.pages:
+            self._evict_one()
+        if self.used_bytes + len(page) > self.capacity:
+            return  # page larger than the whole cache: bypass
+        self.pages[addr] = page
+        self.last_used[addr] = self.tick
+        self.used_bytes += len(page)
+
+    def update(self, addr: int, offset: int, data: bytes) -> None:
+        """Write-through into a cached page, if present."""
+        page = self.pages.get(addr)
+        if page is not None:
+            page[offset : offset + len(data)] = data
+
+    def invalidate(self, addr: int) -> None:
+        page = self.pages.pop(addr, None)
+        if page is not None:
+            self.used_bytes -= len(page)
+            self.last_used.pop(addr, None)
+
+    def clear(self) -> None:
+        self.pages.clear()
+        self.last_used.clear()
+        self.used_bytes = 0
+
+    @property
+    def miss_ratio(self) -> float:
+        total = self.hits + self.misses
+        return self.misses / total if total else 0.0
+
+    # -------------------------------------------------------------- eviction
+    def _evict_one(self) -> None:
+        if self.policy == "lru":
+            victim = min(self.last_used, key=self.last_used.get)  # type: ignore[arg-type]
+        elif self.policy == "rr":
+            victim = self._rng.choice(list(self.pages.keys()))
+        else:  # hybrid: random candidate set, evict its LRU member
+            keys = list(self.pages.keys())
+            k = min(self.rr_set_size, len(keys))
+            cand = self._rng.sample(keys, k)
+            victim = min(cand, key=lambda a: self.last_used.get(a, 0))
+        page = self.pages.pop(victim)
+        self.last_used.pop(victim, None)
+        self.used_bytes -= len(page)
+        self.evictions += 1

@@ -1,0 +1,402 @@
+"""Front-end runtime: the Gather-Apply workflow of paper §5/§7.
+
+One ``FrontEnd`` object = one client machine.  It owns:
+
+  * a local DRAM page cache (``use_cache`` / "C"),
+  * a coalescing memory-log write buffer flushed via ``remote_tx_write``
+    (``use_batch`` / "B" controls the flush cadence and vector ops),
+  * an operation-log channel that records every mutation in remote NVM
+    *before* the op returns (``use_oplog`` / "R" — log Reproducing), making
+    delayed/batched memory-log flushes crash-safe,
+  * a two-tier slab allocator.
+
+Variant matrix (Table 3): naive = R,C,B all off; rNVM-R = R; rNVM-RC = R+C;
+rNVM-RCB = R+C+B.  ``symmetric=True`` models the paper's symmetric baseline
+(data structure in *local* NVM, logs streamed to a remote mirror
+asynchronously); ``sym_batch`` is the Symmetric-B row.
+
+Timing: sync remote rounds charge RTT + transfer against this front-end's
+clock; pipelined (async) writes charge only the post overhead plus link
+occupancy; group-committed op logs charge one round per group (classic group
+commit).  The blade's NIC serializes transfers across front-ends, giving
+natural contention for the sharing experiments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Dict, List, Optional, Tuple
+
+from .allocator import FrontEndAllocator
+from .backend import CrashError, LogArea, NVMBackend
+from .cache import PageCache
+from .oplog import MemLog, OpLog, decode_oplogs, encode_oplog, encode_tx
+from .sim import Clock, CostModel, Stats
+
+
+@dataclasses.dataclass
+class FEConfig:
+    use_oplog: bool = True          # R: operation-log reproducing
+    use_cache: bool = True          # C: front-end DRAM cache
+    use_batch: bool = True          # B: batching / vector ops
+    batch_ops: int = 1024           # memory-log flush cadence (ops)
+    oplog_group: int = 64           # op-log group-commit size (B on)
+    oplog_pipeline: int = 4         # outstanding op-log writes (B off)
+    cache_bytes: int = 6 << 20
+    cache_policy: str = "hybrid"
+    cpu_node_ns: float = 300.0      # software cost per node visit
+    symmetric: bool = False         # paper's symmetric baseline
+    sym_batch: bool = False         # Symmetric-B row
+
+    @classmethod
+    def naive(cls, **kw) -> "FEConfig":
+        return cls(use_oplog=False, use_cache=False, use_batch=False, **kw)
+
+    @classmethod
+    def r(cls, **kw) -> "FEConfig":
+        return cls(use_oplog=True, use_cache=False, use_batch=False, **kw)
+
+    @classmethod
+    def rc(cls, **kw) -> "FEConfig":
+        return cls(use_oplog=True, use_cache=True, use_batch=False, **kw)
+
+    @classmethod
+    def rcb(cls, **kw) -> "FEConfig":
+        return cls(use_oplog=True, use_cache=True, use_batch=True, **kw)
+
+
+class StructHandle:
+    """Per-data-structure state on a front-end: log areas + write buffer."""
+
+    def __init__(self, fe: "FrontEnd", name: str, oplog: LogArea, txlog: LogArea):
+        self.fe = fe
+        self.name = name
+        self.oplog_area = oplog
+        self.txlog_area = txlog
+        self.wbuf: Dict[int, bytes] = {}          # addr -> whole-node bytes
+        self.pending_ops = 0                       # ops since last memlog flush
+        self.seq = 0                               # operation sequence number
+        self.oplog_staged: List[bytes] = []
+        self.oplog_staged_ops = 0
+        # structures may defer materialization (stack/queue compaction);
+        # the hook runs right before a memory-log flush.
+        self.pre_flush = None
+        self.post_flush = None  # e.g. multi-version root CAS after durability
+        self._in_preflush = False
+
+    @property
+    def opsn_name(self) -> str:
+        return f"{self.name}.opsn"
+
+
+class FrontEnd:
+    def __init__(self, backend: NVMBackend, config: Optional[FEConfig] = None, fe_id: int = 0):
+        self.backend = backend
+        self.cfg = config or FEConfig()
+        self.fe_id = fe_id
+        self.cost = backend.cost
+        self.clock = Clock()
+        self.stats = Stats()
+        self.cache = PageCache(self.cfg.cache_bytes, self.cfg.cache_policy, seed=fe_id)
+        self.allocator = FrontEndAllocator(self)
+        self._oplog_inflight = 0
+        self.busy_ns = 0.0  # front-end CPU busy time (utilization bench)
+
+    # ======================================================== network charges
+    def _round(self, nbytes: int, *, nvm_write: bool = False) -> None:
+        """A synchronous one-sided round: post, transfer, completion."""
+        start = self.clock.now + self.cost.issue_ns
+        end = self.backend.link.transfer(start, nbytes)
+        extra = self.cost.nvm_write_ns if nvm_write else self.cost.nvm_read_ns
+        self.clock.advance_to(end + self.cost.rtt_ns + extra)
+
+    def _pipelined_write(self, nbytes: int) -> None:
+        """Posted write without waiting for the completion (durability comes
+        from the op log, so memory-log flushes may overlap computation)."""
+        self.clock.advance(self.cost.issue_ns)
+        self.backend.link.transfer(self.clock.now, nbytes)
+
+    def _atomic(self, addr: int = 0) -> None:
+        self.clock.advance(self.cost.atomic_ns)
+        end = self.backend.link.transfer(self.clock.now, 8)
+        # atomics to the same 8-byte location serialize at the blade NIC
+        bucket = (addr, int(self.clock.now // 100_000.0))
+        seen = self.backend._atomic_contention
+        n = seen.get(bucket, 0)
+        seen[bucket] = n + 1
+        self.clock.advance_to(end + n * 400.0)
+
+    def _charge_node(self) -> None:
+        self.clock.advance(self.cfg.cpu_node_ns)
+        self.busy_ns += self.cfg.cpu_node_ns
+
+    def _charge_local_alloc(self) -> None:
+        self.clock.advance(100.0)
+
+    # ========================================================== registration
+    def register(self, name: str, oplog_blocks: int = 4096, txlog_blocks: int = 4096) -> StructHandle:
+        """Create (or re-attach to) a structure's log areas + naming entries."""
+        be = self.backend
+        opname, txname = f"{name}.oplog", f"{name}.txlog"
+        if opname in be._log_areas:
+            h = StructHandle(self, name, be.get_log_area(opname), be.get_log_area(txname))
+            h.seq = be.get_name(f"{name}.seq")
+            return h
+        op = be.create_log_area(opname, oplog_blocks)
+        tx = be.create_log_area(txname, txlog_blocks)
+        be.set_name(f"{name}.seq", 0)
+        be.set_name(f"{name}.opsn", 0)
+        self._round(64)  # registration RPC
+        return StructHandle(self, name, op, tx)
+
+    # ============================================================ allocation
+    def _backend_alloc(self, nblocks: int) -> int:
+        # RFP-style RPC: request via RDMA_Write, response via RDMA_Read.
+        self._round(32, nvm_write=True)
+        return self.backend.alloc_blocks(nblocks)
+
+    def _backend_free(self, addr: int, nblocks: int) -> None:
+        self._round(32, nvm_write=True)
+        self.backend.free_blocks(addr, nblocks)
+
+    def alloc(self, size: int) -> int:
+        return self.allocator.alloc(size)
+
+    def free(self, addr: int, size: int = 0) -> None:
+        self.allocator.free(addr, size)
+
+    # ================================================================= reads
+    def read(self, h: StructHandle, addr: int, size: int, *, cacheable: bool = True) -> bytes:
+        """Gather step: write-buffer overlay -> cache -> remote NVM."""
+        self._charge_node()
+        staged = h.wbuf.get(addr)
+        if staged is not None and len(staged) >= size:
+            return bytes(staged[:size])
+        if self.cfg.symmetric:
+            self.clock.advance(self.cost.nvm_read_ns)
+            return self.backend.read(addr, size)
+        if self.cfg.use_cache and cacheable:
+            page = self.cache.get(addr)
+            if page is not None and len(page) >= size:
+                self.stats.cache_hits += 1
+                self.clock.advance(self.cost.dram_ns)
+                return bytes(page[:size])
+            self.stats.cache_misses += 1
+        data = self.backend.read(addr, size)
+        self.stats.rdma_reads += 1
+        self.stats.bytes_read += size
+        self._round(size)
+        if self.cfg.use_cache and cacheable:
+            self.cache.put(addr, data)
+        return data
+
+    def read_many(self, h: StructHandle, reqs: List[Tuple[int, int]], *, cacheable: bool = True) -> List[bytes]:
+        """Doorbell-batched independent reads (vector ops): one RTT for the
+        batch, per-item issue+transfer.  Falls back to serial reads when
+        batching is off."""
+        if not self.cfg.use_batch or len(reqs) <= 1:
+            return [self.read(h, a, s, cacheable=cacheable) for a, s in reqs]
+        out: List[Optional[bytes]] = [None] * len(reqs)
+        remote: List[Tuple[int, int, int]] = []
+        for i, (addr, size) in enumerate(reqs):
+            self._charge_node()
+            staged = h.wbuf.get(addr)
+            if staged is not None and len(staged) >= size:
+                out[i] = bytes(staged[:size])
+                continue
+            if self.cfg.use_cache and cacheable:
+                page = self.cache.get(addr)
+                if page is not None and len(page) >= size:
+                    self.stats.cache_hits += 1
+                    self.clock.advance(self.cost.dram_ns)
+                    out[i] = bytes(page[:size])
+                    continue
+                self.stats.cache_misses += 1
+            remote.append((i, addr, size))
+        if remote:
+            # charge: one RTT for the doorbell batch + per-item issue+xfer
+            start = self.clock.now
+            for _, addr, size in remote:
+                start += self.cost.issue_ns
+                start = self.backend.link.transfer(start, size)
+            self.clock.advance_to(start + self.cost.rtt_ns + self.cost.nvm_read_ns)
+            for i, addr, size in remote:
+                data = self.backend.read(addr, size)
+                self.stats.rdma_reads += 1
+                self.stats.bytes_read += size
+                out[i] = data
+                if self.cfg.use_cache and cacheable:
+                    self.cache.put(addr, data)
+        return out  # type: ignore[return-value]
+
+    # ================================================================ writes
+    def write(self, h: StructHandle, addr: int, data: bytes) -> None:
+        """Apply step: stage a memory log (coalescing by address) and
+        write-through into the cache.  Durability order is handled by the
+        op log (R) or by the synchronous flush in op_commit (naive)."""
+        if self.cfg.symmetric:
+            self.clock.advance(self.cost.nvm_write_ns)
+            self.backend.write(addr, data)
+            h.wbuf[addr] = data  # reuse wbuf as the replication log batch
+            return
+        if addr in h.wbuf:
+            self.stats.memlogs_coalesced += 1
+        h.wbuf[addr] = data
+        if self.cfg.use_cache:
+            self.cache.update_or_put(addr, data)
+        self.clock.advance(self.cost.dram_ns)
+
+    # ========================================================== op lifecycle
+    def op_begin(self, h: StructHandle, opcode: int, payload: bytes) -> int:
+        h.seq += 1
+        if self.cfg.symmetric:
+            return h.seq
+        if self.cfg.use_oplog:
+            entry = encode_oplog(OpLog(opcode, struct.pack("<Q", h.seq) + payload))
+            h.oplog_staged.append(entry)
+            h.oplog_staged_ops += 1
+            self.stats.oplog_appends += 1
+            group = self.cfg.oplog_group if self.cfg.use_batch else self.cfg.oplog_pipeline
+            if h.oplog_staged_ops >= group:
+                self.flush_oplog(h)
+        return h.seq
+
+    def op_commit(self, h: StructHandle) -> None:
+        self.clock.advance(self.cost.cpu_op_ns)
+        self.busy_ns += self.cost.cpu_op_ns
+        h.pending_ops += 1
+        if self.cfg.symmetric:
+            # local data already updated; stream the log to the mirror async
+            if not self.cfg.sym_batch or h.pending_ops >= self.cfg.batch_ops:
+                nbytes = sum(len(v) + 13 for v in h.wbuf.values()) + 9
+                self._pipelined_write(nbytes)
+                h.wbuf.clear()
+                h.pending_ops = 0
+            return
+        if not self.cfg.use_oplog:
+            # naive: each modified location is its own RDMA_Write; the writes
+            # of one op are posted back-to-back (doorbell) and the op waits
+            # for the last completion before returning (durability).
+            end = self.clock.now
+            for addr, data in h.wbuf.items():
+                self.backend.write(addr, data)
+                self.stats.rdma_writes += 1
+                self.stats.bytes_written += len(data)
+                self.clock.advance(self.cost.issue_ns)
+                end = self.backend.link.transfer(self.clock.now, len(data))
+            if h.wbuf:
+                self.clock.advance_to(end + self.cost.rtt_ns + self.cost.nvm_write_ns)
+            h.wbuf.clear()
+            h.pending_ops = 0
+            if h.post_flush is not None:
+                h.post_flush()
+            return
+        if self.cfg.use_batch:
+            if h.pending_ops >= self.cfg.batch_ops:
+                self.flush_memlogs(h)
+        else:
+            self.flush_memlogs(h)  # per-op, but pipelined (R makes it safe)
+
+    # ================================================================ flushes
+    def flush_oplog(self, h: StructHandle, sync: bool = True) -> None:
+        if not h.oplog_staged:
+            return
+        payload = b"".join(h.oplog_staged)
+        self.backend.tx_append(h.oplog_area, payload)
+        self.backend.set_name(f"{h.name}.seq", h.seq)
+        self.stats.rdma_writes += 1
+        self.stats.bytes_written += len(payload)
+        if sync:
+            self._round(len(payload), nvm_write=True)
+        else:
+            self._pipelined_write(len(payload))
+        h.oplog_staged.clear()
+        h.oplog_staged_ops = 0
+
+    def flush_memlogs(self, h: StructHandle, sync: bool = False) -> None:
+        """remote_tx_write: one RDMA write carrying all staged memory logs +
+        commit flag + checksum.  Also persists the covered op-sequence number
+        so recovery knows which op logs are already reflected in the data."""
+        if h.pre_flush is not None and not h._in_preflush:
+            h._in_preflush = True
+            try:
+                h.pre_flush()
+            finally:
+                h._in_preflush = False
+        if not h.wbuf and h.pending_ops == 0:
+            return
+        if h.oplog_staged:
+            self.flush_oplog(h)  # op logs must be durable first (ordering)
+        entries = [MemLog(self.backend.name_slot_addr(h.opsn_name), struct.pack("<Q", h.seq))]
+        entries += [MemLog(a, d) for a, d in h.wbuf.items()]
+        payload = encode_tx(entries)
+        self.backend.tx_append(h.txlog_area, payload)
+        self.stats.rdma_writes += 1
+        self.stats.bytes_written += len(payload)
+        self.stats.memlogs_flushed += len(h.wbuf)
+        if sync:
+            self._round(len(payload), nvm_write=True)
+        else:
+            self._pipelined_write(len(payload))
+        h.wbuf.clear()
+        h.pending_ops = 0
+        # the blade applies committed logs off the front-end's critical path
+        self.backend.tx_apply(h.txlog_area)
+        # op logs <= h.seq are now reflected in the data area: advance LPN
+        h.oplog_area.applied = h.oplog_area.head
+        if h.oplog_area.head > h.oplog_area.size // 2:
+            h.oplog_area.compact()
+        if h.txlog_area.applied > h.txlog_area.size // 2:
+            h.txlog_area.compact()
+        if h.post_flush is not None and not h._in_preflush:
+            h.post_flush()
+
+    def drain(self, h: StructHandle) -> None:
+        """Flush everything (end of benchmark / clean shutdown)."""
+        self.flush_oplog(h)
+        self.flush_memlogs(h, sync=True)
+
+    # ================================================================ atomics
+    def atomic_read(self, addr: int) -> int:
+        self._atomic(addr)
+        self.stats.rdma_atomics += 1
+        return self.backend.atomic_read(addr)
+
+    def atomic_add(self, addr: int, delta: int) -> int:
+        self._atomic(addr)
+        self.stats.rdma_atomics += 1
+        return self.backend.atomic_add(addr, delta)
+
+    def atomic_cas(self, addr: int, expected: int, new: int) -> bool:
+        self._atomic(addr)
+        self.stats.rdma_atomics += 1
+        return self.backend.atomic_cas(addr, expected, new)
+
+    # =============================================================== recovery
+    def unreplayed_oplogs(self, h: StructHandle) -> List[OpLog]:
+        """Op logs recorded in remote NVM whose effects are NOT yet in the
+        data area (seq > persisted opsn watermark) — the replay set after a
+        front-end crash (paper §7.5)."""
+        opsn = self.backend.get_name(h.opsn_name)
+        entries = decode_oplogs(h.oplog_area.read_all())
+        out = []
+        for e in entries:
+            (seq,) = struct.unpack_from("<Q", e.payload, 0)
+            if seq > opsn:
+                out.append(OpLog(e.op, e.payload[8:]))
+        self._round(h.oplog_area.head)
+        return out
+
+
+# write-through helper used above (kept on PageCache for locality of logic)
+def _update_or_put(self: PageCache, addr: int, data: bytes) -> None:
+    page = self.pages.get(addr)
+    if page is not None and len(page) == len(data):
+        self.pages[addr] = bytearray(data)
+        self.last_used[addr] = self.tick
+    else:
+        self.put(addr, data)
+
+
+PageCache.update_or_put = _update_or_put  # type: ignore[attr-defined]

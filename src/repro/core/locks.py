@@ -1,0 +1,48 @@
+"""Writer-preferred sequence lock (paper §9.2, Algorithm 3).
+
+An 8-byte sequence number (SN) lives at a well-known naming slot on the
+blade.  The (single) writer increments it with an atomic on lock *and*
+unlock, so SN is odd exactly while a write is in flight.  Readers spin until
+SN is even, remember it, and validate after reading: a changed SN means the
+snapshot may be torn and the read must retry.  The writer is never blocked
+(writer-preferred); readers pay retries under write pressure — the effect
+measured in paper Fig. 9a.
+"""
+
+from __future__ import annotations
+
+from .frontend import FrontEnd
+
+
+class WriterPreferredLock:
+    def __init__(self, fe: FrontEnd, name: str):
+        self.fe = fe
+        self.addr = fe.backend.name_slot_addr(f"{name}.sn")
+
+    # writer side ----------------------------------------------------------
+    def writer_lock(self) -> None:
+        self.fe.atomic_add(self.addr, 1)
+
+    def writer_unlock(self) -> None:
+        self.fe.atomic_add(self.addr, 1)
+
+    # reader side ----------------------------------------------------------
+    def reader_begin(self) -> int:
+        while True:
+            sn = self.fe.atomic_read(self.addr)
+            if sn % 2 == 0:
+                return sn
+            self.fe.stats.reader_retries += 1
+
+    def reader_validate(self, start_sn: int) -> bool:
+        return self.fe.atomic_read(self.addr) == start_sn
+
+    def read_consistent(self, fn, max_retries: int = 64):
+        """Run `fn()` under the seqlock until a consistent snapshot lands."""
+        for _ in range(max_retries):
+            sn = self.reader_begin()
+            out = fn()
+            if self.reader_validate(sn):
+                return out
+            self.fe.stats.reader_retries += 1
+        raise RuntimeError("seqlock: too many retries")

@@ -1,0 +1,127 @@
+"""Log-entry formats: memory logs, operation logs, commit records, checksums.
+
+Follows the paper's Figure 2:
+
+  memory log entry :=  FLAG_MEM(1B) | address(8B) | length(4B) | data(length)
+  transaction      :=  mem-log*     | FLAG_COMMIT(1B) | checksum(8B)
+  operation log    :=  FLAG_OP(1B)  | op(1B) | length(4B) | payload(length)
+
+The checksum is a Fletcher-64 over 32-bit words (zero-padded), matching the
+pure-jnp oracle in ``repro.kernels.ref.fletcher64_ref`` so the Pallas kernel,
+the oracle, and the simulator all agree on one algorithm.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Iterable, List, NamedTuple
+
+import numpy as np
+
+FLAG_MEM = 0x01
+FLAG_COMMIT = 0x02
+FLAG_OP = 0x03
+
+_MOD = np.uint64(0xFFFFFFFF)
+
+
+def fletcher64(data: bytes) -> int:
+    """Fletcher-64 over little-endian uint32 words (zero padded)."""
+    pad = (-len(data)) % 4
+    if pad:
+        data = data + b"\x00" * pad
+    words = np.frombuffer(data, dtype="<u4").astype(np.uint64)
+    # Blocked to keep the running sums below 2**64 without per-word modulo.
+    s1 = np.uint64(0)
+    s2 = np.uint64(0)
+    block = 1 << 12  # keeps the blocked running sums < 2**56 (no u64 overflow)
+    for i in range(0, len(words), block):
+        chunk = words[i : i + block]
+        c1 = np.cumsum(chunk, dtype=np.uint64) + s1
+        s2 = (s2 + np.sum(c1, dtype=np.uint64)) % _MOD
+        s1 = c1[-1] % _MOD if len(c1) else s1
+    return int((s2 << np.uint64(32)) | s1)
+
+
+class MemLog(NamedTuple):
+    """A single {address, value} pair of a transaction."""
+
+    addr: int
+    data: bytes
+
+
+class OpLog(NamedTuple):
+    """A logical operation record: enough to replay the operation."""
+
+    op: int
+    payload: bytes
+
+
+def encode_memlog(entry: MemLog) -> bytes:
+    return struct.pack("<BQI", FLAG_MEM, entry.addr, len(entry.data)) + entry.data
+
+
+def encode_tx(entries: Iterable[MemLog]) -> bytes:
+    body = b"".join(encode_memlog(e) for e in entries)
+    return body + struct.pack("<BQ", FLAG_COMMIT, fletcher64(body))
+
+
+def decode_txs(buf: bytes) -> tuple[List[List[MemLog]], int]:
+    """Decode a log area into committed transactions.
+
+    Returns (transactions, consumed_bytes).  A torn tail (no commit flag or a
+    checksum mismatch — e.g. the blade crashed mid-append) is dropped, exactly
+    as the paper's recovery protocol validates the last transaction's
+    checksum after restart.
+    """
+    txs: List[List[MemLog]] = []
+    consumed = 0
+    i = 0
+    cur: List[MemLog] = []
+    tx_start = 0
+    n = len(buf)
+    while i < n:
+        flag = buf[i]
+        if flag == FLAG_MEM:
+            if i + 13 > n:
+                break
+            _, addr, length = struct.unpack_from("<BQI", buf, i)
+            if i + 13 + length > n:
+                break
+            data = bytes(buf[i + 13 : i + 13 + length])
+            cur.append(MemLog(addr, data))
+            i += 13 + length
+        elif flag == FLAG_COMMIT:
+            if i + 9 > n:
+                break
+            (csum,) = struct.unpack_from("<Q", buf, i + 1)
+            body = bytes(buf[tx_start:i])
+            if fletcher64(body) != csum:
+                break  # torn / corrupt tail: discard
+            i += 9
+            txs.append(cur)
+            cur = []
+            tx_start = i
+            consumed = i
+        else:
+            break  # unwritten region (zeros) — end of log
+    return txs, consumed
+
+
+def encode_oplog(entry: OpLog) -> bytes:
+    return struct.pack("<BBI", FLAG_OP, entry.op, len(entry.payload)) + entry.payload
+
+
+def decode_oplogs(buf: bytes) -> List[OpLog]:
+    out: List[OpLog] = []
+    i = 0
+    n = len(buf)
+    while i < n:
+        if buf[i] != FLAG_OP or i + 6 > n:
+            break
+        _, op, length = struct.unpack_from("<BBI", buf, i)
+        if i + 6 + length > n:
+            break
+        out.append(OpLog(op, bytes(buf[i + 6 : i + 6 + length])))
+        i += 6 + length
+    return out

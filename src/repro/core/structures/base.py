@@ -1,0 +1,72 @@
+"""Shared machinery for remote persistent data structures."""
+
+from __future__ import annotations
+
+import struct
+from typing import List, Optional
+
+from ..frontend import FrontEnd, StructHandle
+from ..oplog import OpLog
+
+
+def mix64(x: int) -> int:
+    """splitmix64 finalizer — the hash used by the hash table."""
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return x ^ (x >> 31)
+
+
+class RemoteStructure:
+    """Base class: owns a StructHandle, a locally-known root register, and
+    the op-log replay protocol used for front-end crash recovery."""
+
+    #: subclasses: {opcode: method name}
+    REPLAY = {}
+
+    def __init__(self, fe: FrontEnd, name: str):
+        self.fe = fe
+        self.name = name
+        self.h: StructHandle = fe.register(name)
+
+    # root pointer ----------------------------------------------------------
+    @property
+    def root_addr(self) -> int:
+        return self.fe.backend.name_slot_addr(f"{self.name}.root")
+
+    def read_root(self) -> int:
+        raw = self.fe.read(self.h, self.root_addr, 8, cacheable=False)
+        return struct.unpack("<Q", raw)[0]
+
+    def write_root(self, value: int) -> None:
+        self.fe.write(self.h, self.root_addr, struct.pack("<Q", value))
+
+    # recovery ---------------------------------------------------------------
+    def replay(self, entries: List[OpLog]) -> int:
+        """Re-execute operations whose memory logs never committed."""
+        n = 0
+        for e in entries:
+            fn = getattr(self, self.REPLAY[e.op])
+            fn(*self.decode_args(e.op, e.payload))
+            n += 1
+        return n
+
+    @classmethod
+    def recover(cls, fe: FrontEnd, name: str, **kw) -> "RemoteStructure":
+        """Attach a fresh front-end to an existing structure and replay the
+        un-executed op-log tail (paper §7.5: front-end failure)."""
+        obj = cls(fe, name, create=False, **kw)  # type: ignore[call-arg]
+        pending = fe.unreplayed_oplogs(obj.h)
+        obj.replay(pending)
+        fe.drain(obj.h)
+        return obj
+
+    # helpers -----------------------------------------------------------------
+    @staticmethod
+    def decode_args(op: int, payload: bytes) -> tuple:
+        n = len(payload) // 8
+        return struct.unpack(f"<{n}q", payload)
+
+    @staticmethod
+    def encode_args(*args: int) -> bytes:
+        return struct.pack(f"<{len(args)}q", *args)

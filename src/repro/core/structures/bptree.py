@@ -1,0 +1,226 @@
+"""Remote persistent B+Tree.
+
+256-byte nodes, fanout 14 (keys) / 15 (children) — one cache line of keys
+plus pointers, a single remote read per node.  Leaves are chained for range
+scans.  Level-threshold caching + sorted vector inserts as for the BST.
+"""
+
+from __future__ import annotations
+
+import struct
+from bisect import bisect_left, bisect_right, insort
+from typing import List, Optional, Tuple
+
+from ..frontend import FrontEnd
+from .base import RemoteStructure
+
+OP_INSERT = 1
+
+FANOUT = 14  # max keys per node
+_FMT = struct.Struct("<BB6x14q15Q")
+NODE_SIZE = _FMT.size  # 240
+LEAF, INTERNAL = 1, 0
+
+
+class BNode:
+    __slots__ = ("kind", "keys", "ptrs")
+
+    def __init__(self, kind: int, keys: Optional[List[int]] = None, ptrs: Optional[List[int]] = None):
+        self.kind = kind
+        self.keys: List[int] = keys or []
+        # leaf: ptrs[i] = value_i (two's complement u64), plus next-leaf link
+        # internal: ptrs has len(keys)+1 children
+        self.ptrs: List[int] = ptrs or []
+
+    @property
+    def next_leaf(self) -> int:
+        return self.ptrs[-1] if self.kind == LEAF else 0
+
+    @classmethod
+    def decode(cls, raw: bytes) -> "BNode":
+        vals = _FMT.unpack(raw)
+        kind, n = vals[0], vals[1]
+        keys = list(vals[2 : 2 + n])
+        raw_ptrs = list(vals[16:])
+        if kind == LEAF:
+            ptrs = [_u2i(p) for p in raw_ptrs[:n]] + [raw_ptrs[14]]
+        else:
+            ptrs = raw_ptrs[: n + 1]
+        return cls(kind, keys, ptrs)
+
+    def encode(self) -> bytes:
+        n = len(self.keys)
+        keys = self.keys + [0] * (14 - n)
+        if self.kind == LEAF:
+            ptrs = [_i2u(v) for v in self.ptrs[:n]] + [0] * (14 - n) + [self.ptrs[-1]]
+        else:
+            ptrs = self.ptrs + [0] * (15 - len(self.ptrs))
+        return _FMT.pack(self.kind, n, *keys, *ptrs)
+
+
+def _i2u(v: int) -> int:
+    return v & 0xFFFFFFFFFFFFFFFF
+
+
+def _u2i(v: int) -> int:
+    return v - (1 << 64) if v >= (1 << 63) else v
+
+
+class RemoteBPTree(RemoteStructure):
+    REPLAY = {OP_INSERT: "_replay_insert"}
+
+    def __init__(self, fe: FrontEnd, name: str, create: bool = True):
+        super().__init__(fe, name)
+        if create:
+            fe.backend.set_name(f"{name}.root", 0)
+            self._root = 0
+        else:
+            self._root = fe.backend.get_name(f"{name}.root")
+        self.cache_level_thr = 3
+        self._window_ops = 0
+        self._window_miss0 = (0, 0)
+        self._vecbuf: List[Tuple[int, int]] = []
+        if fe.cfg.use_batch:
+            self.h.pre_flush = self._materialize
+
+    # ------------------------------------------------------------------ util
+    def _read(self, addr: int, depth: int) -> BNode:
+        cacheable = depth <= self.cache_level_thr
+        return BNode.decode(self.fe.read(self.h, addr, NODE_SIZE, cacheable=cacheable))
+
+    def _write(self, addr: int, node: BNode) -> None:
+        self.fe.write(self.h, addr, node.encode())
+
+    def _new(self, node: BNode) -> int:
+        addr = self.fe.alloc(NODE_SIZE)
+        self._write(addr, node)
+        return addr
+
+    def _adapt(self) -> None:
+        self._window_ops += 1
+        if self._window_ops < 512:
+            return
+        c = self.fe.cache
+        h0, m0 = self._window_miss0
+        dh, dm = c.hits - h0, c.misses - m0
+        alpha = dm / (dh + dm) if (dh + dm) else 0.0
+        if alpha > 0.50 and self.cache_level_thr > 0:
+            self.cache_level_thr -= 1
+        elif alpha < 0.25 and self.cache_level_thr < 12:
+            self.cache_level_thr += 1
+        self._window_ops = 0
+        self._window_miss0 = (c.hits, c.misses)
+
+    # ------------------------------------------------------------------- ops
+    def insert(self, key: int, value: int) -> None:
+        self.fe.op_begin(self.h, OP_INSERT, self.encode_args(key, value))
+        if self.fe.cfg.use_batch:
+            i = bisect_left(self._vecbuf, (key,))
+            if i < len(self._vecbuf) and self._vecbuf[i][0] == key:
+                self._vecbuf[i] = (key, value)
+            else:
+                self._vecbuf.insert(i, (key, value))
+        else:
+            self._insert_base(key, value)
+        self.fe.op_commit(self.h)
+        self._adapt()
+
+    def find(self, key: int):
+        i = bisect_left(self._vecbuf, (key,))
+        if i < len(self._vecbuf) and self._vecbuf[i][0] == key:
+            return self._vecbuf[i][1]
+        if not self._root:
+            return None
+        addr, depth = self._root, 0
+        node = self._read(addr, depth)
+        while node.kind == INTERNAL:
+            idx = bisect_right(node.keys, key)
+            addr, depth = node.ptrs[idx], depth + 1
+            node = self._read(addr, depth)
+        i = bisect_left(node.keys, key)
+        self._adapt()
+        if i < len(node.keys) and node.keys[i] == key:
+            return node.ptrs[i]
+        return None
+
+    # ------------------------------------------------------------ primitives
+    def _insert_base(self, key: int, value: int) -> None:
+        if not self._root:
+            self._root = self._new(BNode(LEAF, [key], [value, 0]))
+            self.write_root(self._root)
+            return
+        # descend, remembering the path
+        path: List[Tuple[int, BNode, int]] = []
+        addr, depth = self._root, 0
+        node = self._read(addr, depth)
+        while node.kind == INTERNAL:
+            idx = bisect_right(node.keys, key)
+            path.append((addr, node, idx))
+            addr, depth = node.ptrs[idx], depth + 1
+            node = self._read(addr, depth)
+        i = bisect_left(node.keys, key)
+        if i < len(node.keys) and node.keys[i] == key:
+            node.ptrs[i] = value
+            self._write(addr, node)
+            return
+        node.keys.insert(i, key)
+        node.ptrs.insert(i, value)
+        if len(node.keys) <= FANOUT:
+            self._write(addr, node)
+            return
+        # leaf split
+        mid = (FANOUT + 1) // 2
+        right = BNode(LEAF, node.keys[mid:], node.ptrs[mid:-1] + [node.next_leaf])
+        raddr = self._new(right)
+        left = BNode(LEAF, node.keys[:mid], node.ptrs[:mid] + [raddr])
+        self._write(addr, left)
+        self._promote(path, right.keys[0], raddr)
+
+    def _promote(self, path: List[Tuple[int, BNode, int]], key: int, child: int) -> None:
+        while path:
+            addr, node, idx = path.pop()
+            node.keys.insert(idx, key)
+            node.ptrs.insert(idx + 1, child)
+            if len(node.keys) <= FANOUT:
+                self._write(addr, node)
+                return
+            mid = FANOUT // 2
+            upkey = node.keys[mid]
+            right = BNode(INTERNAL, node.keys[mid + 1 :], node.ptrs[mid + 1 :])
+            raddr = self._new(right)
+            left = BNode(INTERNAL, node.keys[:mid], node.ptrs[: mid + 1])
+            self._write(addr, left)
+            key, child = upkey, raddr
+        new_root = self._new(BNode(INTERNAL, [key], [self._root, child]))
+        self._root = new_root
+        self.write_root(new_root)
+
+    def _materialize(self) -> None:
+        """Vector insert: the sorted batch shares its root-to-leaf path reads
+        through the cache, and leaf/parent rewrites coalesce in the tx buffer."""
+        kvs, self._vecbuf = self._vecbuf, []
+        for k, v in kvs:
+            self._insert_base(k, v)
+
+    # ---------------------------------------------------------------- replay
+    def _replay_insert(self, key: int, value: int) -> None:
+        self._insert_base(key, value)
+
+    # ------------------------------------------------------------- traversal
+    def items(self) -> List[Tuple[int, int]]:
+        out: List[Tuple[int, int]] = []
+        if self._root:
+            addr, depth = self._root, 0
+            node = self._read(addr, depth)
+            while node.kind == INTERNAL:
+                addr, depth = node.ptrs[0], depth + 1
+                node = self._read(addr, depth)
+            while True:
+                out.extend(zip(node.keys, node.ptrs[:-1]))
+                if not node.next_leaf:
+                    break
+                node = self._read(node.next_leaf, depth)
+        overlay = dict(self._vecbuf)
+        merged = {k: v for k, v in out}
+        merged.update(overlay)
+        return sorted(merged.items())

@@ -1,0 +1,103 @@
+"""Remote persistent chained hash table.
+
+Bucket array is one contiguous NVM region (allocated at creation, address in
+the naming region); chains are 24-byte nodes.  O(1) structure: batching does
+not apply (Table 3 leaves those cells empty) but caching of buckets and
+chain nodes does.
+"""
+
+from __future__ import annotations
+
+import struct
+
+from ..frontend import FrontEnd
+from .base import RemoteStructure, mix64
+
+OP_PUT = 1
+OP_DEL = 2
+
+NODE = struct.Struct("<qqQ")  # key, value, next
+NODE_SIZE = NODE.size
+
+
+class RemoteHashTable(RemoteStructure):
+    REPLAY = {OP_PUT: "_replay_put", OP_DEL: "_replay_del"}
+
+    def __init__(self, fe: FrontEnd, name: str, n_buckets: int = 1 << 14, create: bool = True):
+        super().__init__(fe, name)
+        be = fe.backend
+        if create:
+            self.n_buckets = n_buckets
+            self.base = fe.alloc(n_buckets * 8)
+            be.set_name(f"{name}.base", self.base)
+            be.set_name(f"{name}.nbuckets", n_buckets)
+        else:
+            self.base = be.get_name(f"{name}.base")
+            self.n_buckets = be.get_name(f"{name}.nbuckets")
+
+    def _bucket_addr(self, key: int) -> int:
+        return self.base + (mix64(key & 0xFFFFFFFFFFFFFFFF) % self.n_buckets) * 8
+
+    def _read_ptr(self, addr: int) -> int:
+        return struct.unpack("<Q", self.fe.read(self.h, addr, 8))[0]
+
+    # ------------------------------------------------------------------- ops
+    def put(self, key: int, value: int) -> None:
+        self.fe.op_begin(self.h, OP_PUT, self.encode_args(key, value))
+        self._put_base(key, value)
+        self.fe.op_commit(self.h)
+
+    def get(self, key: int):
+        baddr = self._bucket_addr(key)
+        cur = self._read_ptr(baddr)
+        while cur:
+            k, v, nxt = NODE.unpack(self.fe.read(self.h, cur, NODE_SIZE))
+            if k == key:
+                return v
+            cur = nxt
+        return None
+
+    def delete(self, key: int) -> bool:
+        self.fe.op_begin(self.h, OP_DEL, self.encode_args(key))
+        ok = self._del_base(key)
+        self.fe.op_commit(self.h)
+        return ok
+
+    # ------------------------------------------------------------ primitives
+    def _put_base(self, key: int, value: int) -> None:
+        baddr = self._bucket_addr(key)
+        head = self._read_ptr(baddr)
+        cur = head
+        while cur:
+            k, _, nxt = NODE.unpack(self.fe.read(self.h, cur, NODE_SIZE))
+            if k == key:
+                self.fe.write(self.h, cur, NODE.pack(key, value, nxt))
+                return
+            cur = nxt
+        addr = self.fe.alloc(NODE_SIZE)
+        self.fe.write(self.h, addr, NODE.pack(key, value, head))
+        self.fe.write(self.h, baddr, struct.pack("<Q", addr))
+
+    def _del_base(self, key: int) -> bool:
+        baddr = self._bucket_addr(key)
+        prev = None
+        cur = self._read_ptr(baddr)
+        while cur:
+            k, v, nxt = NODE.unpack(self.fe.read(self.h, cur, NODE_SIZE))
+            if k == key:
+                if prev is None:
+                    self.fe.write(self.h, baddr, struct.pack("<Q", nxt))
+                else:
+                    pk, pv, _ = NODE.unpack(self.fe.read(self.h, prev, NODE_SIZE))
+                    self.fe.write(self.h, prev, NODE.pack(pk, pv, nxt))
+                self.fe.free(cur, NODE_SIZE)
+                return True
+            prev, cur = cur, nxt
+        return False
+
+    # ---------------------------------------------------------------- replay
+    def _replay_put(self, key: int, value: int) -> None:
+        self._put_base(key, value)
+
+    def _replay_del(self, key: int) -> None:
+        self._del_base(key)

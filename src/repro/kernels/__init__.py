@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships a pure-jnp oracle in ref.py and a jit-able dispatch
+wrapper in ops.py; see ops.py for the backend-selection contract.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

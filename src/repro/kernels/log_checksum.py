@@ -1,0 +1,107 @@
+"""Fletcher-32 log checksum for TPU (Pallas) — the persistence path's
+transaction-integrity primitive (paper §4.2: every remote_tx_write carries a
+checksum; recovery validates the tail transaction).
+
+Hardware adaptation: the simulator's Fletcher-64 needs 64-bit modular
+arithmetic, which the TPU VPU does not have.  The state-store therefore uses
+Fletcher-32 over 16-bit words carried in int32 lanes; per 128-word row the
+weighted partial sums stay below 2^31 and are reduced mod 65535, so the
+whole computation is exact in int32.
+
+  grid = (n_blocks,)  sequential, carry (s1, s2) in SMEM
+
+Per chunk of L words with incoming (s1, s2):
+  s2' = s2 + L*s1 + sum_t (L - t) * w_t      (t 0-indexed)
+  s1' = s1 + sum_t w_t
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MOD = 65535
+ROWS, LANES = 8, 128
+BLOCK = ROWS * LANES  # words per grid step
+
+
+def _kernel(w_ref, out_ref, carry_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[0] = 0
+        carry_ref[1] = 0
+
+    w = w_ref[0]  # [ROWS, LANES] int32, values < 2^16
+    weights = LANES - jax.lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 1)
+
+    def row(rr, carry):
+        s1, s2 = carry
+        wrow = w[rr]
+        rs1 = jnp.sum(wrow)
+        rs2 = jnp.sum(weights[rr] * wrow)
+        s2 = (s2 + LANES * s1 + rs2) % MOD
+        s1 = (s1 + rs1) % MOD
+        return (s1, s2)
+
+    s1, s2 = jax.lax.fori_loop(0, ROWS, row, (carry_ref[0], carry_ref[1]))
+    carry_ref[0] = s1
+    carry_ref[1] = s2
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _final():
+        out_ref[0] = s1
+        out_ref[1] = s2
+
+
+def fletcher32(words: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Checksum of a vector of 16-bit words (given as int32 < 2^16).
+
+    Returns uint32 ``(s2 << 16) | s1``.  Input is zero-padded to a multiple
+    of 1024 words (zero words do not change the Fletcher sums' residues...
+    they do advance positions, so padding is part of the checksum contract:
+    both writer and verifier pad identically).
+    """
+    n = words.shape[0]
+    pad = (-n) % BLOCK
+    w = jnp.pad(words.astype(jnp.int32), (0, pad))
+    nb = w.shape[0] // BLOCK
+    w = w.reshape(nb, ROWS, LANES)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, ROWS, LANES), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(w)
+    s1 = out[0].astype(jnp.uint32)
+    s2 = out[1].astype(jnp.uint32)
+    return (s2 << 16) | s1
+
+
+def fletcher32_padded_np(data: bytes) -> int:
+    """Exact numpy mirror of the kernel contract (pad to 1024 words)."""
+    pad = (-len(data)) % 2
+    if pad:
+        data = data + b"\x00"
+    w = np.frombuffer(data, dtype="<u2").astype(np.int64)
+    wpad = (-len(w)) % BLOCK
+    w = np.concatenate([w, np.zeros(wpad, np.int64)])
+    s1 = np.int64(0)
+    s2 = np.int64(0)
+    for i in range(0, len(w), LANES):
+        row = w[i : i + LANES]
+        s2 = (s2 + LANES * s1 + int(((LANES - np.arange(LANES)) * row).sum())) % MOD
+        s1 = (s1 + int(row.sum())) % MOD
+    return int((s2 << 16) | s1)

@@ -1,0 +1,92 @@
+"""Public kernel entry points with backend dispatch.
+
+Models call these; the implementation is selected by `impl`:
+
+  * "pallas"    — the real TPU kernels (pl.pallas_call, compiled);
+  * "interpret" — the same kernels executed by the Pallas interpreter on CPU
+                  (what the kernel test-suite sweeps);
+  * "xla"       — the blocked pure-jnp references (ref.py).  This is the
+                  default on non-TPU backends so the multi-pod dry-run lowers
+                  plain HLO whose cost_analysis reflects flash-style traffic.
+  * "auto"      — "pallas" on TPU, else "xla".
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .log_checksum import fletcher32 as _fletcher_pallas
+from .mamba_scan import mamba_scan as _mamba_pallas
+from .rglru_scan import rglru_scan as _rglru_pallas
+from .topk_compress import topk_compress as _topk_pallas
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+                    q_offset=0, impl="auto", block_q=128, block_k=128):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.flash_attention_reference(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+            q_offset=q_offset, block_k=max(block_k, 512))
+    return _flash_pallas(
+        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"))
+
+
+def decode_attention(q, k, v, *, length=None, sm_scale=None, impl="auto",
+                     block_k=512):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.decode_attention_reference(q, k, v, sm_scale=sm_scale, length=length)
+    return _decode_pallas(q, k, v, length=length, sm_scale=sm_scale,
+                          block_k=block_k, interpret=(impl == "interpret"))
+
+
+def mamba_scan(x, delta, A, B, C, D, h0=None, *, impl="auto",
+               chunk=128, block_d=128, scan_dtype=None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.mamba_scan_reference(x, delta, A, B, C, D, h0,
+                                        scan_dtype=scan_dtype)
+    return _mamba_pallas(x, delta, A, B, C, D, h0, chunk=chunk,
+                         block_d=block_d, interpret=(impl == "interpret"))
+
+
+def rglru_scan(x, r, i, log_a, h0=None, *, c=8.0, impl="auto",
+               chunk=256, block_d=512, scan_dtype=None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.rglru_reference(x, r, i, log_a, h0, c=c, scan_dtype=scan_dtype)
+    return _rglru_pallas(x, r, i, log_a, h0, c=c, chunk=chunk,
+                         block_d=block_d, interpret=(impl == "interpret"))
+
+
+def fletcher32(words, *, impl="auto"):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.fletcher32_ref(words)
+    return _fletcher_pallas(words, interpret=(impl == "interpret"))
+
+
+def topk_compress(x, k, *, block=1024, impl="auto"):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.topk_compress_reference(x, k, block=block)
+    return _topk_pallas(x, k, block=block, interpret=(impl == "interpret"))
+
+
+def topk_decompress(vals, idx, n, *, block=1024):
+    return ref.topk_decompress_reference(vals, idx, n, block=block)

@@ -1,0 +1,298 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernel tests assert against, and also the
+XLA fallback path used by the models on non-TPU backends (the fallbacks are
+*blocked* formulations, so compiled HLO byte counts reflect flash-style
+memory traffic rather than materialized S x S intermediates).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# =========================================================== attention oracles
+def mha_reference(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Naive O(S^2) attention with GQA, causal and local-window masking.
+
+    `q_offset` is the absolute position of q[0] (decode: offset = cache len).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,
+    block_k: int = 512,
+) -> jax.Array:
+    """Blocked online-softmax attention in pure XLA (lax.scan over KV blocks).
+
+    Numerically identical algorithm to the Pallas kernel; used as the model
+    fallback so compiled byte counts are flash-like.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    pad = (-sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = k.shape[2] // block_k
+    kb = k.reshape(b, hkv, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ib, kblk, vblk = inp
+        kblk = jnp.repeat(kblk, group, axis=1).astype(jnp.float32)
+        vblk = jnp.repeat(vblk, group, axis=1).astype(jnp.float32)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kblk) * scale
+        kpos = ib * block_k + jnp.arange(block_k)[None, :]
+        mask = kpos < sk
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    a0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def decode_attention_reference(
+    q: jax.Array,  # [B, Hq, D] single query
+    k: jax.Array,  # [B, Hkv, S, D]
+    v: jax.Array,
+    *,
+    sm_scale: Optional[float] = None,
+    length: Optional[jax.Array] = None,  # [B] valid KV lengths
+) -> jax.Array:
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    kk = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kk) * scale
+    if length is not None:
+        mask = jnp.arange(s)[None, None, :] < length[:, None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", probs, vv).astype(q.dtype)
+
+
+# ============================================================== linear scans
+def _scan_combine(e1, e2):
+    """Associative combine for h_t = a_t * h_{t-1} + b_t."""
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def linear_scan_reference(
+    a: jax.Array,  # [B, S, ...] decay, in (0,1]
+    b: jax.Array,  # [B, S, ...] input term
+    h0: Optional[jax.Array] = None,  # [B, ...] initial state
+    *,
+    chunk: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked associative scan (the TPU-native formulation): returns
+    (all_states [B,S,...], final_state [B,...])."""
+    B, S = a.shape[0], a.shape[1]
+    rest = a.shape[2:]
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * len(rest), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad)) + ((0, 0),) * len(rest))
+    n = a.shape[1] // chunk
+    ac = a.reshape((B, n, chunk) + rest)
+    bc = b.reshape((B, n, chunk) + rest)
+    # intra-chunk inclusive scan (vectorized over chunks)
+    A_in, B_in = jax.lax.associative_scan(_scan_combine, (ac, bc), axis=2)
+    # inter-chunk carry: sequential scan over n chunk summaries
+    A_last, B_last = A_in[:, :, -1], B_in[:, :, -1]
+
+    def carry_step(h, inp):
+        A_l, B_l = inp
+        h_new = A_l * h + B_l
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((B,) + rest, a.dtype)
+    hT, h_prefix = jax.lax.scan(
+        carry_step, h0, (A_last.swapaxes(0, 1), B_last.swapaxes(0, 1))
+    )
+    h_prefix = h_prefix.swapaxes(0, 1)  # [B, n, ...] carry entering each chunk
+    states = A_in * h_prefix[:, :, None] + B_in
+    states = states.reshape((B, n * chunk) + rest)[:, :S]
+    return states, hT
+
+
+def mamba_scan_reference(
+    x: jax.Array,      # [B, S, Din]
+    delta: jax.Array,  # [B, S, Din]  (post-softplus)
+    A: jax.Array,      # [Din, N] (negative)
+    Bm: jax.Array,     # [B, S, N]
+    Cm: jax.Array,     # [B, S, N]
+    D: jax.Array,      # [Din]
+    h0: Optional[jax.Array] = None,  # [B, Din, N]
+    *,
+    scan_dtype=None,   # bf16 halves the dominant [B,S,Din,N] HBM traffic
+) -> Tuple[jax.Array, jax.Array]:
+    """Mamba-1 selective scan: returns (y [B,S,Din], h_final [B,Din,N])."""
+    a = jnp.exp(delta[..., None] * A[None, None])                  # [B,S,Din,N]
+    b = (delta * x)[..., None] * Bm[:, :, None, :]                 # [B,S,Din,N]
+    if scan_dtype is not None:
+        a = a.astype(scan_dtype)
+        b = b.astype(scan_dtype)
+        if h0 is not None:
+            h0 = h0.astype(scan_dtype)
+    states, hT = linear_scan_reference(a, b, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", states.astype(jnp.float32), Cm) + x * D[None, None]
+    return y.astype(x.dtype), hT.astype(jnp.float32)
+
+
+def rglru_reference(
+    x: jax.Array,   # [B, S, D]
+    r: jax.Array,   # [B, S, D] recurrence gate in (0,1)
+    i: jax.Array,   # [B, S, D] input gate in (0,1)
+    log_a: jax.Array,  # [D] learned log decay (negative)
+    h0: Optional[jax.Array] = None,
+    *,
+    c: float = 8.0,
+    scan_dtype=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """RG-LRU (RecurrentGemma): h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t x_t)."""
+    log_at = c * r * log_a[None, None]          # [B,S,D]
+    a = jnp.exp(log_at)
+    gated = i * x
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12)) * gated
+    dt = scan_dtype or jnp.float32
+    states, hT = linear_scan_reference(a.astype(dt), b.astype(dt), h0)
+    return states.astype(x.dtype), hT.astype(jnp.float32)
+
+
+# ================================================================= checksums
+FLETCHER_MOD = 65535
+
+
+def fletcher32_ref(words: jax.Array) -> jax.Array:
+    """Fletcher-32 over uint16 words (values < 2^16, carried as int32).
+
+    The log-integrity checksum of the persistence path, chosen over the
+    simulator's Fletcher-64 because 16-bit words with 32-bit lanes map onto
+    the TPU VPU (no 64-bit modular arithmetic in hardware).  Same blocked
+    int32 formulation as the Pallas kernel (x64 mode not required): per
+    128-word row the weighted partial sums stay < 2^31 and are folded with a
+    modular scan.  Input is zero-padded to a multiple of 1024 words — the
+    kernel's padding contract.  Returns (s2 << 16) | s1 as uint32.
+    """
+    lanes = 128
+    n = words.shape[0]
+    pad = (-n) % 1024
+    w = jnp.pad(words.astype(jnp.int32), (0, pad)).reshape(-1, lanes)
+    weights = lanes - jnp.arange(lanes, dtype=jnp.int32)
+    rs1 = w.sum(axis=1)                      # [rows] < 128 * 2^16
+    rs2 = (w * weights).sum(axis=1)          # [rows] < 128 * 128 * 2^16
+
+    def fold(carry, row):
+        s1, s2 = carry
+        r1, r2 = row
+        s2 = (s2 + lanes * s1 + r2) % FLETCHER_MOD
+        s1 = (s1 + r1) % FLETCHER_MOD
+        return (s1, s2), None
+
+    (s1, s2), _ = jax.lax.scan(fold, (jnp.int32(0), jnp.int32(0)), (rs1, rs2))
+    return (s2.astype(jnp.uint32) << 16) | s1.astype(jnp.uint32)
+
+
+def fletcher32_np(data: bytes) -> int:
+    """Byte-level reference used by the state store (numpy, exact)."""
+    pad = (-len(data)) % 2
+    if pad:
+        data = data + b"\x00"
+    w = np.frombuffer(data, dtype="<u2").astype(np.int64)
+    s1 = np.cumsum(w) % FLETCHER_MOD
+    s2 = np.cumsum(s1) % FLETCHER_MOD
+    return int((int(s2[-1]) << 16) | int(s1[-1])) if len(w) else 0
+
+
+# ============================================================ delta compression
+def topk_compress_reference(
+    x: jax.Array, k: int, block: int = 1024
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-block magnitude top-k: returns (values [nb,k], indices [nb,k],
+    residual [n]) where residual = x with the selected entries zeroed.
+
+    Used for compressed delta logs / gradient all-reduce with error feedback.
+    """
+    n = x.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad))
+    nb = xp.shape[0] // block
+    xb = xp.reshape(nb, block)
+    _, idx = jax.lax.top_k(jnp.abs(xb), k)
+    vals = jnp.take_along_axis(xb, idx, axis=1)
+    mask = jnp.zeros_like(xb, dtype=bool)
+    mask = jax.vmap(lambda m, i: m.at[i].set(True))(mask, idx)
+    residual = jnp.where(mask, 0.0, xb).reshape(-1)[:n]
+    return vals, idx.astype(jnp.int32), residual
+
+
+def topk_decompress_reference(
+    vals: jax.Array, idx: jax.Array, n: int, block: int = 1024
+) -> jax.Array:
+    nb, k = vals.shape
+    out = jnp.zeros((nb, block), vals.dtype)
+    out = jax.vmap(lambda o, i, v: o.at[i].set(v))(out, idx, vals)
+    return out.reshape(-1)[:n]

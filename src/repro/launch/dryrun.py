@@ -1,0 +1,348 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh) cell
+lowers + compiles on the production meshes, and extract its roofline terms.
+
+Per cell:
+  1. FULL config, scan-over-layers, lower + .compile() on the target mesh —
+     the shardability/compile proof; memory_analysis() recorded from it.
+  2. Two SMALL UNROLLED depths (L1 = one repeating block, L2 = two) are
+     compiled the same way; cost_analysis()/HLO-collective diffs give the
+     EXACT per-block FLOPs/bytes/collective-bytes (layers in a group are
+     identical), so  cell cost = base + block * n_blocks  (launch.analysis).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all --out reports/dryrun.json
+  python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_config, shape_applicable
+from ..models import DecoderLM, abstract_params, make_shardings, param_count
+from ..models.config import ModelConfig
+from ..models.params import ParamSpec, logical_to_spec
+from ..training.optimizer import OptConfig
+from ..training.train_step import TrainConfig, make_train_step
+from .analysis import CellCost, combine_linear, cost_from_compiled, diff_cost
+from .mesh import make_production_mesh, rules_for
+
+BIG_ARCHS = ("kimi-k2-1t-a32b", "grok-1-314b", "llava-next-34b", "stablelm-12b")
+
+
+# --------------------------------------------------------------------- config
+def runtime_config(arch: str, kind: str, *, scan: bool, overrides: Optional[dict] = None) -> ModelConfig:
+    kw: Dict[str, Any] = dict(remat="dots" if kind == "train" else "none",
+                              attn_impl="xla", scan_layers=scan,
+                              fsdp=(kind == "train" or arch in BIG_ARCHS))
+    kw.update(overrides or {})
+    return get_config(arch, **kw)
+
+
+def opt_config(arch: str) -> OptConfig:
+    if arch in ("kimi-k2-1t-a32b", "grok-1-314b"):
+        # AdamW state alone would blow HBM at this scale (see EXPERIMENTS.md)
+        return OptConfig(kind="adafactor", momentum_dtype="bfloat16")
+    return OptConfig(kind="adamw")
+
+
+def _batch_specs(cfg: ModelConfig, batch: int, seq: int, mesh: Mesh, rules) -> Tuple[dict, dict]:
+    bspec = logical_to_spec(("act_batch",), rules)
+    bp = bspec[0] if bspec else None
+    axes = (bp,) if isinstance(bp, str) else tuple(bp or ())
+    size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    part = bp if (size and batch % max(size, 1) == 0) else None
+    if cfg.embed_inputs:
+        abs_ = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        sh = {"tokens": NamedSharding(mesh, P(part, None)),
+              "labels": NamedSharding(mesh, P(part, None))}
+    else:
+        abs_ = {"embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        sh = {"embeds": NamedSharding(mesh, P(part, None, None)),
+              "labels": NamedSharding(mesh, P(part, None))}
+    return abs_, sh
+
+
+def _opt_specs(pspecs):
+    """ParamSpec tree for AdamW/Adafactor state mirroring the param tree."""
+
+    def one(s: ParamSpec):
+        return {
+            "m": ParamSpec(s.shape, s.logical_axes, jnp.float32),
+            "v": ParamSpec(s.shape, s.logical_axes, jnp.float32),
+        }
+
+    return jax.tree.map(one, pspecs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _opt_specs_adafactor(pspecs, momentum_dtype=jnp.bfloat16):
+    def one(s: ParamSpec):
+        st = {"m": ParamSpec(s.shape, s.logical_axes, momentum_dtype)}
+        if len(s.shape) >= 2:
+            st["vr"] = ParamSpec(s.shape[:-1], s.logical_axes[:-1], jnp.float32)
+            st["vc"] = ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                 s.logical_axes[:-2] + s.logical_axes[-1:], jnp.float32)
+        else:
+            st["v"] = ParamSpec(s.shape, s.logical_axes, jnp.float32)
+        return st
+
+    return jax.tree.map(one, pspecs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _cache_shardings(cache_abs, mesh: Mesh, rules, batch: int):
+    """Assign shardings to the decode cache by leaf-name convention."""
+    batch_part = logical_to_spec(("act_batch",), rules)[0]
+    len_part = rules.get("act_cache_len")
+    kv_part = rules.get("act_kv_heads")
+    model_ok = lambda dim: dim % mesh.shape.get("model", 1) == 0
+
+    def path_leaf(path, leaf):
+        name = None
+        for p in path:
+            if hasattr(p, "key"):
+                name = str(p.key)
+        nd = leaf.ndim
+        parts = [None] * nd
+        # locate the batch dim (== batch)
+        bdim = next((i for i, d in enumerate(leaf.shape) if d == batch), None)
+        axes = (batch_part,) if isinstance(batch_part, str) else tuple(batch_part or ())
+        bsz = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        if bdim is not None and batch % max(bsz, 1) == 0 and axes:
+            parts[bdim] = batch_part
+        if name in ("k", "v") and nd >= 4:
+            # (..., B, Hkv, S, hd)
+            if kv_part and model_ok(leaf.shape[nd - 3]):
+                parts[nd - 3] = kv_part
+            elif len_part and model_ok(leaf.shape[nd - 2]):
+                parts[nd - 2] = len_part
+        elif name == "h" and nd >= 2:
+            # mamba [.., B, di, N] / rglru [.., B, D]
+            dim = nd - 2 if nd >= 3 and leaf.shape[-1] <= 64 else nd - 1
+            if model_ok(leaf.shape[dim]) and "model" not in str(parts):
+                parts[dim] = "model"
+        elif name == "conv":
+            if model_ok(leaf.shape[-1]):
+                parts[-1] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(path_leaf, cache_abs)
+
+
+# ----------------------------------------------------------------- lowerings
+def lower_cell(arch: str, shape_id: str, mesh: Mesh, *, scan: bool,
+               depth_override: Optional[int] = None,
+               overrides: Optional[dict] = None):
+    """Returns (compiled, seconds)."""
+    seq, gbatch, kind = SHAPES[shape_id]
+    cfg = runtime_config(arch, kind, scan=scan, overrides=overrides)
+    if depth_override is not None:
+        cfg = dataclasses.replace(
+            cfg, n_layers=depth_override,
+            first_k_dense=min(cfg.first_k_dense, depth_override))
+    rules = rules_for(cfg, mesh, kind=kind)
+    model = DecoderLM(cfg)
+    pspecs = model.param_specs()
+    params_abs = abstract_params(pspecs)
+    params_sh = make_shardings(pspecs, mesh, rules)
+
+    t0 = time.time()
+    if kind == "train":
+        ocfg = opt_config(arch)
+        tcfg = TrainConfig(opt=ocfg, accum_steps=1)
+        ospecs = (_opt_specs_adafactor(pspecs) if ocfg.kind == "adafactor"
+                  else _opt_specs(pspecs))
+        # ZeRO: optimizer state always gets the fsdp rules
+        orules = rules_for(dataclasses.replace(cfg, fsdp=True), mesh, kind=kind)
+        opt_sh = make_shardings(ospecs, mesh, orules)
+        opt_abs = abstract_params(ospecs)
+        state_abs = {"params": params_abs, "opt": opt_abs,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_sh = {"params": params_sh, "opt": opt_sh,
+                    "step": NamedSharding(mesh, P())}
+        batch_abs, batch_sh = _batch_specs(cfg, gbatch, seq, mesh, rules)
+        step_fn = make_train_step(model, tcfg, rules, mesh)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                              donate_argnums=(0,)).lower(state_abs, batch_abs)
+            compiled = lowered.compile()
+    elif kind == "prefill":
+        batch_abs, batch_sh = _batch_specs(cfg, gbatch, seq, mesh, rules)
+        batch_abs.pop("labels")
+        batch_sh.pop("labels")
+        fn = lambda p, b: model.prefill(p, b, rules, mesh)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=(params_sh, batch_sh)).lower(
+                params_abs, batch_abs)
+            compiled = lowered.compile()
+    else:  # decode
+        cfg_d = dataclasses.replace(cfg, max_cache_len=seq)
+        model = DecoderLM(cfg_d)
+        pspecs = model.param_specs()
+        params_abs = abstract_params(pspecs)
+        params_sh = make_shardings(pspecs, mesh, rules)
+        cache_abs = jax.eval_shape(lambda: model.init_cache(gbatch, seq))
+        cache_sh = _cache_shardings(cache_abs, mesh, rules, gbatch)
+        if cfg.embed_inputs:
+            tok_abs = jax.ShapeDtypeStruct((gbatch,), jnp.int32)
+            tok_sh = NamedSharding(mesh, P(None))
+        else:
+            tok_abs = jax.ShapeDtypeStruct((gbatch, 1, cfg.d_model), jnp.bfloat16)
+            tok_sh = NamedSharding(mesh, P(None, None, None))
+        fn = lambda p, c, t: model.decode_step(p, c, t, rules, mesh)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=(params_sh, cache_sh, tok_sh),
+                              donate_argnums=(1,)).lower(params_abs, cache_abs, tok_abs)
+            compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def _block_depths(cfg: ModelConfig) -> Tuple[int, int, float, float]:
+    """(L1, L2, n_blocks_for_full, tail_layers) for the diff method."""
+    plen = len(cfg.block_pattern)
+    fkd = cfg.first_k_dense
+    L1 = fkd + plen
+    L2 = fkd + 2 * plen
+    rest = cfg.n_layers - fkd
+    n_blocks = rest / plen  # fractional tail approximated per-layer
+    return L1, L2, n_blocks, rest % plen
+
+
+def analyze_cell(arch: str, shape_id: str, mesh: Mesh,
+                 overrides: Optional[dict] = None) -> Dict[str, Any]:
+    seq, gbatch, kind = SHAPES[shape_id]
+    cfg = runtime_config(arch, kind, scan=True, overrides=overrides)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_id,
+                           "mesh": "x".join(map(str, mesh.devices.shape)),
+                           "kind": kind, "seq": seq, "global_batch": gbatch,
+                           "overrides": overrides or {}}
+    # 1. full-config compile (the shardability proof + memory analysis)
+    compiled, secs = lower_cell(arch, shape_id, mesh, scan=True, overrides=overrides)
+    full = cost_from_compiled(compiled, secs)
+    rec["compile_seconds"] = secs
+    rec["memory_analysis"] = {
+        "argument_bytes_per_device": compiled.memory_analysis().argument_size_in_bytes,
+        "output_bytes_per_device": compiled.memory_analysis().output_size_in_bytes,
+        "temp_bytes_per_device": compiled.memory_analysis().temp_size_in_bytes,
+        "alias_bytes_per_device": compiled.memory_analysis().alias_size_in_bytes,
+    }
+    del compiled
+
+    # 2. exact per-block costs from two small unrolled depths
+    L1, L2, n_blocks, _tail = _block_depths(cfg)
+    c1, s1 = lower_cell(arch, shape_id, mesh, scan=False, depth_override=L1,
+                        overrides=overrides)
+    cost1 = cost_from_compiled(c1, s1)
+    del c1
+    c2, s2 = lower_cell(arch, shape_id, mesh, scan=False, depth_override=L2,
+                        overrides=overrides)
+    cost2 = cost_from_compiled(c2, s2)
+    del c2
+    block = diff_cost(cost1, cost2)
+    base = diff_cost(block, cost1)  # base = cost1 - block
+    total = combine_linear(base, block, n_blocks)
+    rec["per_device"] = {
+        "flops": total.flops,
+        "hbm_bytes": total.hbm_bytes,
+        "wire_bytes": total.wire_bytes,
+        "collectives": total.collectives,
+    }
+    rec["roofline"] = total.roofline()
+    # model flops: 6*N*D (dense) / 6*N_active*D (MoE), global then per device
+    n_devices = mesh.devices.size
+    N = param_count(DecoderLM(cfg).param_specs())
+    n_active = N
+    if cfg.moe is not None:
+        me = cfg.moe
+        full_expert = me.num_experts * 3 * cfg.d_model * me.d_expert
+        act_expert = (me.top_k + me.num_shared) * 3 * cfg.d_model * me.d_expert
+        moe_layers = sum(1 for k_ in cfg.layer_kinds() if k_[1] == "moe")
+        n_active = N - moe_layers * (full_expert - act_expert)
+    tokens = gbatch * seq if kind != "decode" else gbatch
+    mult = {"train": 6, "prefill": 2, "decode": 2}[kind]
+    model_flops = mult * n_active * tokens / n_devices
+    rec["model_flops_per_device"] = model_flops
+    rec["useful_flops_fraction"] = model_flops / total.flops if total.flops else 0.0
+    rec["params_billion"] = N / 1e9
+    return rec
+
+
+# ---------------------------------------------------------------------- main
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--compile-only", action="store_true",
+                    help="full-config compile proof only (skip cost diffs)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                if shape_applicable(a, s):
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        t0 = time.time()
+        try:
+            if args.compile_only:
+                compiled, secs = lower_cell(arch, shape, mesh, scan=True)
+                ma = compiled.memory_analysis()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "x".join(map(str, mesh.devices.shape)),
+                       "status": "ok", "compile_seconds": secs,
+                       "temp_bytes_per_device": ma.temp_size_in_bytes,
+                       "argument_bytes_per_device": ma.argument_size_in_bytes}
+                del compiled
+            else:
+                rec = analyze_cell(arch, shape, mesh)
+                rec["status"] = "ok"
+        except Exception as e:  # noqa: BLE001 — report and continue
+            rec = {"arch": arch, "shape": shape, "status": "fail",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        rec["wall_seconds"] = time.time() - t0
+        results.append(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "ok" and "roofline" in rec:
+            r = rec["roofline"]
+            extra = (f" bottleneck={r['bottleneck']}"
+                     f" t_c={r['compute_s']:.4f}s t_m={r['memory_s']:.4f}s"
+                     f" t_n={r['collective_s']:.4f}s"
+                     f" useful={rec['useful_flops_fraction']:.2f}")
+        print(f"[dryrun] {arch} x {shape} [{rec.get('mesh','')}] -> {status}"
+              f" ({rec['wall_seconds']:.0f}s){extra}", flush=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=float)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    print(f"[dryrun] {ok}/{len(results)} cells ok")
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

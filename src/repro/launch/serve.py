@@ -1,0 +1,63 @@
+"""Serving driver CLI: load a committed version from the asymmetric store
+(or fresh random weights) and run batched generation.
+
+  python -m repro.launch.serve --arch qwen1.5-0.5b --store /tmp/blade \
+      --batch 4 --prompt-len 16 --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS, get_config, get_smoke_config
+from ..models import DecoderLM
+from ..serving import ServeConfig, ServeEngine
+from ..statestore import AsymStore, CheckpointManager, FileBlade
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="qwen1.5-0.5b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--store", default=None)
+    ap.add_argument("--version", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=3, help="number of batches")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    model = DecoderLM(cfg)
+    scfg = ServeConfig(batch_slots=args.batch, max_new_tokens=args.max_new)
+    if args.store:
+        ckpt = CheckpointManager(AsymStore(FileBlade(args.store)))
+        eng = ServeEngine.load_from_store(model, ckpt, scfg, version=args.version)
+        print(f"[serve] pinned store version {eng.version}")
+    else:
+        params = model.init(jax.random.PRNGKey(args.seed))
+        eng = ServeEngine(model, params, scfg)
+
+    rng = np.random.default_rng(args.seed)
+    total_tokens = 0
+    t0 = time.monotonic()
+    for r in range(args.requests):
+        prompts = rng.integers(0, cfg.vocab_size,
+                               (args.batch, args.prompt_len)).astype(np.int32)
+        toks, stats = eng.generate(prompts)
+        total_tokens += toks.shape[0] * stats["decode_steps"]
+        print(f"[serve] batch {r}: generated {stats['decode_steps']} steps/seq; "
+              f"first seq tail: {toks[0, -8:].tolist()}")
+    dt = time.monotonic() - t0
+    print(f"[serve] {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens/dt:.1f} tok/s on this host)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,329 @@
+"""Decoder building blocks: RMSNorm, RoPE, GQA attention (global/local),
+SwiGLU FFN, RG-LRU recurrent block, Mamba-1 block.
+
+Every mixer exposes  `<kind>_specs(cfg)` -> {name: ParamSpec}  and
+`<kind>_apply(params, x, cfg, rules, mode, cache)` -> (y, new_cache) where
+mode is "train" | "prefill" | "decode".  Caches are dicts of arrays; the
+global decode position lives at the model level.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .config import ModelConfig
+from .params import ParamSpec, constrain
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * scale) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def norm_spec(cfg: ModelConfig) -> ParamSpec:
+    return ParamSpec((cfg.d_model,), ("embed",), jnp.float32, init="zeros")
+
+
+# ------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, H, S, D]; positions: [S] or [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]      # [S, half]
+        ang = ang[None, None]                                              # [1,1,S,half]
+    else:
+        ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+        ang = ang[:, None]                                                 # [B,1,S,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    # pad_heads adds zero-contribution heads so n_heads divides the TP axis
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads_eff, cfg.n_kv_heads, cfg.hd
+    dt = cfg.jnp_dtype
+    specs = {
+        "norm": norm_spec(cfg),
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), dt, "scaled"),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt, "scaled"),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt, "scaled"),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"), dt, "scaled"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), dt, "zeros")
+        specs["bk"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), dt, "zeros")
+        specs["bv"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), dt, "zeros")
+    return specs
+
+
+def attn_apply(
+    p: Params, x: jax.Array, cfg: ModelConfig, rules, mode: str,
+    cache: Optional[Dict] = None, pos: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, d = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bhsk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", h, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    # TP over heads when divisible, else sequence-parallel attention
+    # (rules map act_heads/act_seq per arch x mesh; see launch.mesh.rules_for)
+    q = constrain(q, rules, "act_batch", "act_heads", "act_seq")
+    k = constrain(k, rules, "act_batch", "act_kv_heads", "act_seq")
+    v = constrain(v, rules, "act_batch", "act_kv_heads", "act_seq")
+    if mode == "decode":
+        assert cache is not None and pos is not None
+        positions = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos[:, None]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        L = cache["k"].shape[2]
+        if window is not None and L == window:
+            # rolling window cache: slot = pos % window
+            slot = (pos % window).astype(jnp.int32)
+        else:
+            slot = pos.astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, slot, 0))
+        ck = constrain(ck, rules, "act_batch", "act_kv_heads", "act_cache_len")
+        cv = constrain(cv, rules, "act_batch", "act_kv_heads", "act_cache_len")
+        length = jnp.minimum(pos + 1, L).astype(jnp.int32)
+        out = ops.decode_attention(
+            q[:, :, 0, :], ck, cv,
+            length=jnp.broadcast_to(length, (B,)),
+            impl=cfg.attn_impl, block_k=min(cfg.attn_block_k, L),
+        )[:, :, None, :]
+        new_cache = {"k": ck, "v": cv}
+    else:
+        positions = jnp.arange(S)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        out = ops.flash_attention(
+            q, k, v, causal=True, window=window, impl=cfg.attn_impl,
+            block_k=cfg.attn_block_k,
+        )
+        new_cache = None
+        if mode == "prefill":
+            L = cache["k"].shape[2] if cache is not None else max(cfg.max_cache_len, S)
+            if window is not None:
+                W = min(window, min(cfg.max_cache_len, window))
+                kk = k[:, :, -W:, :]
+                vv = v[:, :, -W:, :]
+                pad = W - kk.shape[2]
+                if pad > 0:
+                    kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                    vv = jnp.pad(vv, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                elif S >= W:
+                    # ring layout: key at absolute pos p lives in slot p % W
+                    kk = jnp.roll(kk, S % W, axis=2)
+                    vv = jnp.roll(vv, S % W, axis=2)
+                new_cache = {"k": kk, "v": vv}
+            else:
+                pad = L - S
+                kk = k[:, :, :L, :]
+                vv = v[:, :, :L, :]
+                if pad > 0:
+                    kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                    vv = jnp.pad(vv, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                new_cache = {"k": kk, "v": vv}
+    y = jnp.einsum("bhsk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    y = constrain(y, rules, "act_batch")
+    return x + y, new_cache
+
+
+def attn_cache_shape(cfg: ModelConfig, batch: int, max_len: int, window: Optional[int]):
+    L = min(window, max_len) if window is not None else max_len
+    shape = (batch, cfg.n_kv_heads, L, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(shape, cfg.jnp_dtype),
+            "v": jax.ShapeDtypeStruct(shape, cfg.jnp_dtype)}
+
+
+# ------------------------------------------------------------------- FFN
+def ffn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.jnp_dtype
+    return {
+        "norm": norm_spec(cfg),
+        "w_gate": ParamSpec((d, f), ("embed", "mlp"), dt, "scaled"),
+        "w_up": ParamSpec((d, f), ("embed", "mlp"), dt, "scaled"),
+        "w_down": ParamSpec((f, d), ("mlp", "embed"), dt, "scaled"),
+    }
+
+
+def ffn_apply(p: Params, x: jax.Array, cfg: ModelConfig, rules) -> jax.Array:
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    g = jnp.einsum("bsd,df->bsf", h, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", h, p["w_up"])
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"])
+    return x + constrain(y, rules, "act_batch")
+
+
+# ---------------------------------------------------------------- RG-LRU
+def rglru_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    dr = d                      # lru width = d_model
+    nb = cfg.n_heads            # block-diagonal gate heads
+    bs = dr // nb
+    dc = 4
+    dt = cfg.jnp_dtype
+    return {
+        "norm": norm_spec(cfg),
+        "w_x": ParamSpec((d, dr), ("embed", "mlp"), dt, "scaled"),
+        "w_gate": ParamSpec((d, dr), ("embed", "mlp"), dt, "scaled"),
+        "conv_w": ParamSpec((dc, dr), ("conv", "mlp"), dt, "scaled"),
+        "w_r": ParamSpec((nb, bs, bs), ("heads", None, None), dt, "scaled"),
+        "w_i": ParamSpec((nb, bs, bs), ("heads", None, None), dt, "scaled"),
+        "log_a": ParamSpec((dr,), ("mlp",), jnp.float32, "zeros"),
+        "w_out": ParamSpec((dr, d), ("mlp", "embed"), dt, "scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array]):
+    """Depthwise causal conv (kernel K) via shifts.  x: [B,S,D]; w: [K,D];
+    state: [B,K-1,D] previous inputs (decode)."""
+    K = w.shape[0]
+    if state is not None:
+        full = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        full = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = sum(full[:, i : i + S, :] * w[i][None, None, :] for i in range(K))
+    new_state = full[:, -(K - 1) :, :] if K > 1 else None
+    return y, new_state
+
+
+def _neg_log_a(p_log_a: jax.Array) -> jax.Array:
+    # learned parameter is unconstrained; effective log_a = -softplus(param)
+    return -jax.nn.softplus(p_log_a + 5.0) * 0.1
+
+
+def rglru_apply(
+    p: Params, x: jax.Array, cfg: ModelConfig, rules, mode: str,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, d = x.shape
+    nb = p["w_r"].shape[0]
+    dr = p["w_x"].shape[1]
+    bs = dr // nb
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xb = jnp.einsum("bsd,de->bse", h, p["w_x"])
+    gb = jnp.einsum("bsd,de->bse", h, p["w_gate"])
+    conv_state = cache.get("conv") if cache else None
+    xc, new_conv = _causal_conv(xb, p["conv_w"], conv_state if mode == "decode" else None)
+    xh = xc.reshape(B, S, nb, bs)
+    r = jax.nn.sigmoid(jnp.einsum("bshe,hef->bshf", xh, p["w_r"]).reshape(B, S, dr))
+    gi = jax.nn.sigmoid(jnp.einsum("bshe,hef->bshf", xh, p["w_i"]).reshape(B, S, dr))
+    log_a = _neg_log_a(p["log_a"])
+    h0 = cache.get("h") if (cache and mode == "decode") else None
+    if mode == "decode":
+        # closed-form single step (no scan)
+        log_at = 8.0 * r[:, 0] * log_a[None]
+        a = jnp.exp(log_at)
+        b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12)) * (gi[:, 0] * xc[:, 0])
+        hT = a * h0 + b
+        states = hT[:, None, :]
+    else:
+        states, hT = ops.rglru_scan(
+            xc, r, gi, log_a, None, impl=cfg.attn_impl,
+            scan_dtype=jnp.bfloat16 if cfg.scan_bf16 else None)
+    y = jax.nn.gelu(gb) * states.astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        if mode == "prefill":
+            new_conv = xb[:, -3:, :] if S >= 3 else jnp.pad(xb, ((0, 0), (3 - S, 0), (0, 0)))
+        new_cache = {"h": hT.astype(jnp.float32), "conv": new_conv.astype(x.dtype)}
+    return x + constrain(y, rules, "act_batch"), new_cache
+
+
+def rglru_cache_shape(cfg: ModelConfig, batch: int):
+    dr = cfg.d_model
+    return {"h": jax.ShapeDtypeStruct((batch, dr), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, 3, dr), cfg.jnp_dtype)}
+
+
+# ----------------------------------------------------------------- Mamba
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    assert cfg.ssm is not None
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    N = cfg.ssm.d_state
+    dc = cfg.ssm.d_conv
+    dtr = cfg.ssm.dt_rank or -(-d // 16)
+    dt = cfg.jnp_dtype
+    return {
+        "norm": norm_spec(cfg),
+        "w_in": ParamSpec((d, 2 * di), ("embed", "mlp"), dt, "scaled"),
+        "conv_w": ParamSpec((dc, di), ("conv", "mlp"), dt, "scaled"),
+        "conv_b": ParamSpec((di,), ("mlp",), dt, "zeros"),
+        "w_xproj": ParamSpec((di, dtr + 2 * N), ("mlp", None), dt, "scaled"),
+        "w_dt": ParamSpec((dtr, di), (None, "mlp"), dt, "scaled"),
+        "b_dt": ParamSpec((di,), ("mlp",), jnp.float32, "ones"),
+        "A_log": ParamSpec((di, N), ("mlp", "state"), jnp.float32, "zeros"),
+        "D": ParamSpec((di,), ("mlp",), jnp.float32, "ones"),
+        "w_out": ParamSpec((di, d), ("mlp", "embed"), dt, "scaled"),
+    }
+
+
+def mamba_apply(
+    p: Params, x: jax.Array, cfg: ModelConfig, rules, mode: str,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, d = x.shape
+    N = cfg.ssm.d_state
+    di = p["w_in"].shape[1] // 2
+    dtr = p["w_dt"].shape[0]
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, p["w_in"])
+    xs, z = xz[..., :di], xz[..., di:]
+    conv_state = cache.get("conv") if (cache and mode == "decode") else None
+    xc, new_conv = _causal_conv(xs, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc + p["conv_b"][None, None, :])
+    proj = jnp.einsum("bse,ef->bsf", xc, p["w_xproj"])
+    dt_in, Bm, Cm = proj[..., :dtr], proj[..., dtr : dtr + N], proj[..., dtr + N :]
+    delta = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_in, p["w_dt"]).astype(jnp.float32)
+                            + p["b_dt"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    h0 = cache.get("h") if (cache and mode == "decode") else None
+    if mode == "decode":
+        a = jnp.exp(delta[:, 0, :, None] * A[None])                     # [B,di,N]
+        b = (delta[:, 0] * xc[:, 0].astype(jnp.float32))[:, :, None] * Bm[:, 0, None, :].astype(jnp.float32)
+        hT = a * h0 + b
+        y = jnp.einsum("bdn,bn->bd", hT, Cm[:, 0].astype(jnp.float32)) + xc[:, 0].astype(jnp.float32) * p["D"][None]
+        y = y[:, None, :]
+    else:
+        y, hT = ops.mamba_scan(
+            xc, delta, A, Bm, Cm, p["D"], None, impl=cfg.attn_impl,
+            scan_dtype=jnp.bfloat16 if cfg.scan_bf16 else None)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        if mode == "prefill":
+            K = p["conv_w"].shape[0]
+            new_conv = xs[:, -(K - 1) :, :] if S >= K - 1 else jnp.pad(xs, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        new_cache = {"h": hT.astype(jnp.float32), "conv": new_conv.astype(x.dtype)}
+    return x + constrain(y, rules, "act_batch"), new_cache
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int):
+    di = cfg.ssm.expand * cfg.d_model
+    K = cfg.ssm.d_conv
+    return {"h": jax.ShapeDtypeStruct((batch, di, cfg.ssm.d_state), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, K - 1, di), cfg.jnp_dtype)}

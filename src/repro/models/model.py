@@ -1,0 +1,295 @@
+"""DecoderLM: one composable decoder covering all ten assigned architectures.
+
+Layers are grouped into scan groups (identical repeating (mixer, ffn)
+patterns -> stacked params + jax.lax.scan), which keeps compile time flat in
+depth and makes remat policy a per-group wrapper.  Three entry points:
+
+  loss(params, batch)                 - training forward + xent loss
+  prefill(params, batch, max_len)     - full-sequence forward, returns cache
+  decode_step(params, cache, tokens)  - one token with KV/recurrent cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from . import layers, moe as moe_mod
+from .config import ModelConfig
+from .params import ParamSpec, init_params, abstract_params
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    pattern: Tuple[Tuple[str, str], ...]
+    repeats: int
+
+
+def _groups(cfg: ModelConfig) -> List[Group]:
+    groups: List[Group] = []
+    if cfg.first_k_dense:
+        groups.append(Group((("attn", "dense"),), cfg.first_k_dense))
+    rest = cfg.n_layers - cfg.first_k_dense
+    plen = len(cfg.block_pattern)
+    full, tail = divmod(rest, plen)
+    if full:
+        groups.append(Group(cfg.block_pattern, full))
+    if tail:
+        groups.append(Group(cfg.block_pattern[:tail], 1))
+    return groups
+
+
+def _mixer_specs(cfg: ModelConfig, mixer: str):
+    if mixer in ("attn", "local_attn"):
+        return layers.attn_specs(cfg)
+    if mixer == "rglru":
+        return layers.rglru_specs(cfg)
+    if mixer == "mamba":
+        return layers.mamba_specs(cfg)
+    raise ValueError(mixer)
+
+
+def _ffn_specs(cfg: ModelConfig, ffn: str):
+    if ffn == "dense":
+        return layers.ffn_specs(cfg)
+    if ffn == "moe":
+        return moe_mod.moe_specs(cfg)
+    if ffn == "none":
+        return None
+    raise ValueError(ffn)
+
+
+def _stack_specs(specs, repeats: int):
+    if repeats == 1:
+        return specs
+    return jax.tree.map(
+        lambda s: ParamSpec((repeats,) + s.shape, ("layers",) + s.logical_axes,
+                            s.dtype, s.init, s.init_scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = _groups(cfg)
+
+    # ------------------------------------------------------------- params
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = cfg.jnp_dtype
+        specs: Dict[str, Any] = {}
+        if cfg.embed_inputs:
+            specs["embed"] = ParamSpec((cfg.vocab_size, cfg.d_model),
+                                       ("vocab", "embed"), dt, "normal", 0.02)
+        blocks = []
+        for g in self.groups:
+            gspecs = {}
+            for i, (mixer, ffn) in enumerate(g.pattern):
+                lspec: Dict[str, Any] = {"mixer": _mixer_specs(cfg, mixer)}
+                fs = _ffn_specs(cfg, ffn)
+                if fs is not None:
+                    lspec["ffn"] = fs
+                gspecs[f"l{i}"] = lspec
+            blocks.append(_stack_specs(gspecs, g.repeats))
+        specs["blocks"] = blocks
+        specs["final_norm"] = layers.norm_spec(cfg)
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                         ("embed", "vocab"), dt, "scaled")
+        return specs
+
+    def init(self, rng: jax.Array) -> Params:
+        return init_params(self.param_specs(), rng)
+
+    def abstract(self) -> Params:
+        return abstract_params(self.param_specs())
+
+    # ------------------------------------------------------------ forward
+    def _apply_layer(self, kind, p, x, rules, mesh, mode, cache, pos):
+        mixer, ffn = kind
+        cfg = self.cfg
+        mcache = cache.get("mixer") if cache else None
+        if mixer in ("attn", "local_attn"):
+            window = cfg.window if mixer == "local_attn" else None
+            x, nc = layers.attn_apply(p["mixer"], x, cfg, rules, mode,
+                                      cache=mcache, pos=pos, window=window)
+        elif mixer == "rglru":
+            x, nc = layers.rglru_apply(p["mixer"], x, cfg, rules, mode, cache=mcache)
+        elif mixer == "mamba":
+            x, nc = layers.mamba_apply(p["mixer"], x, cfg, rules, mode, cache=mcache)
+        else:
+            raise ValueError(mixer)
+        if ffn == "dense":
+            x = layers.ffn_apply(p["ffn"], x, cfg, rules)
+        elif ffn == "moe":
+            x = moe_mod.moe_apply(p["ffn"], x, cfg, rules, mesh=mesh)
+        new_cache = {"mixer": nc} if nc is not None else None
+        return x, new_cache
+
+    def _remat(self, fn):
+        if self.cfg.remat == "none":
+            return fn
+        if self.cfg.remat == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            return jax.checkpoint(fn, policy=policy)
+        if self.cfg.remat == "save_dots":
+            # saves every matmul output (incl. psum'd projections): backward
+            # never replays forward collectives, at higher live-memory cost
+            policy = jax.checkpoint_policies.checkpoint_dots
+            return jax.checkpoint(fn, policy=policy)
+        return jax.checkpoint(fn)
+
+    def _run_blocks(self, params, x, rules, mesh, mode, caches, pos):
+        """caches: list per group (None in train mode). Returns (x, new_caches)."""
+        cfg = self.cfg
+        new_caches: List[Any] = []
+        for gi, g in enumerate(self.groups):
+            gp = params["blocks"][gi]
+            gcache = caches[gi] if (caches is not None and mode == "decode") else None
+
+            def superblock(x, gp_slice, gcache_slice):
+                ncs = {}
+                for i, kind in enumerate(g.pattern):
+                    c = gcache_slice.get(f"l{i}") if gcache_slice else None
+                    x, nc = self._apply_layer(kind, gp_slice[f"l{i}"], x, rules,
+                                              mesh, mode, c, pos)
+                    if nc is not None:
+                        ncs[f"l{i}"] = nc
+                return x, (ncs or None)
+
+            superblock = self._remat(superblock) if mode == "train" else superblock
+
+            if g.repeats == 1:
+                x, nc = superblock(x, gp, gcache)
+                new_caches.append(nc)
+            elif cfg.scan_layers:
+                if mode == "train":
+                    def body(carry, gp_slice):
+                        y, _ = superblock(carry, gp_slice, None)
+                        return y, None
+                    x, _ = jax.lax.scan(body, x, gp)
+                    new_caches.append(None)
+                elif mode == "prefill":
+                    def body(carry, gp_slice):
+                        y, nc = superblock(carry, gp_slice, None)
+                        return y, nc
+                    x, ncs = jax.lax.scan(body, x, gp)
+                    new_caches.append(ncs)
+                else:  # decode
+                    def body(carry, xs):
+                        gp_slice, c = xs
+                        y, nc = superblock(carry, gp_slice, c)
+                        return y, nc
+                    x, ncs = jax.lax.scan(body, x, (gp, gcache))
+                    new_caches.append(ncs)
+            else:
+                ncs_list = []
+                for r in range(g.repeats):
+                    gp_r = jax.tree.map(lambda a: a[r], gp)
+                    c_r = jax.tree.map(lambda a: a[r], gcache) if gcache is not None else None
+                    x, nc = superblock(x, gp_r, c_r)
+                    ncs_list.append(nc)
+                if mode == "train" or ncs_list[0] is None:
+                    new_caches.append(None)
+                else:
+                    new_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ncs_list))
+        return x, new_caches
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            return jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.jnp_dtype)
+        return batch["embeds"].astype(cfg.jnp_dtype)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+    # ------------------------------------------------------------- losses
+    def loss(self, params, batch, rules=None, mesh: Optional[Mesh] = None):
+        rules = rules or {}
+        x = self._embed(params, batch)
+        x, _ = self._run_blocks(params, x, rules, mesh, "train", None, None)
+        logits = self._head(params, x).astype(jnp.float32)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - ll)
+
+    def forward(self, params, batch, rules=None, mesh=None):
+        rules = rules or {}
+        x = self._embed(params, batch)
+        x, _ = self._run_blocks(params, x, rules, mesh, "train", None, None)
+        return self._head(params, x)
+
+    # ------------------------------------------------------------ serving
+    def prefill(self, params, batch, rules=None, mesh=None):
+        """Cache is sized by cfg.max_cache_len (static)."""
+        cfg = self.cfg
+        rules = rules or {}
+        x = self._embed(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        x, new_caches = self._run_blocks(params, x, rules, mesh, "prefill", None, None)
+        logits = self._head(params, x[:, -1:, :])
+        return logits[:, 0], {"pos": jnp.array(S, jnp.int32), "groups": new_caches,
+                              "max_len": cfg.max_cache_len}
+
+    def init_cache(self, batch: int, max_len: int):
+        """Zero-initialized decode cache (for decode-only dry-runs: a cache
+        'already containing' max_len tokens)."""
+        cfg = self.cfg
+        groups = []
+        for g in self.groups:
+            gc: Dict[str, Any] = {}
+            for i, (mixer, _) in enumerate(g.pattern):
+                if mixer in ("attn", "local_attn"):
+                    window = cfg.window if mixer == "local_attn" else None
+                    shp = layers.attn_cache_shape(cfg, batch, max_len, window)
+                elif mixer == "rglru":
+                    shp = layers.rglru_cache_shape(cfg, batch)
+                else:
+                    shp = layers.mamba_cache_shape(cfg, batch)
+                c = {"mixer": {k: jnp.zeros(v.shape, v.dtype) for k, v in shp.items()}}
+                if g.repeats > 1:
+                    c = jax.tree.map(lambda a: jnp.broadcast_to(a, (g.repeats,) + a.shape), c)
+                gc[f"l{i}"] = c
+            groups.append(gc)
+        return {"pos": jnp.int32(max_len - 1), "groups": groups, "max_len": max_len}
+
+    def decode_step(self, params, cache, tokens, rules=None, mesh=None):
+        """tokens: [B] int32 (or embeds [B,1,d]); returns (logits [B,V], cache)."""
+        cfg = self.cfg
+        rules = rules or {}
+        if cfg.embed_inputs:
+            x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.jnp_dtype)
+        else:
+            x = tokens
+        pos = cache["pos"]
+        x, new_groups = self._run_blocks(params, x, rules, mesh, "decode",
+                                         cache["groups"], pos)
+        logits = self._head(params, x)
+        return logits[:, 0], {"pos": pos + 1, "groups": new_groups,
+                              "max_len": cache["max_len"]}
+
+    def sample_inputs(self, batch: int, seq: int, rng=None) -> Dict[str, jax.Array]:
+        """Concrete random inputs for smoke tests."""
+        cfg = self.cfg
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(rng)
+        if cfg.embed_inputs:
+            toks = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+            batch_d = {"tokens": toks}
+        else:
+            batch_d = {"embeds": jax.random.normal(k1, (batch, seq, cfg.d_model), jnp.float32)}
+        batch_d["labels"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+        return batch_d

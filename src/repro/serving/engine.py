@@ -1,0 +1,98 @@
+"""Serving engine: batched prefill + decode with slot-based batching.
+
+Readers of the asymmetric store: the engine pins a committed version
+(`load_from_store`) while training keeps committing new ones — the SWMR
+pattern of paper §9 — and can hot-reload to a newer version between
+generations.
+
+Batching model: fixed decode slots; a `generate` call admits up to
+`batch_slots` equal-length prompts (bucketized upstream), prefication fills
+the cache, then all slots decode in lock-step with per-sequence EOS masking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import DecoderLM
+from ..statestore import CheckpointManager
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 8
+    max_new_tokens: int = 32
+    eos_id: int = -1            # <0: never stop early
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class ServeEngine:
+    def __init__(self, model: DecoderLM, params, cfg: ServeConfig, rules=None, mesh=None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.rules = rules or {}
+        self.mesh = mesh
+        self.version: Optional[int] = None
+        self._prefill = jax.jit(
+            lambda p, batch: model.prefill(p, batch, self.rules, mesh))
+        self._decode = jax.jit(
+            lambda p, cache, tok: model.decode_step(p, cache, tok, self.rules, mesh))
+
+    # ----------------------------------------------------------- store reads
+    @classmethod
+    def load_from_store(cls, model: DecoderLM, ckpt: CheckpointManager,
+                        cfg: ServeConfig, version: Optional[int] = None,
+                        rules=None, mesh=None) -> "ServeEngine":
+        """Pin a committed version (params only) — a multi-version reader."""
+        template = {"params": model.abstract()}
+        v, state = ckpt.restore(template, version=version)
+        eng = cls(model, state["params"], cfg, rules, mesh)
+        eng.version = v
+        return eng
+
+    def reload(self, ckpt: CheckpointManager, version: Optional[int] = None) -> int:
+        template = {"params": self.model.abstract()}
+        v, state = ckpt.restore(template, version=version)
+        self.params, self.version = state["params"], v
+        return v
+
+    # -------------------------------------------------------------- generate
+    def generate(self, prompts: np.ndarray, rng: Optional[jax.Array] = None
+                 ) -> Tuple[np.ndarray, Dict[str, Any]]:
+        """prompts: [B, S0] int32 (equal lengths; B <= batch_slots).
+        Returns (tokens [B, S0+max_new], stats)."""
+        cfg = self.cfg
+        B, S0 = prompts.shape
+        assert B <= cfg.batch_slots
+        pad = cfg.batch_slots - B
+        if pad:
+            prompts = np.concatenate([prompts, np.zeros((pad, S0), np.int32)], 0)
+        toks = jnp.asarray(prompts, jnp.int32)
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        out = [toks]
+        done = jnp.zeros((cfg.batch_slots,), bool)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        steps = 0
+        for t in range(cfg.max_new_tokens):
+            if cfg.greedy:
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            else:
+                rng, k = jax.random.split(rng)
+                nxt = jax.random.categorical(k, logits / cfg.temperature).astype(jnp.int32)
+            if cfg.eos_id >= 0:
+                nxt = jnp.where(done, cfg.eos_id, nxt)
+                done = done | (nxt == cfg.eos_id)
+            out.append(nxt[:, None])
+            steps += 1
+            if cfg.eos_id >= 0 and bool(done.all()):
+                break
+            logits, cache = self._decode(self.params, cache, nxt)
+        tokens = np.asarray(jnp.concatenate(out, axis=1))[:B]
+        return tokens, {"decode_steps": steps, "version": self.version}

@@ -1,0 +1,9 @@
+"""Asymmetric persistent state store: the paper's architecture over
+training/serving state (see DESIGN.md §2.2)."""
+
+from .blade import Blade, FileBlade, MemoryBlade
+from .checkpoint import CheckpointManager, flatten_named
+from .store import AsymStore
+
+__all__ = ["Blade", "FileBlade", "MemoryBlade", "AsymStore",
+           "CheckpointManager", "flatten_named"]

@@ -1,0 +1,230 @@
+"""Checkpoint manager: the front-end side of the asymmetric state store.
+
+Recovery contract (mirrors the paper's op-log/memory-log split):
+
+  * every training step appends a tiny **step log** (step, rng seed, data
+    cursor) BEFORE the step result is considered durable — the paper's
+    "operation log first";
+  * every `full_every` steps the full state is committed as a new immutable
+    **version** (the batched memory-log flush);
+  * optional **delta commits** between full versions store top-k compressed
+    parameter deltas — cheap, frequent, *approximate* snapshots for serving
+    freshness (lossy: exact resume never reads them);
+  * exact resume = latest full version + deterministic re-execution of the
+    steps named by the pending step logs (the data pipeline is stateless in
+    `step`, so replay is bitwise-identical) — precisely the paper's
+    front-end crash recovery;
+  * restore re-shards onto ANY mesh: tensors are stored as global arrays
+    assembled from device shards, and `device_put` with the new sharding
+    distributes them (elastic scaling).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .store import AsymStore
+
+Pytree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def flatten_named(tree: Pytree) -> List[Tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_path_str(path), leaf) for path, leaf in leaves]
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        store: AsymStore,
+        *,
+        full_every: int = 100,
+        delta_every: int = 0,
+        delta_topk_frac: float = 0.01,
+        keep: int = 2,
+        async_commit: bool = False,
+    ):
+        self.store = store
+        self.full_every = full_every
+        self.delta_every = delta_every
+        self.delta_topk_frac = delta_topk_frac
+        self.keep = keep
+        self.async_commit = async_commit
+        self._recon: Optional[Dict[str, np.ndarray]] = None  # delta base view
+        self._q: "queue.Queue[Optional[Callable[[], None]]]" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        if async_commit:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    # ---------------------------------------------------------------- async
+    def _drain(self):
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            job()
+
+    def _submit(self, job: Callable[[], None]):
+        if self.async_commit:
+            self._q.put(job)
+        else:
+            job()
+
+    def wait(self):
+        """Barrier: all queued commits durable."""
+        if self.async_commit:
+            done = threading.Event()
+            self._q.put(done.set)
+            done.wait()
+
+    def close(self):
+        if self.async_commit and self._worker:
+            self._q.put(None)
+            self._worker.join()
+            self._worker = None
+
+    # ------------------------------------------------------------- step log
+    def log_step(self, step: int, meta: Optional[Dict[str, Any]] = None) -> None:
+        rec = {"step": int(step)}
+        rec.update(meta or {})
+        self.store.append_step_log(rec)
+
+    # ----------------------------------------------------------------- save
+    def maybe_save(self, step: int, state: Pytree, meta=None) -> Optional[str]:
+        """Policy entry point: full/delta cadence."""
+        if self.full_every and step % self.full_every == 0 and step > 0:
+            self.save_full(step, state, meta)
+            return "full"
+        if self.delta_every and step % self.delta_every == 0 and step > 0:
+            self.save_delta(step, state, meta)
+            return "delta"
+        return None
+
+    def save_full(self, step: int, state: Pytree, meta=None) -> None:
+        """Gather device shards and commit a full version (async-capable).
+
+        device_get happens synchronously (it is the unavoidable readback);
+        object writes + manifest + root swap can overlap training.
+        """
+        named = flatten_named(state)
+        tensors: Dict[str, List[np.ndarray]] = {}
+        shard_meta: Dict[str, Any] = {}
+        for name, leaf in named:
+            arr = np.asarray(jax.device_get(leaf))
+            tensors[name] = [arr]
+            shard_meta[name] = {
+                "global_shape": list(np.shape(arr)),
+                "sharding": str(getattr(leaf, "sharding", "")),
+            }
+        m = dict(meta or {})
+        m["shard_meta"] = shard_meta
+        m["step"] = int(step)
+        self._recon = {n: t[0].astype(np.float32, copy=True) if t[0].dtype.kind == "f" or "bfloat16" in str(t[0].dtype) else t[0]
+                       for n, t in tensors.items()}
+
+        def job():
+            self.store.commit_version(step, tensors, meta=m)
+            self.store.gc(keep=self.keep)
+
+        self._submit(job)
+
+    def save_delta(self, step: int, state: Pytree, meta=None) -> None:
+        """Top-k compressed delta vs the reconstructed store view, with error
+        feedback (the un-sent residual stays in the base view so it is
+        retried next time) — the 'memory-log coalescing' of the adaptation."""
+        if self._recon is None:
+            self.save_full(step, state, meta)
+            return
+        base_version = self.store.latest_version()
+        named = flatten_named(state)
+        deltas: Dict[str, Any] = {}
+        passthrough: Dict[str, List[np.ndarray]] = {}
+        for name, leaf in named:
+            arr = np.asarray(jax.device_get(leaf))
+            base = self._recon.get(name)
+            if base is None or arr.dtype.kind not in "f" and "bfloat16" not in str(arr.dtype):
+                passthrough[name] = [arr]
+                continue
+            flat = arr.astype(np.float32).reshape(-1)
+            d = flat - base.reshape(-1)
+            n = d.size
+            block = 1024
+            k = max(1, int(block * self.delta_topk_frac))
+            nb = -(-n // block)
+            dp = np.zeros(nb * block, np.float32)
+            dp[:n] = d
+            db = dp.reshape(nb, block)
+            idx = np.argpartition(-np.abs(db), k - 1, axis=1)[:, :k].astype(np.int32)
+            vals = np.take_along_axis(db, idx, axis=1)
+            # error feedback: applied part advances the base view
+            applied = np.zeros_like(dp).reshape(nb, block)
+            np.put_along_axis(applied, idx, vals, axis=1)
+            self._recon[name] = (base.reshape(-1) + applied.reshape(-1)[:n]).reshape(base.shape)
+            deltas[name] = {"vals": vals, "idx": idx, "n": n, "block": block,
+                            "dtype": str(arr.dtype)}
+        m = dict(meta or {})
+        m["step"] = int(step)
+
+        def job():
+            self.store.commit_version(step, passthrough, meta=m,
+                                      base_version=base_version, deltas=deltas)
+
+        self._submit(job)
+
+    # -------------------------------------------------------------- restore
+    def restore(self, template: Pytree, version: Optional[int] = None) -> Tuple[int, Pytree]:
+        """Restore state onto the shardings/dtypes of `template` (a pytree of
+        arrays or ShapeDtypeStructs with .sharding).  Elastic: the mesh may
+        differ from the one that saved."""
+        self.wait()
+        v = version if version is not None else self.store.latest_version()
+        if v == 0:
+            raise FileNotFoundError("no committed version in store")
+        named = flatten_named(template)
+        leaves = []
+        for name, leaf in named:
+            shards = self.store.read_tensor(v, name)
+            arr = shards[0] if len(shards) == 1 else np.concatenate(shards)
+            tgt_dtype = leaf.dtype
+            arr = arr.astype(tgt_dtype) if str(arr.dtype) != str(tgt_dtype) else arr
+            sharding = getattr(leaf, "sharding", None)
+            if sharding is not None and not callable(sharding):
+                leaves.append(jax.device_put(arr, sharding))
+            else:
+                leaves.append(jax.device_put(arr))
+        treedef = jax.tree_util.tree_structure(template)
+        return v, jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def resume_plan(self) -> Tuple[int, List[Dict[str, Any]]]:
+        """(last committed full/exact version, step logs recorded after it)
+        — the trainer re-executes those steps deterministically."""
+        self.wait()
+        v = self.store.latest_version()
+        # walk back to the newest *exact* (full) version
+        versions = self.store.committed_versions()
+        full_v = 0
+        for cand in reversed(versions):
+            man = self.store.manifest(cand)
+            kinds = {e["kind"] for e in man["tensors"].values()}
+            if "delta" not in kinds:
+                full_v = cand
+                break
+        return full_v, self.store.pending_step_logs(full_v)

@@ -1,0 +1,206 @@
+"""AsymStore: the rNVM protocol over tensors.
+
+Mapping from the paper (see DESIGN.md §2.2):
+
+  * data area          -> named tensor objects, keyed (version, tensor-name)
+  * memory logs + tx   -> a version commit: shard objects written first,
+                          then a checksummed MANIFEST, then the atomic root
+                          swap — all-or-nothing by construction
+  * operation log      -> step log: small records (step, rng, data cursor)
+                          appended synchronously every step
+  * batching           -> delta commits: top-k-compressed parameter deltas
+                          coalesced between full snapshots
+  * multi-version+CAS  -> every commit is a new immutable version id; the
+                          ROOT pointer names the latest durable version;
+                          readers (serving/eval) pin any committed version
+                          while the single writer commits new ones (SWMR)
+  * front-end cache    -> restore reads only the shards a host needs
+
+Tensors are stored shard-wise with logical-sharding metadata, so restore
+can re-shard onto a *different* mesh (elastic scaling).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..kernels import ref as kref
+from .blade import Blade
+
+Pytree = Any
+
+
+def _tensor_key(version: int, name: str, shard: int) -> str:
+    return f"v{version:010d}/{name}/s{shard:05d}.npy"
+
+
+def _manifest_key(version: int) -> str:
+    return f"v{version:010d}/MANIFEST.json"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _np_bytes(arr: np.ndarray) -> bytes:
+    arr = np.asarray(arr)
+    if arr.dtype == _np_dtype("bfloat16"):
+        arr = arr.view(np.uint16)  # np.save cannot serialize ml_dtypes
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _np_from(data: bytes, dtype: Optional[str] = None) -> np.ndarray:
+    arr = np.load(io.BytesIO(data), allow_pickle=False)
+    if dtype == "bfloat16":
+        arr = arr.view(_np_dtype("bfloat16"))
+    return arr
+
+
+class AsymStore:
+    """Single-writer, multi-reader versioned tensor store on a blade."""
+
+    def __init__(self, blade: Blade):
+        self.blade = blade
+
+    # ------------------------------------------------------------- versions
+    def latest_version(self) -> int:
+        return self.blade.get_root()
+
+    def committed_versions(self) -> List[int]:
+        out = []
+        for name in self.blade.list():
+            if name.endswith("MANIFEST.json"):
+                out.append(int(name.split("/")[0][1:]))
+        return sorted(out)
+
+    def manifest(self, version: int) -> Dict[str, Any]:
+        return json.loads(self.blade.get(_manifest_key(version)).decode())
+
+    # --------------------------------------------------------------- commit
+    def commit_version(
+        self,
+        version: int,
+        tensors: Dict[str, List[np.ndarray]],
+        meta: Optional[Dict[str, Any]] = None,
+        base_version: Optional[int] = None,
+        deltas: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        """All-or-nothing commit.
+
+        `tensors`: name -> list of shards (each with `.sharding_meta` entry in
+        the manifest).  `deltas`: name -> compressed delta against
+        `base_version` (used by incremental commits; see delta_commit).
+        Ordering: shard objects first, MANIFEST second, ROOT swap last — a
+        crash at any point leaves either the old version (no manifest / no
+        root) or the complete new one.
+        """
+        entries: Dict[str, Any] = {}
+        for name, shards in (tensors or {}).items():
+            for i, arr in enumerate(shards):
+                self.blade.put(_tensor_key(version, name, i), _np_bytes(arr))
+            entries[name] = {
+                "kind": "full",
+                "n_shards": len(shards),
+                "dtype": str(shards[0].dtype),
+                "shard_shape": list(shards[0].shape),
+            }
+        for name, d in (deltas or {}).items():
+            self.blade.put(
+                _tensor_key(version, name, 0),
+                _np_bytes(np.concatenate([d["vals"].reshape(-1).view(np.float32),
+                                          d["idx"].reshape(-1).view(np.float32)])),
+            )
+            entries[name] = {
+                "kind": "delta",
+                "base": base_version,
+                "n": int(d["n"]),
+                "k": int(d["vals"].shape[1]),
+                "nb": int(d["vals"].shape[0]),
+                "block": int(d["block"]),
+                "dtype": str(d["dtype"]),
+            }
+        manifest = {
+            "version": version,
+            "base": base_version,
+            "time": time.time(),
+            "meta": meta or {},
+            "tensors": entries,
+        }
+        self.blade.put(_manifest_key(version), json.dumps(manifest).encode())
+        self.blade.set_root(version)  # the atomic root swap
+
+    # ---------------------------------------------------------------- reads
+    def read_tensor(self, version: int, name: str) -> List[np.ndarray]:
+        man = self.manifest(version)
+        ent = man["tensors"][name]
+        if ent["kind"] == "full":
+            return [
+                _np_from(self.blade.get(_tensor_key(version, name, i)), ent["dtype"])
+                for i in range(ent["n_shards"])
+            ]
+        # delta: reconstruct base then apply
+        base = self.read_tensor(ent["base"], name)
+        flat = np.concatenate([s.reshape(-1) for s in base]).astype(np.float32)
+        raw = _np_from(self.blade.get(_tensor_key(version, name, 0)))
+        nbk = ent["nb"] * ent["k"]
+        vals = raw[:nbk].reshape(ent["nb"], ent["k"])
+        idx = raw[nbk:].view(np.int32).reshape(ent["nb"], ent["k"])
+        block = ent["block"]
+        for b in range(ent["nb"]):
+            lo = b * block
+            sel = idx[b] + lo
+            ok = sel < ent["n"]
+            flat[sel[ok]] += vals[b][ok]
+        out = []
+        off = 0
+        for s in base:
+            out.append(flat[off : off + s.size].reshape(s.shape).astype(ent["dtype"]))
+            off += s.size
+        return out
+
+    # ------------------------------------------------------------- step log
+    def append_step_log(self, payload: Dict[str, Any]) -> int:
+        return self.blade.append(json.dumps(payload).encode())
+
+    def pending_step_logs(self, after_version: int) -> List[Dict[str, Any]]:
+        """Step logs recorded after the last committed version — the replay
+        set for exact resume (paper §7.5 front-end recovery)."""
+        out = []
+        for _, payload in self.blade.scan_log():
+            rec = json.loads(payload.decode())
+            if rec.get("step", -1) > after_version:
+                out.append(rec)
+        return out
+
+    def gc(self, keep: int = 2) -> None:
+        """Drop old versions, never the root and never a delta-chain base of
+        a retained version."""
+        versions = self.committed_versions()
+        keep_set = set(versions[-keep:]) | {self.latest_version()}
+        frontier = list(keep_set)
+        while frontier:
+            v = frontier.pop()
+            if v == 0:
+                continue
+            man = self.manifest(v)
+            for ent in man["tensors"].values():
+                if ent["kind"] == "delta" and ent["base"] not in keep_set:
+                    keep_set.add(ent["base"])
+                    frontier.append(ent["base"])
+        for v in versions:
+            if v in keep_set:
+                continue
+            for name in self.blade.list(f"v{v:010d}/"):
+                self.blade.delete(name)

@@ -1,0 +1,7 @@
+from .optimizer import OptConfig, apply_opt, init_opt_state
+from .train_step import TrainConfig, init_train_state, make_train_step
+from .trainer import StragglerWatchdog, Trainer, TrainerConfig
+
+__all__ = ["OptConfig", "apply_opt", "init_opt_state", "TrainConfig",
+           "init_train_state", "make_train_step", "Trainer", "TrainerConfig",
+           "StragglerWatchdog"]

@@ -1,0 +1,98 @@
+"""Optimizers as pure pytree transforms: AdamW and Adafactor.
+
+Adafactor (factored second moment, optional bf16 momentum) exists because
+the 1T-param MoE cannot afford 2 fp32 moments per weight: on a 256-chip pod
+AdamW state alone exceeds HBM (see EXPERIMENTS.md §Dry-run).  Optimizer
+state inherits the parameter sharding; with ``zero=True`` the state is
+additionally sharded over the data axis (ZeRO-1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    momentum_dtype: str = "float32"  # adafactor may use bfloat16
+
+
+def init_opt_state(params: Pytree, cfg: OptConfig) -> Pytree:
+    def one(p):
+        if cfg.kind == "adamw":
+            return {"m": jnp.zeros(p.shape, jnp.float32),
+                    "v": jnp.zeros(p.shape, jnp.float32)}
+        # adafactor: factored for rank >= 2, full for vectors
+        mdt = jnp.dtype(cfg.momentum_dtype)
+        st = {"m": jnp.zeros(p.shape, mdt)}
+        if p.ndim >= 2:
+            st["vr"] = jnp.zeros(p.shape[:-1], jnp.float32)
+            st["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        else:
+            st["v"] = jnp.zeros(p.shape, jnp.float32)
+        return st
+
+    return jax.tree.map(one, params)
+
+
+def _global_norm(tree: Pytree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_opt(
+    params: Pytree, grads: Pytree, state: Pytree, cfg: OptConfig, step: jax.Array
+) -> Tuple[Pytree, Pytree, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    t = step.astype(jnp.float32) + 1.0
+
+    def adamw(p, g, s):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * s["m"] + (1 - cfg.b1) * g
+        v = cfg.b2 * s["v"] + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1**t)
+        vhat = v / (1 - cfg.b2**t)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype), {"m": m, "v": v}
+
+    def adafactor(p, g, s):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = cfg.b2 * s["vr"] + (1 - cfg.b2) * g2.mean(axis=-1)
+            vc = cfg.b2 * s["vc"] + (1 - cfg.b2) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            v = vr[..., None] * vc[..., None, :] / denom[..., None]
+            news = {"vr": vr, "vc": vc}
+        else:
+            v = cfg.b2 * s["v"] + (1 - cfg.b2) * g2
+            news = {"v": v}
+        upd = g / (jnp.sqrt(v) + cfg.eps)
+        m = cfg.b1 * s["m"].astype(jnp.float32) + (1 - cfg.b1) * upd
+        news["m"] = m.astype(s["m"].dtype)
+        upd = m + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype), news
+
+    fn = adamw if cfg.kind == "adamw" else adafactor
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = treedef.flatten_up_to(state)
+    outs = [fn(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_s = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_p, new_s, gnorm

@@ -1,0 +1,136 @@
+"""Training driver: deterministic loop + asymmetric-store fault tolerance.
+
+Per step: (1) append the step log (the op-log-first rule), (2) run the
+jitted train_step, (3) let the checkpoint manager apply its full/delta
+cadence (full commits may be async — overlapped with compute), (4) feed the
+straggler watchdog.
+
+Resume: `Trainer.resume()` reads the store's resume plan — last exact
+version + the step logs after it — restores, and re-executes those steps;
+the stateless pipeline makes the replay bitwise identical to the lost run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.pipeline import DataConfig, SyntheticPipeline
+from ..models.model import DecoderLM
+from ..statestore import AsymStore, CheckpointManager
+from .train_step import TrainConfig, init_train_state, make_train_step
+
+
+class StragglerWatchdog:
+    """Flags steps slower than `tolerance` x the rolling median.
+
+    On a real fleet this feeds the controller that triggers hot-spares /
+    shard migration; here it records the events (and the trainer exposes
+    them) so the policy is testable.
+    """
+
+    def __init__(self, tolerance: float = 3.0, window: int = 32):
+        self.tolerance = tolerance
+        self.durations: List[float] = []
+        self.window = window
+        self.events: List[Dict[str, Any]] = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        hist = self.durations[-self.window :]
+        slow = False
+        if len(hist) >= 8:
+            med = float(np.median(hist))
+            if seconds > self.tolerance * med:
+                slow = True
+                self.events.append({"step": step, "seconds": seconds, "median": med})
+        self.durations.append(seconds)
+        return slow
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: DecoderLM,
+        tcfg: TrainConfig,
+        data_cfg: DataConfig,
+        ckpt: Optional[CheckpointManager] = None,
+        rules: Optional[Dict] = None,
+        mesh=None,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.tcfg = tcfg
+        self.pipeline = SyntheticPipeline(data_cfg)
+        self.ckpt = ckpt
+        self.rules = rules or {}
+        self.mesh = mesh
+        self.seed = seed
+        self.watchdog = StragglerWatchdog()
+        self._step_fn = jax.jit(make_train_step(model, tcfg, self.rules, mesh),
+                                donate_argnums=(0,))
+        self.state: Optional[Dict[str, Any]] = None
+        self.metrics_log: List[Dict[str, float]] = []
+        self._preempted = False
+
+    # ----------------------------------------------------------------- setup
+    def init(self) -> None:
+        self.state = init_train_state(self.model, jax.random.PRNGKey(self.seed), self.tcfg)
+
+    def install_preemption_handler(self, sig=signal.SIGTERM) -> None:
+        """SIGTERM -> finish the current step, commit, exit cleanly."""
+
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(sig, handler)
+
+    # ------------------------------------------------------------------ run
+    def run(self, cfg: TrainerConfig, start_step: Optional[int] = None) -> Dict[str, Any]:
+        assert self.state is not None, "call init() or resume() first"
+        start = int(start_step if start_step is not None else self.state["step"])
+        for step in range(start, cfg.total_steps):
+            if self.ckpt:
+                self.ckpt.log_step(step, {"seed": self.seed})
+            batch = {k: jnp.asarray(v) for k, v in self.pipeline.batch_at(step).items()}
+            t0 = time.monotonic()
+            self.state, metrics = self._step_fn(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.monotonic() - t0
+            self.watchdog.observe(step, dt)
+            self.metrics_log.append({"step": step, **metrics, "seconds": dt})
+            if self.ckpt:
+                self.ckpt.maybe_save(step + 1, self.state,
+                                     {"seed": self.seed, "kind": "train_state"})
+            if self._preempted:
+                if self.ckpt:
+                    self.ckpt.save_full(step + 1, self.state, {"seed": self.seed,
+                                                               "preempted": True})
+                    self.ckpt.wait()
+                break
+        if self.ckpt:
+            self.ckpt.wait()
+        return {"final_step": int(self.state["step"]), "metrics": self.metrics_log,
+                "straggler_events": self.watchdog.events}
+
+    # --------------------------------------------------------------- resume
+    def resume(self) -> int:
+        """Restore the last exact version and return the step to continue
+        from; the caller re-runs from there (replay == continue, because the
+        pipeline and train_step are deterministic in `step`)."""
+        assert self.ckpt is not None
+        full_v, pending = self.ckpt.resume_plan()
+        template = init_train_state(self.model, jax.random.PRNGKey(self.seed), self.tcfg)
+        _, self.state = self.ckpt.restore(template, version=full_v)
+        return int(self.state["step"])

@@ -1,0 +1,67 @@
+"""SmallBank / TATP transaction applications over rNVM."""
+
+import pytest
+
+from repro.core import FEConfig, FrontEnd, NVMBackend
+from repro.core.apps import SmallBank, TATP
+
+
+@pytest.fixture(params=["naive", "rc"])
+def fe(request):
+    be = NVMBackend(capacity=1 << 25)
+    cfg = FEConfig.naive() if request.param == "naive" else FEConfig.rc()
+    return FrontEnd(be, cfg)
+
+
+def test_smallbank_conservation(fe):
+    sb = SmallBank(fe, "sb", n_accounts=100)
+    for a in range(100):
+        sb.deposit_checking(a, 1000)
+    fe.drain(sb.h)
+    total0 = sum(sb.balance(a) for a in range(100))
+    sb.send_payment(1, 2, 300)
+    sb.amalgamate(3, 4)
+    sb.transact_savings(5, 77)
+    sb.write_check(6, 10)
+    fe.drain(sb.h)
+    # send_payment and amalgamate conserve money; transact adds, check subtracts
+    total1 = sum(sb.balance(a) for a in range(100))
+    assert total1 == total0 + 77 - 10
+    assert sb.balance(3) == 0
+    assert sb.balance(4) == 2000
+
+
+def test_smallbank_crash_recovery():
+    be = NVMBackend(capacity=1 << 25)
+    fe = FrontEnd(be, FEConfig.rcb(batch_ops=16, oplog_group=4))
+    sb = SmallBank(fe, "sb", n_accounts=50)
+    for a in range(50):
+        sb.deposit_checking(a, 100)
+    # crash before drain: committed op-log groups replay
+    fe2 = FrontEnd(be, FEConfig.rcb(), fe_id=1)
+    sb2 = SmallBank.recover(fe2, "sb")
+    recovered = sum(sb2.balance(a) for a in range(50))
+    assert recovered >= 48 * 100  # all but the last un-committed group
+
+
+def test_smallbank_mix_runs(fe):
+    sb = SmallBank(fe, "sb", n_accounts=200)
+    sb.run_mix(300, write_frac=0.8, seed=1)
+    fe.drain(sb.h)
+
+
+def test_tatp_transactions(fe):
+    t = TATP(fe, "t", n_subscribers=200)
+    t.populate(200)
+    assert t.get_subscriber_data(5) is not None
+    t.update_location(5, 999)
+    t.drain()
+    assert t.subscriber.find(5) == 999
+    t.insert_call_forwarding(5, 1, 8, 12345)
+    t.drain()
+    assert t.get_new_destination(5, 1, 8) == 12345
+    t.delete_call_forwarding(5, 1, 8)
+    t.drain()
+    assert t.get_new_destination(5, 1, 8) is None
+    t.run_mix(200, write_frac=1.0, seed=2)
+    t.drain()

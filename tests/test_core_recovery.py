@@ -1,0 +1,113 @@
+"""Crash/recovery semantics of the rNVM core (paper §4.2, §4.3, §7.5)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CrashError, FEConfig, FrontEnd, NVMBackend
+from repro.core.structures import RemoteBST, RemoteHashTable, RemoteQueue, RemoteStack
+
+
+def test_frontend_crash_replay_bst():
+    be = NVMBackend(capacity=1 << 25)
+    fe = FrontEnd(be, FEConfig.rcb(batch_ops=256, oplog_group=32))
+    t = RemoteBST(fe, "t")
+    ks = random.Random(2).sample(range(100000), 500)
+    for k in ks:
+        t.insert(k, k)
+    # crash: abandon fe. Ops in committed op-log groups are recoverable.
+    committed = (500 // 32) * 32
+    fe2 = FrontEnd(be, FEConfig.rcb(batch_ops=256, oplog_group=32), fe_id=1)
+    t2 = RemoteBST.recover(fe2, "t")
+    found = sum(1 for k in ks if t2.find(k) == k)
+    assert found >= committed
+    items = t2.items()
+    assert items == sorted(items)
+    assert len(set(k for k, _ in items)) == len(items)
+
+
+def test_backend_transient_crash_torn_tx():
+    be = NVMBackend(capacity=1 << 25)
+    fe = FrontEnd(be, FEConfig.rcb(batch_ops=64, oplog_group=16))
+    s = RemoteStack(fe, "s")
+    for i in range(200):
+        s.push(i)
+    fe.drain(s.h)
+    for i in range(200, 230):
+        s.push(i)
+    be.schedule_torn_write(20)
+    with pytest.raises(CrashError):
+        fe.drain(s.h)
+        fe.drain(s.h)  # second attempt hits the dead blade if first "succeeded"
+    be.reboot()
+    fe3 = FrontEnd(be, FEConfig.rcb(batch_ops=64, oplog_group=16), fe_id=2)
+    s3 = RemoteStack.recover(fe3, "s")
+    vals = []
+    while True:
+        v = s3.pop()
+        if v is None:
+            break
+        vals.append(v)
+    # a consistent prefix: at least the 200 drained, descending order
+    assert len(vals) >= 200
+    assert vals == sorted(vals, reverse=True)
+    assert vals[-1] == 0
+
+
+def test_backend_reboot_preserves_committed_state():
+    be = NVMBackend(capacity=1 << 25)
+    fe = FrontEnd(be, FEConfig.rcb(batch_ops=32, oplog_group=8))
+    ht = RemoteHashTable(fe, "h", n_buckets=32)
+    for i in range(100):
+        ht.put(i, i * 7)
+    fe.drain(ht.h)
+    be.crash()
+    be.reboot()
+    fe2 = FrontEnd(be, FEConfig.rcb(), fe_id=1)
+    ht2 = RemoteHashTable.recover(fe2, "h")
+    assert all(ht2.get(i) == i * 7 for i in range(100))
+
+
+def test_mirror_promotion_after_permanent_failure():
+    be = NVMBackend(capacity=1 << 25, num_mirrors=2)
+    fe = FrontEnd(be, FEConfig.rcb(batch_ops=32, oplog_group=8))
+    q = RemoteQueue(fe, "q")
+    for i in range(150):
+        q.enqueue(i)
+    fe.drain(q.h)
+    promoted = be.promote_mirror(1)
+    fe2 = FrontEnd(promoted, FEConfig.rcb(), fe_id=3)
+    q2 = RemoteQueue.recover(fe2, "q")
+    assert [q2.dequeue() for _ in range(150)] == list(range(150))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=400), st.integers(min_value=1, max_value=64))
+def test_fuzzed_torn_write_point(n_extra, keep_bytes):
+    """Whatever byte the power fails at, recovery yields a consistent
+    prefix of the op history."""
+    be = NVMBackend(capacity=1 << 25)
+    fe = FrontEnd(be, FEConfig.rcb(batch_ops=50, oplog_group=10))
+    s = RemoteStack(fe, "s")
+    for i in range(100):
+        s.push(i)
+    fe.drain(s.h)
+    for i in range(100, 100 + n_extra % 60):
+        s.push(i)
+    be.schedule_torn_write(keep_bytes)
+    try:
+        fe.drain(s.h)
+    except CrashError:
+        pass
+    be.reboot()
+    fe2 = FrontEnd(be, FEConfig.rcb(), fe_id=1)
+    s2 = RemoteStack.recover(fe2, "s")
+    vals = []
+    while True:
+        v = s2.pop()
+        if v is None:
+            break
+        vals.append(v)
+    assert len(vals) >= 100
+    assert vals == sorted(vals, reverse=True) and vals[-1] == 0

@@ -1,0 +1,179 @@
+"""Correctness of the eight remote persistent data structures under every
+optimization variant (naive / R / RC / RCB) — Table 3's rows must all
+compute the same answers, only at different virtual-time cost."""
+
+import random
+
+import pytest
+
+from repro.core import FEConfig, FrontEnd, NVMBackend
+from repro.core.structures import (
+    RemoteBPTree,
+    RemoteBST,
+    RemoteHashTable,
+    RemoteMVBPTree,
+    RemoteMVBST,
+    RemoteQueue,
+    RemoteSkipList,
+    RemoteStack,
+)
+
+VARIANTS = {
+    "naive": FEConfig.naive,
+    "r": FEConfig.r,
+    "rc": FEConfig.rc,
+    "rcb": lambda: FEConfig.rcb(batch_ops=64),
+}
+
+
+@pytest.fixture(params=list(VARIANTS))
+def fe(request):
+    be = NVMBackend(capacity=1 << 25)
+    return FrontEnd(be, VARIANTS[request.param]())
+
+
+KEYS = random.Random(11).sample(range(100000), 400)
+
+
+def test_stack_lifo(fe):
+    st = RemoteStack(fe, "s")
+    for i in range(120):
+        st.push(i)
+    assert [st.pop() for _ in range(120)] == list(range(119, -1, -1))
+    assert st.pop() is None
+    fe.drain(st.h)
+
+
+def test_stack_interleaved(fe):
+    st = RemoteStack(fe, "s")
+    oracle = []
+    rng = random.Random(5)
+    for _ in range(300):
+        if oracle and rng.random() < 0.45:
+            assert st.pop() == oracle.pop()
+        else:
+            v = rng.randrange(1 << 30)
+            st.push(v)
+            oracle.append(v)
+    fe.drain(st.h)
+    while oracle:
+        assert st.pop() == oracle.pop()
+
+
+def test_queue_fifo(fe):
+    q = RemoteQueue(fe, "q")
+    import collections
+
+    oracle = collections.deque()
+    rng = random.Random(7)
+    for _ in range(300):
+        if oracle and rng.random() < 0.45:
+            assert q.dequeue() == oracle.popleft()
+        else:
+            v = rng.randrange(1 << 30)
+            q.enqueue(v)
+            oracle.append(v)
+    fe.drain(q.h)
+    while oracle:
+        assert q.dequeue() == oracle.popleft()
+    assert q.dequeue() is None
+
+
+def test_hashtable(fe):
+    ht = RemoteHashTable(fe, "h", n_buckets=64)
+    d = {}
+    rng = random.Random(9)
+    for _ in range(500):
+        k = rng.randrange(200)
+        r = rng.random()
+        if r < 0.6:
+            v = rng.randrange(1 << 30)
+            ht.put(k, v)
+            d[k] = v
+        elif r < 0.8:
+            assert ht.get(k) == d.get(k)
+        else:
+            assert ht.delete(k) == (k in d)
+            d.pop(k, None)
+    fe.drain(ht.h)
+    for k in range(200):
+        assert ht.get(k) == d.get(k)
+
+
+def test_skiplist(fe):
+    sl = RemoteSkipList(fe, "sl")
+    for k in KEYS:
+        sl.insert(k, k * 3)
+    fe.drain(sl.h)
+    for k in KEYS:
+        assert sl.find(k) == k * 3
+    assert sl.find(-5) is None
+    sl.insert(KEYS[0], 777)
+    fe.drain(sl.h)
+    assert sl.find(KEYS[0]) == 777
+
+
+def test_bst(fe):
+    t = RemoteBST(fe, "t")
+    for k in KEYS:
+        t.insert(k, k + 1)
+    fe.drain(t.h)
+    assert t.items() == sorted((k, k + 1) for k in KEYS)
+    assert all(t.find(k) == k + 1 for k in KEYS)
+    assert t.find(-1) is None
+
+
+def test_bptree(fe):
+    bp = RemoteBPTree(fe, "bp")
+    for k in KEYS:
+        bp.insert(k, k + 2)
+    fe.drain(bp.h)
+    assert bp.items() == sorted((k, k + 2) for k in KEYS)
+    assert all(bp.find(k) == k + 2 for k in KEYS)
+
+
+def test_mv_bst_snapshots(fe):
+    mv = RemoteMVBST(fe, "mv")
+    first = KEYS[:50]
+    for k in first:
+        mv.insert(k, k)
+    fe.drain(mv.h)
+    snap = mv.snapshot_root()
+    for k in KEYS[50:100]:
+        mv.insert(k, k)
+    fe.drain(mv.h)
+    # old snapshot still consistent: has first 50, not the next 50
+    assert all(mv.find_from(snap, k) == k for k in first)
+    assert all(mv.find_from(snap, k) is None for k in KEYS[50:100])
+    assert all(mv.find(k) == k for k in KEYS[:100])
+
+
+def test_mv_bpt(fe):
+    mv = RemoteMVBPTree(fe, "mb")
+    for k in KEYS:
+        mv.insert(k, k * 2)
+    fe.drain(mv.h)
+    snap = mv.snapshot_root()
+    assert all(mv.find_from(snap, k) == k * 2 for k in KEYS[:100])
+
+
+def test_mv_bulk_load(fe):
+    mv = RemoteMVBPTree(fe, "mb2")
+    kvs = sorted((k, k + 9) for k in KEYS)
+    mv.build_from_sorted(kvs)
+    assert all(mv.find(k) == v for k, v in kvs[:100])
+
+
+def test_variant_ordering_virtual_time():
+    """naive must be slowest; RCB fastest (the paper's whole point)."""
+    times = {}
+    for name, mk in VARIANTS.items():
+        be = NVMBackend(capacity=1 << 25)
+        fe = FrontEnd(be, mk())
+        t = RemoteBST(fe, f"t")
+        for k in KEYS:
+            t.insert(k, k)
+        fe.drain(t.h)
+        times[name] = fe.clock.now
+    assert times["naive"] > times["r"] > times["rcb"]
+    assert times["rc"] > times["rcb"]

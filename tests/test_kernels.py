@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.log_checksum import fletcher32, fletcher32_padded_np
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.topk_compress import topk_compress
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+    (2, 4, 2, 256, 256, 64),
+    (1, 8, 1, 128, 384, 64),      # MQA, kv longer than q (decode-ish)
+    (2, 4, 4, 192, 192, 128),     # MHA, non-multiple of block
+    (1, 2, 2, 512, 512, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 128)])
+def test_flash_attention_sweep(b, hq, hkv, sq, sk, d, dtype, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype)
+    ref = R.mha_reference(q, k, v, causal=causal, window=window, q_offset=sk - sq)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=sk - sq, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+def test_flash_blocked_xla_matches_naive():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 4, 300, 64))
+    k = jax.random.normal(ks[1], (2, 2, 300, 64))
+    v = jax.random.normal(ks[2], (2, 2, 300, 64))
+    a = R.mha_reference(q, k, v, causal=True)
+    b = R.flash_attention_reference(q, k, v, causal=True, block_k=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [(2, 4, 2, 1024, 64), (1, 8, 8, 300, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, hq, hkv, s, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    length = jnp.array([s // 2] * b, jnp.int32)
+    ref = R.decode_attention_reference(q, k, v, length=length)
+    out = decode_attention(q, k, v, length=length, interpret=True, block_k=128)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+@pytest.mark.parametrize("B,S,Din,N,chunk", [(2, 512, 256, 16, 128), (1, 200, 128, 8, 64)])
+def test_mamba_scan_sweep(B, S, Din, N, chunk):
+    ks = jax.random.split(KEY, 7)
+    x = jax.random.normal(ks[0], (B, S, Din))
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Din)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Din, N)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    D = jax.random.normal(ks[5], (Din,))
+    h0 = jax.random.normal(ks[6], (B, Din, N))
+    yr, hr = R.mamba_scan_reference(x, delta, A, Bm, Cm, D, h0)
+    yk, hk = mamba_scan(x, delta, A, Bm, Cm, D, h0, chunk=chunk, block_d=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("B,S,D,chunk,bd", [(2, 777, 512, 256, 256), (1, 64, 128, 64, 128)])
+def test_rglru_scan_sweep(B, S, D, chunk, bd):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, D))
+    r = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, D)))
+    gi = jax.nn.sigmoid(jax.random.normal(ks[2], (B, S, D)))
+    log_a = -jnp.exp(jax.random.normal(ks[3], (D,)) * 0.3) * 0.1
+    h0 = jax.random.normal(ks[4], (B, D))
+    yr, hr = R.rglru_reference(x, r, gi, log_a, h0)
+    yk, hk = rglru_scan(x, r, gi, log_a, h0, chunk=chunk, block_d=bd, interpret=True)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("n", [2, 100, 1024, 4096, 9999])
+def test_fletcher32_three_way(n):
+    rng = np.random.default_rng(n)
+    w = rng.integers(0, 65536, n).astype(np.int32)
+    a = int(R.fletcher32_ref(jnp.asarray(w)))
+    b = int(fletcher32(jnp.asarray(w), interpret=True))
+    c = fletcher32_padded_np(w.astype("<u2").tobytes())
+    assert a == b == c
+
+
+def test_fletcher32_detects_corruption():
+    rng = np.random.default_rng(0)
+    w = rng.integers(0, 65536, 2048).astype(np.int32)
+    base = int(fletcher32(jnp.asarray(w), interpret=True))
+    w2 = w.copy()
+    w2[1234] ^= 0x1
+    assert int(fletcher32(jnp.asarray(w2), interpret=True)) != base
+
+
+@pytest.mark.parametrize("n,k,block", [(5000, 16, 1024), (1024, 4, 256), (100, 8, 128)])
+def test_topk_compress_sweep(n, k, block):
+    x = jax.random.normal(jax.random.fold_in(KEY, n), (n,))
+    vr, ir, rr = R.topk_compress_reference(x, k, block=block)
+    vk, ik, rk = topk_compress(x, k, block=block, interpret=True)
+    # same selected magnitude multisets per block + identical residuals
+    np.testing.assert_allclose(np.sort(np.abs(np.asarray(vr)), axis=1),
+                               np.sort(np.abs(np.asarray(vk)), axis=1), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rr), np.asarray(rk), atol=1e-6)
+    dec = R.topk_decompress_reference(vk, ik, n, block=block)
+    np.testing.assert_allclose(np.asarray(dec + rk), np.asarray(x), atol=1e-6)

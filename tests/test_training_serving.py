@@ -1,0 +1,173 @@
+"""Training loop fault tolerance + serving integration."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, SyntheticPipeline
+from repro.models import DecoderLM
+from repro.serving import ServeConfig, ServeEngine
+from repro.statestore import AsymStore, CheckpointManager, FileBlade
+from repro.training import (
+    OptConfig,
+    TrainConfig,
+    Trainer,
+    TrainerConfig,
+    StragglerWatchdog,
+)
+
+
+def _setup(tmp_path, arch="llama3.2-3b", **tkw):
+    cfg = get_smoke_config(arch)
+    model = DecoderLM(cfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, global_batch=4, seq_len=32)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3), **tkw)
+    blade = FileBlade(os.path.join(str(tmp_path), "blade"))
+    mgr = CheckpointManager(AsymStore(blade), full_every=5)
+    return cfg, model, dcfg, tcfg, blade, mgr
+
+
+def test_loss_decreases(tmp_path):
+    _, model, dcfg, tcfg, _, _ = _setup(tmp_path)
+    tr = Trainer(model, tcfg, dcfg, seed=1)
+    tr.init()
+    out = tr.run(TrainerConfig(total_steps=16))
+    losses = [m["loss"] for m in out["metrics"]]
+    assert min(losses[-4:]) < losses[0]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_bitwise_resume_after_crash(tmp_path):
+    cfg, model, dcfg, tcfg, blade, mgr = _setup(tmp_path)
+    tr = Trainer(model, tcfg, dcfg, ckpt=mgr, seed=3)
+    tr.init()
+    tr.run(TrainerConfig(total_steps=12))
+    ref = jax.tree.leaves(jax.device_get(tr.state["params"]))
+
+    tr2 = Trainer(model, tcfg, dcfg,
+                  ckpt=CheckpointManager(AsymStore(blade), full_every=5), seed=3)
+    start = tr2.resume()
+    assert start == 10  # last full version
+    tr2.run(TrainerConfig(total_steps=12), start_step=start)
+    got = jax.tree.leaves(jax.device_get(tr2.state["params"]))
+    for a, b in zip(ref, got):
+        assert np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_data_pipeline_deterministic_and_host_sharded():
+    d = DataConfig(vocab_size=100, global_batch=8, seq_len=16, n_hosts=2, host_id=0)
+    p0 = SyntheticPipeline(d)
+    p0b = SyntheticPipeline(d)
+    np.testing.assert_array_equal(p0.batch_at(7)["tokens"], p0b.batch_at(7)["tokens"])
+    p1 = SyntheticPipeline(DataConfig(vocab_size=100, global_batch=8, seq_len=16,
+                                      n_hosts=2, host_id=1))
+    assert not np.array_equal(p0.batch_at(7)["tokens"], p1.batch_at(7)["tokens"])
+    assert p0.local_batch == 4
+
+
+def test_grad_accumulation_matches_full_batch(tmp_path):
+    cfg = get_smoke_config("qwen1.5-0.5b", dtype="float32")
+    model = DecoderLM(cfg)
+    from repro.training import init_train_state, make_train_step
+
+    tc1 = TrainConfig(opt=OptConfig(lr=1e-3), accum_steps=1)
+    tc2 = TrainConfig(opt=OptConfig(lr=1e-3), accum_steps=2)
+    s1 = init_train_state(model, jax.random.PRNGKey(0), tc1)
+    s2 = init_train_state(model, jax.random.PRNGKey(0), tc2)
+    batch = model.sample_inputs(4, 16)
+    n1, m1 = make_train_step(model, tc1)(s1, batch)
+    n2, m2 = make_train_step(model, tc2)(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+    gn = float(m1["grad_norm"])
+    assert abs(gn - float(m2["grad_norm"])) < 1e-3 * gn  # fp-accumulation scale
+    # compare the optimizer's first moments (= the grads at step 1) rather
+    # than post-Adam params: Adam at step 1 turns +-1e-8 grad noise into
+    # +-lr sign flips, so param-level comparison is meaningless at any atol
+    g1 = jax.tree.leaves(n1["opt"])
+    g2 = jax.tree.leaves(n2["opt"])
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-6, rtol=2e-3)
+
+
+def test_grad_topk_sparsification_runs(tmp_path):
+    cfg, model, dcfg, tcfg, _, _ = _setup(tmp_path, grad_topk_frac=0.1)
+    tr = Trainer(model, tcfg, dcfg, seed=1)
+    tr.init()
+    assert "residual" in tr.state
+    out = tr.run(TrainerConfig(total_steps=16))
+    losses = [m["loss"] for m in out["metrics"]]
+    # sparse training is noisy at this scale: require stability (no blow-up)
+    # and a live error-feedback residual; learning-rate quality is covered by
+    # the dense-path tests
+    assert all(np.isfinite(l) for l in losses)
+    assert min(losses) < losses[0] + 0.05
+    res_norm = sum(float(np.abs(np.asarray(r)).sum())
+                   for r in jax.tree.leaves(tr.state["residual"]))
+    assert res_norm > 0
+
+
+def test_adafactor_memory_and_learning(tmp_path):
+    cfg, model, dcfg, _, _, _ = _setup(tmp_path)
+    tcfg = TrainConfig(opt=OptConfig(kind="adafactor", lr=1e-3,
+                                     momentum_dtype="bfloat16"))
+    tr = Trainer(model, tcfg, dcfg, seed=1)
+    tr.init()
+    # factored second moment: no full-size fp32 v for matrices
+    leaves = jax.tree_util.tree_flatten_with_path(tr.state["opt"])[0]
+    assert any("vr" in str(p) for p, _ in leaves)
+    out = tr.run(TrainerConfig(total_steps=16))
+    losses = [m["loss"] for m in out["metrics"]]
+    assert min(losses[-4:]) < losses[0]
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(tolerance=2.0)
+    for i in range(10):
+        w.observe(i, 0.1)
+    assert not w.observe(10, 0.15)
+    assert w.observe(11, 0.5)
+    assert w.events and w.events[0]["step"] == 11
+
+
+def test_serving_reads_and_hot_reloads_versions(tmp_path):
+    cfg, model, dcfg, tcfg, blade, mgr = _setup(tmp_path)
+    tr = Trainer(model, tcfg, dcfg, ckpt=mgr, seed=2)
+    tr.init()
+    tr.run(TrainerConfig(total_steps=11))
+    ro = CheckpointManager(AsymStore(blade))
+    eng = ServeEngine.load_from_store(model, ro, ServeConfig(batch_slots=4, max_new_tokens=6),
+                                      version=5)
+    assert eng.version == 5
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    toks, _ = eng.generate(prompts)
+    assert toks.shape == (3, 14)
+    v = eng.reload(ro)  # hot reload to latest (SWMR reader advancing)
+    assert v == 10
+    toks2, stats = eng.generate(prompts)
+    assert stats["version"] == 10
+
+
+def test_preemption_handler_commits_and_stops(tmp_path):
+    import signal
+
+    cfg, model, dcfg, tcfg, blade, mgr = _setup(tmp_path)
+    tr = Trainer(model, tcfg, dcfg, ckpt=mgr, seed=2)
+    tr.init()
+    tr.install_preemption_handler()
+    # simulate SIGTERM arriving after the first step
+    orig = tr._step_fn
+
+    def step_and_signal(state, batch):
+        os.kill(os.getpid(), signal.SIGTERM)
+        return orig(state, batch)
+
+    tr._step_fn = step_and_signal
+    out = tr.run(TrainerConfig(total_steps=50))
+    assert out["final_step"] == 1  # stopped after one step
+    store = AsymStore(blade)
+    assert store.latest_version() == 1  # preemption checkpoint committed
