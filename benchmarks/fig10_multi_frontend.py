@@ -15,15 +15,15 @@ PRELOAD = 10000
 OPS = 1500
 
 
-def run(n_frontends: int):
+def run(n_frontends: int, preload: int = PRELOAD, ops: int = OPS):
     be = NVMBackend(capacity=1 << 28)
     fes, trees, rngs = [], [], []
     for i in range(n_frontends):
         fe = FrontEnd(be, FEConfig.rcb(batch_ops=256,
-                                       cache_bytes=cache_bytes_for("bst", PRELOAD, 0.10)),
+                                       cache_bytes=cache_bytes_for("bst", preload, 0.10)),
                       fe_id=i)
         t = RemoteBST(fe, f"t{i}")
-        for k in random.Random(i).sample(range(1 << 24), PRELOAD):
+        for k in random.Random(i).sample(range(1 << 24), preload):
             t.insert(k, k)
         fe.drain(t.h)
         fe.clock.now = 0.0  # reset after preload
@@ -32,21 +32,21 @@ def run(n_frontends: int):
         trees.append(t)
         rngs.append(random.Random(50 + i))
     done = [0] * n_frontends
-    while any(d < OPS for d in done):
-        i = min((fes[i].clock.now, i) for i in range(n_frontends) if done[i] < OPS)[1]
+    while any(d < ops for d in done):
+        i = min((fes[i].clock.now, i) for i in range(n_frontends) if done[i] < ops)[1]
         k = rngs[i].randrange(1 << 24)
         trees[i].insert(k, k)
         done[i] += 1
     for fe, t in zip(fes, trees):
         fe.drain(t.h)
-    return [kops(OPS, fe.clock.now) for fe in fes]
+    return [kops(ops, fe.clock.now) for fe in fes]
 
 
-def main(counts=(1, 2, 4, 7)):
+def main(counts=(1, 2, 4, 7), preload: int = PRELOAD, ops: int = OPS):
     base = None
     out = {}
     for n in counts:
-        tputs = run(n)
+        tputs = run(n, preload, ops)
         avg = sum(tputs) / n
         if base is None:
             base = avg

@@ -35,33 +35,33 @@ class FEDrivenReplicationFrontEnd(FrontEnd):
             self.clock.advance(self.cost.rtt_ns)  # wait mirror ack before return
 
 
-def _bench(fe_cls, mirrors: int):
+def _bench(fe_cls, mirrors: int, preload: int = PRELOAD, ops: int = OPS):
     be = NVMBackend(capacity=1 << 28, num_mirrors=mirrors)
     fe = fe_cls(be, FEConfig.rcb(batch_ops=256,
-                                 cache_bytes=cache_bytes_for("bst", PRELOAD, 0.10)))
+                                 cache_bytes=cache_bytes_for("bst", preload, 0.10)))
     t = RemoteBST(fe, "t")
-    for k in random.Random(0).sample(range(1 << 24), PRELOAD):
+    for k in random.Random(0).sample(range(1 << 24), preload):
         t.insert(k, k)
     fe.drain(t.h)
     start_fe, start_be = fe.clock.now, be.clock.now
     fe.busy_ns = 0.0
     rng = random.Random(3)
-    for _ in range(OPS):
+    for _ in range(ops):
         k = rng.randrange(1 << 24)
         t.insert(k, k)
     fe.drain(t.h)
     elapsed = fe.clock.now - start_fe
     return {
-        "kops": kops(OPS, elapsed),
+        "kops": kops(ops, elapsed),
         "fe_busy": fe.busy_ns / elapsed,
         "be_busy": (be.clock.now - start_be) / elapsed,
     }
 
 
-def main():
-    blade_rep = _bench(FrontEnd, mirrors=1)
-    no_rep = _bench(FrontEnd, mirrors=0)
-    fe_rep = _bench(FEDrivenReplicationFrontEnd, mirrors=0)
+def main(preload: int = PRELOAD, ops: int = OPS):
+    blade_rep = _bench(FrontEnd, mirrors=1, preload=preload, ops=ops)
+    no_rep = _bench(FrontEnd, mirrors=0, preload=preload, ops=ops)
+    fe_rep = _bench(FEDrivenReplicationFrontEnd, mirrors=0, preload=preload, ops=ops)
     overhead_blade = 1 - blade_rep["kops"] / no_rep["kops"]
     overhead_fe = 1 - fe_rep["kops"] / no_rep["kops"]
     print(f"fig11 no-replication : {no_rep['kops']:8.1f} KOPS  "

@@ -25,11 +25,12 @@ def _preload_keys(n):
     return random.Random(0).sample(range(1 << 24), n)
 
 
-def run_mode(mode: str, n_readers: int) -> Dict[str, float]:
+def run_mode(mode: str, n_readers: int, preload: int = PRELOAD,
+             writer_ops: int = WRITER_OPS, reader_ops: int = READER_OPS) -> Dict[str, float]:
     be = NVMBackend(capacity=1 << 28)
     wfe = FrontEnd(be, FEConfig.rcb(batch_ops=256,
-                                    cache_bytes=cache_bytes_for("bst", PRELOAD, 0.10)))
-    keys = _preload_keys(PRELOAD)
+                                    cache_bytes=cache_bytes_for("bst", preload, 0.10)))
+    keys = _preload_keys(preload)
     if mode == "lock":
         tree = RemoteBST(wfe, "t")
         for k in keys:
@@ -42,7 +43,7 @@ def run_mode(mode: str, n_readers: int) -> Dict[str, float]:
 
     readers = []
     for i in range(n_readers):
-        rfe = FrontEnd(be, FEConfig.rc(cache_bytes=cache_bytes_for("bst", PRELOAD, 0.10)),
+        rfe = FrontEnd(be, FEConfig.rc(cache_bytes=cache_bytes_for("bst", preload, 0.10)),
                        fe_id=i + 1)
         rfe.clock.now = wfe.clock.now  # readers join at the writer's epoch
         if mode == "lock":
@@ -83,7 +84,7 @@ def run_mode(mode: str, n_readers: int) -> Dict[str, float]:
         """Run writer ops that temporally overlap a reader's critical
         section (virtual-time-faithful interleaving)."""
         nonlocal w_done
-        while w_done < WRITER_OPS and wfe.clock.now < t:
+        while w_done < writer_ops and wfe.clock.now < t:
             writer_step()
 
     def reader_step(i):
@@ -108,12 +109,12 @@ def run_mode(mode: str, n_readers: int) -> Dict[str, float]:
         r_done[i] += 1
 
     # virtual-time-ordered interleaving
-    while w_done < WRITER_OPS or any(r < READER_OPS for r in r_done):
+    while w_done < writer_ops or any(r < reader_ops for r in r_done):
         candidates = []
-        if w_done < WRITER_OPS:
+        if w_done < writer_ops:
             candidates.append((wfe.clock.now, "w", 0))
         for i in range(n_readers):
-            if r_done[i] < READER_OPS:
+            if r_done[i] < reader_ops:
                 candidates.append((readers[i][0].clock.now, "r", i))
         _, kind, idx = min(candidates)
         if kind == "w":
@@ -122,8 +123,8 @@ def run_mode(mode: str, n_readers: int) -> Dict[str, float]:
             reader_step(idx)
     wfe.drain(tree.h)
 
-    writer_kops = kops(WRITER_OPS, wfe.clock.now)
-    reader_kops = [kops(READER_OPS, readers[i][0].clock.now) for i in range(n_readers)]
+    writer_kops = kops(writer_ops, wfe.clock.now)
+    reader_kops = [kops(reader_ops, readers[i][0].clock.now) for i in range(n_readers)]
     return {
         "writer_kops": writer_kops,
         "reader_kops_avg": sum(reader_kops) / max(len(reader_kops), 1) if reader_kops else 0.0,
@@ -132,12 +133,13 @@ def run_mode(mode: str, n_readers: int) -> Dict[str, float]:
     }
 
 
-def main(reader_counts=(1, 2, 4, 6)):
+def main(reader_counts=(1, 2, 4, 6), preload: int = PRELOAD,
+         writer_ops: int = WRITER_OPS, reader_ops: int = READER_OPS):
     out = {}
     for mode in ("lock", "mv"):
         rows = {}
         for n in reader_counts:
-            rows[n] = run_mode(mode, n)
+            rows[n] = run_mode(mode, n, preload, writer_ops, reader_ops)
             r = rows[n]
             print(f"fig9 {mode:4s} readers={n}: writer={r['writer_kops']:8.1f} KOPS "
                   f"reader_avg={r['reader_kops_avg']:8.1f} KOPS retry={r['retry_frac']*100:5.1f}%")

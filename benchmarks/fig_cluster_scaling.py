@@ -1,0 +1,177 @@
+"""Cluster scaling + availability: the repro.cluster headline figures.
+
+Panel A (scaling): aggregate write throughput of N front-ends hammering a
+sharded hash table as the blade count grows 1 -> 8.  A single blade's NIC is
+a serializing resource (epoch-bucketed capacity in repro.core.sim.Link), so
+one blade saturates; spreading the shard map over more blades multiplies the
+available link capacity and aggregate KOPS climbs — the pooled-deployment
+argument of paper §4.3.
+
+Panel B (availability): a 4-blade cluster under steady multi-front-end load
+loses one blade permanently mid-run.  The trace shows per-time-bucket
+aggregate throughput: a dip while the first front-end to hit the dead blade
+promotes its mirror (log-tail replay + directory epoch bump + full rebind),
+then recovery to steady state — with every committed op still readable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+from typing import Dict, List
+
+from repro.cluster import ClusterFrontEnd, NVMCluster, ShardedHashTable
+from repro.core import FEConfig
+
+from .common import kops
+
+N_SHARDS = 16
+KEYSPACE = 1 << 22
+
+
+def _make_fleet(cluster: NVMCluster, n_frontends: int, n_buckets: int):
+    cfes, tables, rngs = [], [], []
+    for i in range(n_frontends):
+        # rc with a per-op durable op-log round and a deliberately tiny cache:
+        # every op pays remote reads + a sync flush, so aggregate load presses
+        # directly on the blades' NIC (the resource that multiplies with blade
+        # count) instead of being front-end-CPU-bound
+        cfe = ClusterFrontEnd(
+            cluster, FEConfig.rc(cache_bytes=4096, oplog_pipeline=1), fe_id=i
+        )
+        t = ShardedHashTable(cfe, f"t{i}", n_buckets=n_buckets)
+        cfes.append(cfe)
+        tables.append(t)
+        rngs.append(random.Random(1000 + i))
+    return cfes, tables, rngs
+
+
+def _reset_clocks(cluster: NVMCluster, cfes: List[ClusterFrontEnd]) -> None:
+    for be in cluster.blades.values():
+        be.link.reset()
+    for cfe in cfes:
+        cfe.clock.now = 0.0
+        for fe in cfe.fes.values():
+            fe.clock.now = 0.0
+
+
+def run_scaling(n_blades: int, n_frontends: int = 16, preload: int = 400,
+                ops: int = 600) -> Dict[str, float]:
+    cluster = NVMCluster(n_blades=n_blades, capacity_per_blade=1 << 26,
+                         n_shards=N_SHARDS)
+    cfes, tables, rngs = _make_fleet(cluster, n_frontends,
+                                     n_buckets=max(256, preload // 2))
+    for i, (t, rng) in enumerate(zip(tables, rngs)):
+        for k in rng.sample(range(KEYSPACE), preload):
+            t.put(k, k)
+        t.drain()
+    _reset_clocks(cluster, cfes)
+    # interleave front-ends in virtual-time order (smallest clock goes next)
+    done = [0] * n_frontends
+    while any(d < ops for d in done):
+        i = min((cfes[i].clock.now, i)
+                for i in range(n_frontends) if done[i] < ops)[1]
+        k = rngs[i].randrange(KEYSPACE)
+        tables[i].put(k, k)
+        done[i] += 1
+    for t in tables:
+        t.drain()
+    per_client = [kops(ops, cfe.clock.now) for cfe in cfes]
+    return {
+        "aggregate_kops": sum(per_client),
+        "per_client_kops": sum(per_client) / n_frontends,
+    }
+
+
+def run_availability(n_blades: int = 4, n_frontends: int = 16, preload: int = 300,
+                     ops: int = 800, kill_at_frac: float = 0.4,
+                     bucket_ns: float = 5e5) -> Dict:
+    """Kill one blade permanently mid-workload; trace bucketed throughput."""
+    cluster = NVMCluster(n_blades=n_blades, capacity_per_blade=1 << 26,
+                         n_shards=N_SHARDS)
+    cfes, tables, rngs = _make_fleet(cluster, n_frontends,
+                                     n_buckets=max(256, preload // 2))
+    models: List[Dict[int, int]] = [dict() for _ in range(n_frontends)]
+    for i, (t, rng) in enumerate(zip(tables, rngs)):
+        for k in rng.sample(range(KEYSPACE), preload):
+            t.put(k, k)
+            models[i][k] = k
+        t.drain()
+    _reset_clocks(cluster, cfes)
+
+    victim = n_blades - 1
+    kill_at = int(ops * n_frontends * kill_at_frac)
+    completions: List[float] = []
+    kill_time = None
+    done = [0] * n_frontends
+    total = 0
+    while any(d < ops for d in done):
+        i = min((cfes[i].clock.now, i)
+                for i in range(n_frontends) if done[i] < ops)[1]
+        k = rngs[i].randrange(KEYSPACE)
+        tables[i].put(k, k + 1)
+        models[i][k] = k + 1
+        done[i] += 1
+        total += 1
+        completions.append(cfes[i].clock.now)
+        if total == kill_at:
+            cluster.blades[victim].fail_permanently()
+            kill_time = max(cfe.clock.now for cfe in cfes)
+    for t in tables:
+        t.drain()
+    # every committed op survived the failover
+    lost = 0
+    for t, model in zip(tables, models):
+        got = dict(t.items())
+        lost += sum(1 for k, v in model.items() if got.get(k) != v)
+    # bucketed aggregate throughput trace
+    horizon = max(completions)
+    n_buckets = int(horizon // bucket_ns) + 1
+    trace = [0] * n_buckets
+    for c in completions:
+        trace[int(c // bucket_ns)] += 1
+    return {
+        "trace_kops": [n / (bucket_ns / 1e6) for n in trace],  # ops/ms == KOPS
+        "bucket_ms": bucket_ns / 1e6,
+        "kill_bucket": int(kill_time // bucket_ns),
+        "failovers": cluster.failovers,
+        "lost_committed": lost,
+        "epoch": cluster.directory.epoch,
+    }
+
+
+def main(blades=(1, 2, 4, 8), n_frontends: int = 16, preload: int = 400,
+         ops: int = 600, availability: bool = True):
+    out = {"scaling": {}, "availability": None}
+    prev = 0.0
+    for n in blades:
+        r = run_scaling(n, n_frontends, preload, ops)
+        out["scaling"][n] = r
+        arrow = "^" if r["aggregate_kops"] >= prev else "v"
+        prev = r["aggregate_kops"]
+        print(f"cluster blades={n}: aggregate={r['aggregate_kops']:9.1f} KOPS "
+              f"per-client={r['per_client_kops']:8.1f} KOPS {arrow}")
+    if availability:
+        a = run_availability(n_blades=max(2, min(4, max(blades))),
+                             n_frontends=n_frontends,
+                             preload=max(100, preload // 2), ops=ops)
+        out["availability"] = a
+        print(f"cluster availability: failovers={a['failovers']} "
+              f"lost_committed={a['lost_committed']} epoch={a['epoch']}")
+        kb = a["kill_bucket"]
+        for j, v in enumerate(a["trace_kops"]):
+            mark = "  <- blade killed" if j == kb else ""
+            print(f"  t={j * a['bucket_ms']:7.1f}ms  {v:8.1f} KOPS{mark}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: full run in seconds")
+    ap.add_argument("--frontends", type=int, default=16)
+    args = ap.parse_args()
+    if args.smoke:
+        main(blades=(1, 2, 4), n_frontends=args.frontends, preload=150, ops=250)
+    else:
+        main(n_frontends=args.frontends)

@@ -48,19 +48,21 @@ def fig12_workloads(preload=20000, n_ops=2000,
     return out
 
 
-def main():
+def main(preload: int = 20000, n_ops: int = 2000, batches=None, fracs=None,
+         write_fracs=None):
     print("== Fig 7: throughput (KOPS) vs batch size ==")
-    f7 = fig7_batch_sweep()
+    f7 = fig7_batch_sweep(preload, n_ops, *([batches] if batches else []))
     for s, row in f7.items():
         print(f"{s:10s} " + " ".join(f"{b}:{v:8.1f}" for b, v in row.items()))
-        gain = row[1024] / row[1]
-        print(f"{'':10s} batch1024/batch1 = {gain:.2f}x")
+        b_lo, b_hi = min(row), max(row)
+        gain = row[b_hi] / row[b_lo]
+        print(f"{'':10s} batch{b_hi}/batch{b_lo} = {gain:.2f}x")
     print("== Fig 8: throughput (KOPS) vs cache size (fraction of data) ==")
-    f8 = fig8_cache_sweep()
+    f8 = fig8_cache_sweep(preload, n_ops, *([fracs] if fracs else []))
     for s, row in f8.items():
         print(f"{s:10s} " + " ".join(f"{int(f*100)}%:{v:8.1f}" for f, v in row.items()))
     print("== Fig 12: throughput (KOPS) vs write fraction ==")
-    f12 = fig12_workloads()
+    f12 = fig12_workloads(preload, n_ops, *([write_fracs] if write_fracs else []))
     for s, row in f12.items():
         print(f"{s:10s} " + " ".join(f"w{int(wf*100)}%:{v:8.1f}" for wf, v in row.items()))
     return {"fig7": f7, "fig8": f8, "fig12": f12}

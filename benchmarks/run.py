@@ -3,6 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV lines (us_per_call is virtual
 microseconds per operation on the paper's fabric model; derived is the
 headline ratio the paper reports for that experiment).
+
+``--smoke`` shrinks every experiment to toy sizes so the whole suite —
+every figure script end to end, including the cluster scaling/availability
+runs — finishes in under a minute; CI uses it to keep all benchmark code
+paths exercised.
 """
 
 from __future__ import annotations
@@ -14,11 +19,18 @@ import sys
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller sizes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: every figure end-to-end in under a minute")
     ap.add_argument("--only", default=None,
-                    help="comma list: table2,table3,fig7,fig9,fig10,fig11,apps")
+                    help="comma list: table2,table3,fig7,fig9,fig10,fig11,apps,cluster")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
-    preload, n_ops = (8000, 1200) if args.quick else (15000, 2500)
+    if args.smoke:
+        preload, n_ops = (400, 120)
+    elif args.quick:
+        preload, n_ops = (8000, 1200)
+    else:
+        preload, n_ops = (15000, 2500)
 
     csv = []
 
@@ -30,7 +42,7 @@ def main(argv=None) -> None:
 
     if want("table2"):
         from .table2_allocators import main as t2
-        rows = t2()
+        rows = t2(n=1500 if args.smoke else 20000)
         emit("table2_two_tier_1024_alloc", 1.0 / rows["two-tier-1024"][0],
              f"vs_pmem={rows['two-tier-1024'][0] / rows['pmem'][0]:.2f}x")
 
@@ -48,14 +60,19 @@ def main(argv=None) -> None:
 
     if want("fig7"):
         from .fig_sweeps import main as sweeps
-        out = sweeps()
+        if args.smoke:
+            out = sweeps(preload=preload, n_ops=n_ops, batches=(1, 1024),
+                         fracs=(0.10, 1.0), write_fracs=(1.0, 0.5))
+        else:
+            out = sweeps(preload=preload, n_ops=n_ops)
         row = out["fig7"]["mv_bst"]
         emit("fig7_mvbst_batch1024", 1e3 / row[1024],
              f"batch_gain={row[1024]/row[1]:.2f}x_paper=3.38x")
 
     if want("fig9"):
         from .fig9_scalability import main as f9
-        out = f9(reader_counts=(1, 6))
+        out = f9(reader_counts=(1, 6), preload=preload,
+                 writer_ops=n_ops, reader_ops=n_ops)
         lock6, mv6 = out["lock"][6], out["mv"][6]
         emit("fig9_mv_reader_advantage", 1e3 / mv6["reader_kops_avg"],
              f"mv_vs_lock_readers={mv6['reader_kops_avg']/lock6['reader_kops_avg']:.2f}x_paper=3.0-3.2x")
@@ -66,26 +83,46 @@ def main(argv=None) -> None:
 
     if want("fig10"):
         from .fig10_multi_frontend import main as f10
-        out = f10(counts=(1, 7))
+        out = f10(counts=(1, 7), preload=min(preload, 10000), ops=n_ops)
         emit("fig10_7_frontends", 1e3 / out[7]["per_client_kops"],
              f"degradation={out[7]['degradation']*100:.0f}%_paper=7-20%")
 
     if want("fig11"):
         from .fig11_replication_cpu import main as f11
-        out = f11()
+        out = f11(preload=min(preload, 10000), ops=n_ops)
         emit("fig11_blade_replication", 0.0,
              f"overhead={out['overhead_blade']*100:.1f}%_fe_driven={out['overhead_fe']*100:.1f}%")
+
+    if want("cluster"):
+        from .fig_cluster_scaling import main as fcluster
+        if args.smoke:
+            out = fcluster(blades=(1, 2, 4), preload=80, ops=150)
+        elif args.quick:
+            out = fcluster(blades=(1, 2, 4), preload=250, ops=400)
+        else:
+            out = fcluster()
+        scaling = out["scaling"]
+        lo, hi = min(scaling), max(scaling)
+        gain = scaling[hi]["aggregate_kops"] / scaling[lo]["aggregate_kops"]
+        emit(f"cluster_scaling_{hi}_blades",
+             1e3 / scaling[hi]["per_client_kops"],
+             f"aggregate_gain_{lo}to{hi}={gain:.2f}x")
+        a = out["availability"]
+        emit("cluster_availability", 0.0,
+             f"failovers={a['failovers']}_lost_committed={a['lost_committed']}")
 
     if want("apps"):
         from .common import kops, make_fe
         from repro.core.apps import SmallBank, TATP
-        for name, mk in [("smallbank", lambda fe: SmallBank(fe, "sb", n_accounts=50000)),
-                         ("tatp", lambda fe: TATP(fe, "tp", n_subscribers=5000))]:
+        accounts = 1000 if args.smoke else 50000
+        subscribers = 300 if args.smoke else 5000
+        for name, mk in [("smallbank", lambda fe: SmallBank(fe, "sb", n_accounts=accounts)),
+                         ("tatp", lambda fe: TATP(fe, "tp", n_subscribers=subscribers))]:
             for variant in ("sym", "naive", "r", "rc"):
                 fe = make_fe(variant)
                 app = mk(fe)
                 if name == "tatp":
-                    app.populate(5000)
+                    app.populate(subscribers)
                 t0 = fe.clock.now
                 app.run_mix(n_ops, write_frac=1.0, seed=1)
                 (fe.drain(app.h) if name == "smallbank" else app.drain())

@@ -19,45 +19,45 @@ ALLOC_SIZE = 32
 N = 20000
 
 
-def _two_tier(slab: int):
+def _two_tier(slab: int, n: int = N):
     be = NVMBackend(capacity=1 << 26, block_size=slab)
     fe = FrontEnd(be, FEConfig.rcb())
     t0 = fe.clock.now
-    addrs = [fe.alloc(ALLOC_SIZE) for _ in range(N)]
+    addrs = [fe.alloc(ALLOC_SIZE) for _ in range(n)]
     t_alloc = fe.clock.now - t0
     t0 = fe.clock.now
     for a in addrs:
         fe.free(a)
     t_free = fe.clock.now - t0
-    return N / t_alloc * 1e3, N / t_free * 1e3  # MOPS
+    return n / t_alloc * 1e3, n / t_free * 1e3  # MOPS
 
 
-def _rpc():
+def _rpc(n: int = N):
     """Every alloc/free is a round-trip RPC to the blade."""
     be = NVMBackend(capacity=1 << 26, block_size=64)
     fe = FrontEnd(be, FEConfig.rcb())
     t0 = fe.clock.now
-    addrs = [fe._backend_alloc(1) for _ in range(N)]
+    addrs = [fe._backend_alloc(1) for _ in range(n)]
     t_alloc = fe.clock.now - t0
     t0 = fe.clock.now
     for a in addrs:
         fe._backend_free(a, 1)
     t_free = fe.clock.now - t0
-    return N / t_alloc * 1e3, N / t_free * 1e3
+    return n / t_alloc * 1e3, n / t_free * 1e3
 
 
-def run():
+def run(n: int = N):
     rows = {}
     rows["glibc"] = (1e3 / 48.0, 1e3 / 18.0)          # ~48ns malloc, ~18ns free
     rows["pmem"] = (1e3 / 700.0, 1e3 / 720.0)         # persistent allocator latency
-    rows["rpc"] = _rpc()
-    rows["two-tier-128"] = _two_tier(128)
-    rows["two-tier-1024"] = _two_tier(1024)
+    rows["rpc"] = _rpc(n)
+    rows["two-tier-128"] = _two_tier(128, n)
+    rows["two-tier-1024"] = _two_tier(1024, n)
     return rows
 
 
-def main():
-    rows = run()
+def main(n: int = N):
+    rows = run(n)
     print(f"{'allocator':16s}{'alloc MOPS':>12s}{'free MOPS':>12s}{'paper':>16s}")
     for name, (a, f) in rows.items():
         pa, pf = PAPER[name]

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a benchmark smoke pass.
+#
+#   scripts/test.sh            tier-1 suite, then every figure script end to
+#                              end at --smoke sizes (< ~1 min)
+#   scripts/test.sh --no-bench tier-1 suite only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== benchmark smoke: every figure script, tiny sizes =="
+    python -m benchmarks.run --smoke
+fi

@@ -1,0 +1,130 @@
+"""The cluster shard directory: an epoch-versioned, hash-partitioned
+key -> shard -> blade map.
+
+The directory is tiny control-plane state, but it must survive any single
+blade failure and be discoverable by a front-end that knows nothing except
+the blade addresses.  So every mutation is re-persisted — as one checksummed
+blob under the well-known name ``cluster.directory`` — to *every* live
+blade's naming/heap area, and bootstrap reads all blades and keeps the
+highest valid epoch (a newly promoted mirror carries the epoch that was
+current when it was last replicated to, so the maximum wins).
+
+Epochs order reconfigurations: failover promotions and shard migrations bump
+the epoch, and every front-end validates its cached epoch against the
+authoritative one before routing an op (the simulator's stand-in for an
+epoch-in-every-RPC scheme a la Tsai & Zhang's disaggregated-PM stores).
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Optional
+
+from ..core.backend import NVMBackend
+from ..core.oplog import fletcher64
+from ..core.structures.base import mix64
+
+DIRECTORY_NAME = "cluster.directory"
+_MAGIC = 0x52444952  # "RDIR"
+_HEADER = struct.Struct("<IQII")  # magic, epoch, n_shards, n_blades
+
+
+class ShardDirectory:
+    """Hash-partitioned shard map with epoch versioning."""
+
+    def __init__(self, n_shards: int, blades: List[int],
+                 assignment: Optional[Dict[int, int]] = None, epoch: int = 0):
+        self.n_shards = n_shards
+        self.blades = list(blades)            # blade ids participating
+        self.epoch = epoch
+        if assignment is None:
+            # round-robin initial placement over the member blades
+            assignment = {s: blades[s % len(blades)] for s in range(n_shards)}
+        self.assignment = dict(assignment)     # shard -> blade id
+
+    # ------------------------------------------------------------- routing
+    def shard_of(self, key: int) -> int:
+        return mix64(key & 0xFFFFFFFFFFFFFFFF) % self.n_shards
+
+    def blade_of(self, shard: int) -> int:
+        return self.assignment[shard]
+
+    def blade_for_key(self, key: int) -> int:
+        return self.assignment[self.shard_of(key)]
+
+    def shards_on(self, blade_id: int) -> List[int]:
+        return [s for s, b in self.assignment.items() if b == blade_id]
+
+    # ------------------------------------------------------- reconfiguration
+    def bump_epoch(self) -> int:
+        self.epoch += 1
+        return self.epoch
+
+    def assign(self, shard: int, blade_id: int) -> None:
+        if blade_id not in self.blades:
+            raise ValueError(f"blade {blade_id} is not a cluster member")
+        self.assignment[shard] = blade_id
+
+    def add_blade(self, blade_id: int) -> None:
+        if blade_id not in self.blades:
+            self.blades.append(blade_id)
+
+    def load_counts(self) -> Dict[int, int]:
+        counts = {b: 0 for b in self.blades}
+        for b in self.assignment.values():
+            counts[b] = counts.get(b, 0) + 1
+        return counts
+
+    # ----------------------------------------------------------- wire format
+    def encode(self) -> bytes:
+        body = _HEADER.pack(_MAGIC, self.epoch, self.n_shards, len(self.blades))
+        body += struct.pack(f"<{len(self.blades)}I", *self.blades)
+        ids = [self.assignment[s] for s in range(self.n_shards)]
+        body += struct.pack(f"<{self.n_shards}I", *ids)
+        return body + struct.pack("<Q", fletcher64(body))
+
+    @classmethod
+    def decode(cls, raw: bytes) -> Optional["ShardDirectory"]:
+        if len(raw) < _HEADER.size + 8:
+            return None
+        body, (csum,) = raw[:-8], struct.unpack("<Q", raw[-8:])
+        if fletcher64(body) != csum:
+            return None  # torn directory write: caller falls back to peers
+        magic, epoch, n_shards, n_blades = _HEADER.unpack_from(body, 0)
+        if magic != _MAGIC:
+            return None
+        off = _HEADER.size
+        blades = list(struct.unpack_from(f"<{n_blades}I", body, off))
+        off += 4 * n_blades
+        ids = struct.unpack_from(f"<{n_shards}I", body, off)
+        assignment = {s: ids[s] for s in range(n_shards)}
+        return cls(n_shards, blades, assignment, epoch)
+
+    # ------------------------------------------------------------ persistence
+    def persist(self, blades: Dict[int, NVMBackend]) -> int:
+        """Write the directory blob to every live blade; returns how many
+        copies landed (quorum-free: any one surviving copy bootstraps)."""
+        raw = self.encode()
+        landed = 0
+        for be in blades.values():
+            if not be.alive:
+                continue
+            be.put_blob(DIRECTORY_NAME, raw)
+            landed += 1
+        return landed
+
+    @classmethod
+    def bootstrap(cls, blades: Dict[int, NVMBackend]) -> Optional["ShardDirectory"]:
+        """Recover the directory from bytes alone: read every reachable
+        blade's copy, keep the highest valid epoch."""
+        best: Optional[ShardDirectory] = None
+        for be in blades.values():
+            if not be.alive:
+                continue
+            raw = be.get_blob(DIRECTORY_NAME)
+            if raw is None:
+                continue
+            d = cls.decode(raw)
+            if d is not None and (best is None or d.epoch > best.epoch):
+                best = d
+        return best

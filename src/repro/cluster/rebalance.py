@@ -1,0 +1,141 @@
+"""Online shard migration: copy + op-log catch-up + epoch swap.
+
+Elastic scale-out (ROADMAP: "grow capacity by adding blades") moves shards
+onto new blades *while writes keep landing*:
+
+  1. **Snapshot copy** — drain the source shard (its data area now reflects
+     every acked op, watermarked by the shard's op-sequence number), then
+     bulk-copy its items into a same-named structure on the destination
+     blade.
+  2. **Log-replay catch-up** — ops that raced with the copy are sitting in
+     the source's op-log area with sequence numbers above the snapshot
+     watermark; replay just that tail onto the destination through the
+     structure's own REPLAY table (the same machinery front-end crash
+     recovery uses).
+  3. **Epoch swap** — flip the directory assignment, bump the epoch, and
+     re-persist the directory to every blade.  Every front-end's next op
+     sees the stale epoch, rebinds, and routes to the destination; the
+     source copy is left behind as a tombstoned cold replica.
+
+The catch-up window is observable in tests via the ``during_copy`` hook,
+which runs after the snapshot and before catch-up — the simulator's stand-in
+for concurrent front-ends writing mid-migration.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Callable, Dict, Optional
+
+from ..core.backend import CrashError
+from ..core.oplog import OpLog, decode_oplogs
+from .sharded import ShardedStructure
+
+
+def _copy_op(obj) -> Callable[[int, int], None]:
+    return obj.put if hasattr(obj, "put") else obj.insert
+
+
+def migrate_shard(
+    sharded: ShardedStructure,
+    shard: int,
+    dst_blade: int,
+    during_copy: Optional[Callable[[], None]] = None,
+) -> Dict[str, int]:
+    """Move one shard of `sharded` to `dst_blade`; returns migration stats."""
+    cfe = sharded.cfe
+    cluster = cfe.cluster
+    directory = cluster.directory
+    if dst_blade not in cluster.blades or not cluster.blades[dst_blade].alive:
+        raise CrashError(f"destination blade {dst_blade} unavailable")
+    cfe.ensure_fresh()
+    src_blade = directory.blade_of(shard)
+    stats = {"shard": shard, "src": src_blade, "dst": dst_blade,
+             "copied": 0, "caught_up": 0}
+    if src_blade == dst_blade:
+        return stats
+
+    src_obj = sharded._get_shard(shard, create_if_missing=False)
+    if src_obj is not None:
+        # -- 1. snapshot copy --------------------------------------------
+        src_fe = src_obj.fe
+        src_fe.clock.advance_to(cfe.clock.now)
+        src_fe.drain(src_obj.h)
+        snapshot_seq = src_obj.h.seq
+        items = src_obj.items()
+        cfe.clock.advance_to(src_fe.clock.now)
+
+        dst_fe = cfe.fe_for_blade(dst_blade)
+        dst_fe.clock.advance_to(cfe.clock.now)
+        dst_obj = sharded._create(dst_fe, sharded._shard_name(shard))
+        copy = _copy_op(dst_obj)
+        for k, v in items:
+            copy(k, v)
+        dst_fe.drain(dst_obj.h)
+        cfe.clock.advance_to(dst_fe.clock.now)
+        stats["copied"] = len(items)
+
+        # -- simulated concurrent writes during the copy window ----------
+        if during_copy is not None:
+            during_copy()
+
+        # -- 2. op-log catch-up ------------------------------------------
+        # quiesce barrier: force every registered front-end to flush its
+        # staged channel to the source blade, so acked-but-unflushed writes
+        # (e.g. ops sitting inside an op-log group window) reach the source
+        # op log before we read the catch-up tail — otherwise they would be
+        # silently drained to the tombstoned source after the epoch swap
+        cluster.quiesce_blade(src_blade)
+        # re-read the source op log: entries past the snapshot watermark
+        # arrived mid-copy (from any front-end sharing this shard)
+        src_fe.clock.advance_to(cfe.clock.now)
+        raw = src_obj.h.oplog_area.read_all()
+        tail = []
+        for e in decode_oplogs(raw):
+            (seq,) = struct.unpack_from("<Q", e.payload, 0)
+            if seq > snapshot_seq:
+                tail.append(OpLog(e.op, e.payload[8:]))
+        cfe.clock.advance_to(src_fe.clock.now)
+        if tail:
+            dst_fe.clock.advance_to(cfe.clock.now)
+            dst_obj.replay(tail)
+            dst_fe.drain(dst_obj.h)
+            cfe.clock.advance_to(dst_fe.clock.now)
+        stats["caught_up"] = len(tail)
+
+        # tombstone the source copy (cold replica; space reclaim is a
+        # ROADMAP follow-up)
+        cluster.blades[src_blade].set_name(
+            f"{sharded._shard_name(shard)}.moved_to", dst_blade
+        )
+        sharded._shards.pop(shard, None)
+    elif during_copy is not None:
+        during_copy()
+
+    # -- 3. epoch swap ----------------------------------------------------
+    directory.assign(shard, dst_blade)
+    directory.bump_epoch()
+    directory.persist(cluster.blades)
+    cluster.migrations += 1
+    return stats
+
+
+def rebalance(sharded: ShardedStructure) -> Dict[int, int]:
+    """Even out shard placement across live blades (used after add_blade):
+    repeatedly move a shard from the most- to the least-loaded blade until
+    the spread is <= 1.  Returns {shard: dst_blade} for every move."""
+    cluster = sharded.cfe.cluster
+    directory = cluster.directory
+    moves: Dict[int, int] = {}
+    while True:
+        counts = {
+            b: n for b, n in directory.load_counts().items()
+            if cluster.blades[b].alive
+        }
+        hi = max(counts, key=lambda b: (counts[b], b))
+        lo = min(counts, key=lambda b: (counts[b], b))
+        if counts[hi] - counts[lo] <= 1:
+            return moves
+        shard = min(directory.shards_on(hi))
+        migrate_shard(sharded, shard, lo)
+        moves[shard] = lo

@@ -1,0 +1,236 @@
+"""Cluster control plane and front-end-side router.
+
+``NVMCluster`` is the pool of passive blades plus the authoritative shard
+directory (paper §4.3: blades "can be shared by multiple servers" and
+mirrored for availability).  It owns no data path — blades stay passive —
+but it is where reconfiguration (failover, scale-out, migration) is
+serialized and the directory epoch is bumped.
+
+``ClusterFrontEnd`` is one client machine talking to *many* blades: it owns
+one ``FrontEnd`` (cache + write buffer + allocator + log channels) per blade,
+so the R/C/B optimizations of the single-blade design compose per shard, and
+memory-log / op-log flushes fan out per blade instead of funneling through
+one NIC.  A local virtual clock serializes the client's own ops across
+blades while leaving different clients free to hit different blades'
+links concurrently — which is exactly where the aggregate-bandwidth win of a
+multi-blade cluster comes from (fig_cluster_scaling).
+
+Staleness protocol: every data-path entry point calls ``ensure_fresh()``;
+if the cached directory epoch is behind the authoritative one, staged state
+on healthy blades is drained, all per-blade front-ends are rebound, and the
+caller re-resolves its shard — the simulator equivalent of carrying the
+epoch in every RPC and bouncing mismatches.
+"""
+
+from __future__ import annotations
+
+import weakref
+from typing import Callable, Dict, List, Optional
+
+from ..core.backend import CrashError, NVMBackend
+from ..core.frontend import FEConfig, FrontEnd
+from ..core.sim import Clock, CostModel
+from .directory import ShardDirectory
+from .failover import promote_blade
+
+
+class NVMCluster:
+    """A pool of NVM blades + the authoritative, epoch-versioned directory."""
+
+    def __init__(
+        self,
+        n_blades: int = 2,
+        capacity_per_blade: int = 1 << 26,
+        block_size: int = 256,
+        cost: Optional[CostModel] = None,
+        num_mirrors: int = 1,
+        n_shards: int = 16,
+        name_slots: int = 1 << 13,
+    ):
+        self.cost = cost or CostModel()
+        self.capacity_per_blade = capacity_per_blade
+        self.block_size = block_size
+        self.num_mirrors = num_mirrors
+        # cluster blades host many shard-sized structures, each burning a
+        # dozen naming slots, so they get a much larger naming table than a
+        # standalone blade's 512 slots
+        self.name_slots = name_slots
+        self.blades: Dict[int, NVMBackend] = {
+            i: NVMBackend(
+                capacity_per_blade,
+                block_size,
+                self.cost,
+                num_mirrors=num_mirrors,
+                blade_id=i,
+                name_slots=name_slots,
+            )
+            for i in range(n_blades)
+        }
+        self.directory = ShardDirectory(n_shards, sorted(self.blades))
+        self.directory.persist(self.blades)
+        self.failovers = 0
+        self.migrations = 0
+        self._frontends: List["weakref.ref[ClusterFrontEnd]"] = []
+
+    # ------------------------------------------------------------- front-ends
+    def register_frontend(self, cfe: "ClusterFrontEnd") -> None:
+        self._frontends.append(weakref.ref(cfe))
+
+    def frontends(self) -> List["ClusterFrontEnd"]:
+        live = [r() for r in self._frontends]
+        self._frontends = [r for r, c in zip(self._frontends, live) if c is not None]
+        return [c for c in live if c is not None]
+
+    def quiesce_blade(self, blade_id: int) -> None:
+        """Flush every registered front-end's staged channel to one blade (a
+        migration barrier: afterwards the blade's log areas contain every
+        acked op, so a log-replay catch-up cannot miss staged writes)."""
+        be = self.blades[blade_id]
+        for cfe in self.frontends():
+            fe = cfe.fes.get(blade_id)
+            if fe is None or fe.backend is not be or not be.alive:
+                continue
+            fe.clock.advance_to(cfe.clock.now)
+            fe.drain_all()
+            cfe.clock.advance_to(fe.clock.now)
+
+    # ------------------------------------------------------------- membership
+    def add_blade(self) -> int:
+        """Elastic scale-out: a new empty blade joins; shards move to it only
+        via explicit rebalance (see rebalance.migrate_shard)."""
+        bid = max(self.blades) + 1
+        self.blades[bid] = NVMBackend(
+            self.capacity_per_blade,
+            self.block_size,
+            self.cost,
+            num_mirrors=self.num_mirrors,
+            blade_id=bid,
+            name_slots=self.name_slots,
+        )
+        self.directory.add_blade(bid)
+        self.directory.bump_epoch()
+        self.directory.persist(self.blades)
+        return bid
+
+    # --------------------------------------------------------------- failures
+    def handle_blade_failure(self, blade_id: int) -> NVMBackend:
+        """Bring blade `blade_id` back: reboot after a transient power loss,
+        or promote its mirror after a permanent failure.  Idempotent — the
+        first front-end to notice performs the recovery; later callers see an
+        alive blade and just rebind."""
+        be = self.blades[blade_id]
+        if be.alive:
+            return be
+        if be.permanent_failure:
+            if not be.mirrors:
+                raise CrashError(
+                    f"blade {blade_id} failed permanently with no mirror to promote"
+                )
+            return promote_blade(self, blade_id)
+        be.reboot()
+        self.directory.bump_epoch()
+        self.directory.persist(self.blades)
+        return be
+
+    # ------------------------------------------------------------------ admin
+    def bootstrap_directory(self) -> ShardDirectory:
+        """Cold start from bytes alone (any surviving blade copy wins)."""
+        d = ShardDirectory.bootstrap(self.blades)
+        if d is None:
+            raise CrashError("no live blade holds a valid directory copy")
+        self.directory = d
+        return d
+
+    def alive_blades(self) -> List[int]:
+        return [b for b, be in self.blades.items() if be.alive]
+
+
+class ClusterFrontEnd:
+    """One client's view of the cluster: a per-blade FrontEnd fleet, routed
+    through the shard directory, serialized on a single client clock."""
+
+    def __init__(self, cluster: NVMCluster, config: Optional[FEConfig] = None, fe_id: int = 0):
+        self.cluster = cluster
+        self.cfg = config or FEConfig()
+        self.fe_id = fe_id
+        self.cost = cluster.cost
+        self.clock = Clock()
+        self.fes: Dict[int, FrontEnd] = {}
+        self.directory = cluster.directory
+        self.epoch = -1  # force a fetch (and its cost) on first use
+        self.directory_fetches = 0
+        cluster.register_frontend(self)
+        self.ensure_fresh()
+
+    # ------------------------------------------------------- epoch validation
+    def ensure_fresh(self) -> bool:
+        """Validate the cached directory epoch; on mismatch, drain staged
+        state on healthy blades, drop every per-blade front-end (they are
+        lazily rebound against the current blade objects), and charge one
+        round for re-fetching the directory blob."""
+        d = self.cluster.directory
+        if d.epoch == self.epoch and d is self.directory:
+            return False
+        for bid, fe in list(self.fes.items()):
+            be = self.cluster.blades.get(bid)
+            if be is not None and be.alive and fe.backend is be:
+                fe.clock.advance_to(self.clock.now)
+                try:
+                    fe.drain_all()
+                except CrashError:
+                    pass  # blade died mid-drain: those staged ops are lost
+                self.clock.advance_to(fe.clock.now)
+            del self.fes[bid]
+        self.clock.advance(
+            self.cost.issue_ns + self.cost.rtt_ns + self.cost.xfer_ns(len(d.encode()))
+        )
+        self.directory_fetches += 1
+        self.directory = d
+        self.epoch = d.epoch
+        return True
+
+    # --------------------------------------------------------------- binding
+    def fe_for_blade(self, blade_id: int) -> FrontEnd:
+        fe = self.fes.get(blade_id)
+        be = self.cluster.blades[blade_id]
+        if fe is None or fe.backend is not be:
+            fe = FrontEnd(be, self.cfg, fe_id=self.fe_id)
+            fe.clock.advance_to(self.clock.now)
+            self.fes[blade_id] = fe
+        return fe
+
+    def run_on(self, blade_id: int, fn: Callable[[FrontEnd], object]):
+        """Run `fn(fe)` against one blade with the client clock threaded
+        through, so sequential ops across different blades stay causally
+        ordered on this client."""
+        fe = self.fe_for_blade(blade_id)
+        fe.clock.advance_to(self.clock.now)
+        try:
+            return fn(fe)
+        finally:
+            self.clock.advance_to(fe.clock.now)
+
+    def recover_blade(self, blade_id: int) -> None:
+        """Data-path failure handler: recover the blade (reboot / mirror
+        promotion) and force a full rebind via the epoch bump it caused."""
+        self.cluster.handle_blade_failure(blade_id)
+        self.fes.pop(blade_id, None)
+        self.ensure_fresh()
+
+    # ----------------------------------------------------------------- drains
+    def drain_all(self) -> None:
+        """Fan the per-blade drain hooks out over the fleet (clean shutdown /
+        end-of-benchmark barrier)."""
+        for bid in sorted(self.fes):
+            fe = self.fes[bid]
+            fe.clock.advance_to(self.clock.now)
+            fe.drain_all()
+            self.clock.advance_to(fe.clock.now)
+
+    # ------------------------------------------------------------------ stats
+    def aggregate_stats(self) -> Dict[str, int]:
+        total: Dict[str, int] = {}
+        for fe in self.fes.values():
+            for k, v in fe.stats.snapshot().items():
+                total[k] = total.get(k, 0) + v
+        return total

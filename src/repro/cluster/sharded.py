@@ -1,0 +1,224 @@
+"""Sharded data structures: one single-blade structure instance per shard,
+spread over the cluster by the directory.
+
+The wrappers layer *on top of* the existing ``structures/`` code — the
+single-shard logic (node formats, op logs, replay tables, caching
+heuristics) is reused untouched; each shard is an ordinary
+``RemoteHashTable`` / ``RemoteBPTree`` named ``{name}.s{shard}`` living on
+whichever blade the directory assigns.  Because every shard rides its own
+``FrontEnd`` channel, the R/C/B optimizations (op-log groups, page cache,
+batched memory-log flushes) compose per shard and per blade.
+
+Failure handling is pushed down here so callers never see a dead blade:
+an op that hits a crashed blade recovers it through the cluster (reboot or
+mirror promotion), rebinds, replays the shard's op-log tail via the
+existing ``RemoteStructure.recover`` path, and retries.
+
+Concurrency model: as in the seed's single-blade design, each structure
+assumes **one writer front-end at a time** (op-sequence numbers are a
+single per-structure stream; concurrent interleaved writers would collide
+on them).  Reader front-ends and writer *hand-off* — attach, recover,
+continue, as exercised by the failover and migration tests — are fully
+supported; concurrent multi-writer needs the locks/MV machinery and is a
+ROADMAP follow-up.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..core.backend import CrashError
+from ..core.structures import RemoteBPTree, RemoteHashTable
+from .router import ClusterFrontEnd
+
+MAX_RETRIES = 3
+
+# Shard-sized log areas: a cluster keeps many structure instances per blade,
+# so the per-structure areas start far smaller than the single-blade default
+# (4096 blocks); log rotation doubles them on demand.
+SHARD_LOG_BLOCKS = 128
+
+
+class _ShardHashTable(RemoteHashTable):
+    OPLOG_BLOCKS = SHARD_LOG_BLOCKS
+    TXLOG_BLOCKS = SHARD_LOG_BLOCKS
+
+
+class _ShardBPTree(RemoteBPTree):
+    OPLOG_BLOCKS = SHARD_LOG_BLOCKS
+    TXLOG_BLOCKS = SHARD_LOG_BLOCKS
+
+
+class ShardedStructure:
+    """Shared routing/failover machinery for the sharded wrappers."""
+
+    def __init__(self, cfe: ClusterFrontEnd, name: str):
+        self.cfe = cfe
+        self.name = name
+        self._shards: Dict[int, object] = {}  # shard -> bound structure
+
+    # ------------------------------------------------------- shard resolution
+    def _shard_name(self, shard: int) -> str:
+        return f"{self.name}.s{shard}"
+
+    def _create(self, fe, name):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def _attach(self, fe, name):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def _recover(self, fe, name):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def _get_shard(self, shard: int, create_if_missing: bool = True):
+        """Resolve the structure object for `shard` on its current blade,
+        (re)binding and replaying the op-log tail when the blade or the
+        assignment changed since the last touch."""
+        bid = self.cfe.directory.blade_of(shard)
+        fe = self.cfe.fe_for_blade(bid)
+        obj = self._shards.get(shard)
+        if obj is not None and obj.fe is fe:
+            return obj
+        fe.clock.advance_to(self.cfe.clock.now)
+        try:
+            name = self._shard_name(shard)
+            if fe.backend.has_name(f"{name}.seq"):
+                if obj is None:
+                    obj = self._attach(fe, name)       # first touch: plain attach
+                else:
+                    obj = self._recover(fe, name)      # rebound: replay the tail
+            elif create_if_missing:
+                obj = self._create(fe, name)
+            else:
+                return None
+        finally:
+            self.cfe.clock.advance_to(fe.clock.now)
+        self._shards[shard] = obj
+        return obj
+
+    # ------------------------------------------------------------ op dispatch
+    def _on_shard(self, shard: int, fn: Callable, *, create_if_missing: bool = True,
+                  default=None):
+        """Run `fn(shard_structure)` with epoch validation, clock threading,
+        and recover-and-retry on blade failure."""
+        last: Optional[CrashError] = None
+        for _ in range(1 + MAX_RETRIES):
+            self.cfe.ensure_fresh()
+            bid = self.cfe.directory.blade_of(shard)
+            try:
+                obj = self._get_shard(shard, create_if_missing)
+                if obj is None:
+                    return default
+                fe = obj.fe
+                fe.clock.advance_to(self.cfe.clock.now)
+                try:
+                    return fn(obj)
+                finally:
+                    self.cfe.clock.advance_to(fe.clock.now)
+            except CrashError as e:
+                last = e
+                self.cfe.recover_blade(bid)
+        raise last  # unrecoverable (e.g. permanent failure with no mirror)
+
+    def _on_key(self, key: int, fn: Callable, **kw):
+        return self._on_shard(self.cfe.directory.shard_of(key), fn, **kw)
+
+    # ------------------------------------------------------------- lifecycle
+    def drain(self) -> None:
+        """Commit point: flush every touched shard's op-log and memory-log
+        channels (only shards this front-end touched can hold staged state)."""
+        for shard in sorted(self._shards):
+            self._on_shard(
+                shard,
+                lambda obj: obj.fe.drain(obj.h),
+                create_if_missing=False,
+            )
+
+    def shard_objects(self) -> Dict[int, object]:
+        return dict(self._shards)
+
+
+class ShardedHashTable(ShardedStructure):
+    """Hash table hash-partitioned over the cluster's blades."""
+
+    def __init__(self, cfe: ClusterFrontEnd, name: str, n_buckets: int = 1 << 12):
+        super().__init__(cfe, name)
+        # n_buckets is the logical total; each shard gets its slice
+        self.buckets_per_shard = max(64, n_buckets // cfe.directory.n_shards)
+
+    def _create(self, fe, name):
+        return _ShardHashTable(fe, name, n_buckets=self.buckets_per_shard, create=True)
+
+    def _attach(self, fe, name):
+        return _ShardHashTable(fe, name, create=False)
+
+    def _recover(self, fe, name):
+        return _ShardHashTable.recover(fe, name)
+
+    # -------------------------------------------------------------------- ops
+    def put(self, key: int, value: int) -> None:
+        self._on_key(key, lambda t: t.put(key, value))
+
+    def get(self, key: int):
+        return self._on_key(key, lambda t: t.get(key), create_if_missing=False)
+
+    def delete(self, key: int) -> bool:
+        return self._on_key(
+            key, lambda t: t.delete(key), create_if_missing=False, default=False
+        )
+
+    def items(self) -> List[Tuple[int, int]]:
+        out: List[Tuple[int, int]] = []
+        for shard in range(self.cfe.directory.n_shards):
+            part = self._on_shard(
+                shard, lambda t: t.items(), create_if_missing=False, default=[]
+            )
+            out.extend(part)
+        return out
+
+
+class ShardedBPTree(ShardedStructure):
+    """B+Tree hash-partitioned over the cluster; range scans fan out to every
+    shard's leaf chain and merge the sorted streams."""
+
+    def _create(self, fe, name):
+        return _ShardBPTree(fe, name, create=True)
+
+    def _attach(self, fe, name):
+        return _ShardBPTree(fe, name, create=False)
+
+    def _recover(self, fe, name):
+        return _ShardBPTree.recover(fe, name)
+
+    # -------------------------------------------------------------------- ops
+    def insert(self, key: int, value: int) -> None:
+        self._on_key(key, lambda t: t.insert(key, value))
+
+    def find(self, key: int):
+        return self._on_key(key, lambda t: t.find(key), create_if_missing=False)
+
+    def range_scan(self, lo: int, hi: int) -> List[Tuple[int, int]]:
+        """All (key, value) with lo <= key <= hi, globally sorted: per-shard
+        leaf-chain scans merged with a k-way heap merge."""
+        streams: List[List[Tuple[int, int]]] = []
+        for shard in range(self.cfe.directory.n_shards):
+            part = self._on_shard(
+                shard,
+                lambda t: t.range_items(lo, hi),
+                create_if_missing=False,
+                default=[],
+            )
+            if part:
+                streams.append(part)
+        return list(heapq.merge(*streams))
+
+    def items(self) -> List[Tuple[int, int]]:
+        streams: List[List[Tuple[int, int]]] = []
+        for shard in range(self.cfe.directory.n_shards):
+            part = self._on_shard(
+                shard, lambda t: t.items(), create_if_missing=False, default=[]
+            )
+            if part:
+                streams.append(part)
+        return list(heapq.merge(*streams))

@@ -61,23 +61,29 @@ class NVMBackend:
         block_size: int = 256,
         cost: Optional[CostModel] = None,
         num_mirrors: int = 1,
+        blade_id: int = 0,
+        name_slots: int = NUM_NAME_SLOTS,
     ):
         self.cost = cost or CostModel()
         self.capacity = capacity
         self.block_size = block_size
+        self.blade_id = blade_id
+        self.num_name_slots = name_slots
+        self.naming_end = name_slots * NAME_SLOT
         self.arena = bytearray(capacity)
         self.link = Link(self.cost)
         self.clock = Clock()
         self.stats = Stats()
         self.mirrors: List[Mirror] = [Mirror(capacity) for _ in range(num_mirrors)]
         self.alive = True
+        self.permanent_failure = False
         # fail the next physical write after `fail_after` bytes (test hook)
         self._torn_write_at: Optional[int] = None
         # per-(address, epoch) atomic-op counts (same-address serialization)
         self._atomic_contention: Dict = {}
 
         n_blocks = capacity // block_size
-        self.bitmap_start = NAMING_END
+        self.bitmap_start = self.naming_end
         self.bitmap_len = (n_blocks + 7) // 8
         self.heap_start = _align(self.bitmap_start + self.bitmap_len, block_size)
         self.n_blocks = (capacity - self.heap_start) // block_size
@@ -92,7 +98,14 @@ class NVMBackend:
             raise CrashError("back-end blade is down")
 
     def _phys_write(self, addr: int, data: bytes, replicate: bool = True) -> None:
-        """The single choke point for arena mutation (torn-write fault hook)."""
+        """The single choke point for arena mutation (torn-write fault hook).
+
+        A dead blade accepts no writes: once a torn write (or crash) downs
+        the blade, later writes raise instead of silently mutating the arena
+        and the mirror — the mirror must stay at the last commit point.
+        """
+        if not self.alive:
+            raise CrashError("back-end blade is down")
         if self._torn_write_at is not None:
             cut = self._torn_write_at
             self._torn_write_at = None
@@ -140,7 +153,7 @@ class NVMBackend:
             return self._names[name] * NAME_SLOT + 32
         key = name.encode()[:32].ljust(32, b"\x00")
         # linear probe over the fixed table; persist the key bytes
-        for slot in range(NUM_NAME_SLOTS):
+        for slot in range(self.num_name_slots):
             base = slot * NAME_SLOT
             cur = bytes(self.arena[base : base + 32])
             if cur == key:
@@ -157,6 +170,53 @@ class NVMBackend:
 
     def set_name(self, name: str, value: int) -> None:
         self._phys_write(self.name_slot_addr(name), struct.pack("<Q", value))
+
+    def has_name(self, name: str) -> bool:
+        """True iff `name` already occupies a naming slot (no allocation)."""
+        if name in self._names:
+            return True
+        key = name.encode()[:32].ljust(32, b"\x00")
+        for slot in range(self.num_name_slots):
+            base = slot * NAME_SLOT
+            cur = bytes(self.arena[base : base + 32])
+            if cur == key:
+                self._names[name] = slot
+                return True
+            if cur == b"\x00" * 32:
+                return False
+        return False
+
+    # ------------------------------------------------------------ named blobs
+    # Variable-length persistent values (e.g. the cluster shard directory).
+    # Stored in heap blocks; the naming region holds {addr, len}.  The slot
+    # names avoid the ".addr" suffix so reboot() does not mistake a blob for
+    # a log area.
+    def put_blob(self, name: str, data: bytes) -> None:
+        self._check_alive()
+        nblocks = max(1, -(-len(data) // self.block_size))
+        if self.has_name(f"{name}.blobaddr"):
+            addr = self.get_name(f"{name}.blobaddr")
+            # capacity is tracked separately from length: a shrunken blob
+            # keeps its allocation, so regrowing must free ALL of it
+            cap = self.get_name(f"{name}.blobcap")
+            if nblocks > cap:
+                self.free_blocks(addr, cap)
+                addr = self.alloc_blocks(nblocks)
+                self.set_name(f"{name}.blobcap", nblocks)
+        else:
+            addr = self.alloc_blocks(nblocks)
+            self.set_name(f"{name}.blobcap", nblocks)
+        self._phys_write(addr, data)
+        self.set_name(f"{name}.blobaddr", addr)
+        self.set_name(f"{name}.bloblen", len(data))
+
+    def get_blob(self, name: str) -> Optional[bytes]:
+        self._check_alive()
+        if not self.has_name(f"{name}.blobaddr"):
+            return None
+        addr = self.get_name(f"{name}.blobaddr")
+        length = self.get_name(f"{name}.bloblen")
+        return bytes(self.arena[addr : addr + length])
 
     # ----------------------------------------------------- block allocation
     def alloc_blocks(self, n: int = 1) -> int:
@@ -271,6 +331,12 @@ class NVMBackend:
         """Transient power failure: volatile state is lost, the arena persists."""
         self.alive = False
 
+    def fail_permanently(self) -> None:
+        """Permanent blade failure (paper §4.3): the arena is gone; only a
+        mirror promotion can bring the data back."""
+        self.alive = False
+        self.permanent_failure = True
+
     def schedule_torn_write(self, keep_bytes: int) -> None:
         """Test hook: the next physical write persists only its first
         `keep_bytes` bytes, then the blade loses power (paper §4.2)."""
@@ -289,7 +355,7 @@ class NVMBackend:
         # naming cache
         self._names.clear()
         names: Dict[str, int] = {}
-        for slot in range(NUM_NAME_SLOTS):
+        for slot in range(self.num_name_slots):
             base = slot * NAME_SLOT
             raw = bytes(self.arena[base : base + 32]).rstrip(b"\x00")
             if raw:
@@ -332,7 +398,12 @@ class NVMBackend:
     def promote_mirror(self, idx: int = 0) -> "NVMBackend":
         """Permanent primary failure: build a fresh blade from a mirror."""
         fresh = NVMBackend(
-            self.capacity, self.block_size, self.cost, num_mirrors=len(self.mirrors)
+            self.capacity,
+            self.block_size,
+            self.cost,
+            num_mirrors=len(self.mirrors),
+            blade_id=self.blade_id,
+            name_slots=self.num_name_slots,
         )
         fresh.arena = bytearray(self.mirrors[idx].arena)
         return fresh.reboot()

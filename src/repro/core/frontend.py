@@ -102,6 +102,7 @@ class FrontEnd:
         self.allocator = FrontEndAllocator(self)
         self._oplog_inflight = 0
         self.busy_ns = 0.0  # front-end CPU busy time (utilization bench)
+        self.handles: List[StructHandle] = []  # every handle this FE registered
 
     # ======================================================== network charges
     def _round(self, nbytes: int, *, nvm_write: bool = False) -> None:
@@ -142,13 +143,16 @@ class FrontEnd:
         if opname in be._log_areas:
             h = StructHandle(self, name, be.get_log_area(opname), be.get_log_area(txname))
             h.seq = be.get_name(f"{name}.seq")
+            self.handles.append(h)
             return h
         op = be.create_log_area(opname, oplog_blocks)
         tx = be.create_log_area(txname, txlog_blocks)
         be.set_name(f"{name}.seq", 0)
         be.set_name(f"{name}.opsn", 0)
         self._round(64)  # registration RPC
-        return StructHandle(self, name, op, tx)
+        h = StructHandle(self, name, op, tx)
+        self.handles.append(h)
+        return h
 
     # ============================================================ allocation
     def _backend_alloc(self, nblocks: int) -> int:
@@ -356,6 +360,12 @@ class FrontEnd:
         """Flush everything (end of benchmark / clean shutdown)."""
         self.flush_oplog(h)
         self.flush_memlogs(h, sync=True)
+
+    def drain_all(self) -> None:
+        """Drain every structure handle this front-end has registered — the
+        per-blade hook the cluster router fans out over its member blades."""
+        for h in self.handles:
+            self.drain(h)
 
     # ================================================================ atomics
     def atomic_read(self, addr: int) -> int:

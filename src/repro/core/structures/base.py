@@ -24,10 +24,15 @@ class RemoteStructure:
     #: subclasses: {opcode: method name}
     REPLAY = {}
 
+    #: log-area sizes in blocks; shard-sized subclasses override these so a
+    #: cluster of many small shards doesn't exhaust a blade's heap.
+    OPLOG_BLOCKS = 4096
+    TXLOG_BLOCKS = 4096
+
     def __init__(self, fe: FrontEnd, name: str):
         self.fe = fe
         self.name = name
-        self.h: StructHandle = fe.register(name)
+        self.h: StructHandle = fe.register(name, self.OPLOG_BLOCKS, self.TXLOG_BLOCKS)
 
     # root pointer ----------------------------------------------------------
     @property

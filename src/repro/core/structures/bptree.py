@@ -224,3 +224,30 @@ class RemoteBPTree(RemoteStructure):
         merged = {k: v for k, v in out}
         merged.update(overlay)
         return sorted(merged.items())
+
+    def range_items(self, lo: int, hi: int) -> List[Tuple[int, int]]:
+        """All (key, value) with lo <= key <= hi, via the leaf chain.  The
+        unmaterialized vector-insert overlay is merged in, so results match
+        items() restricted to the range."""
+        out: List[Tuple[int, int]] = []
+        if self._root:
+            addr, depth = self._root, 0
+            node = self._read(addr, depth)
+            while node.kind == INTERNAL:
+                idx = bisect_right(node.keys, lo)
+                addr, depth = node.ptrs[idx], depth + 1
+                node = self._read(addr, depth)
+            while True:
+                for k, v in zip(node.keys, node.ptrs[:-1]):
+                    if k > hi:
+                        break
+                    if k >= lo:
+                        out.append((k, v))
+                if not node.next_leaf or (node.keys and node.keys[-1] > hi):
+                    break
+                node = self._read(node.next_leaf, depth)
+        merged = dict(out)
+        for k, v in self._vecbuf:
+            if lo <= k <= hi:
+                merged[k] = v
+        return sorted(merged.items())

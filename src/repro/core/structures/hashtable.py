@@ -95,6 +95,19 @@ class RemoteHashTable(RemoteStructure):
             prev, cur = cur, nxt
         return False
 
+    # ------------------------------------------------------------- traversal
+    def items(self):
+        """Full scan: every (key, value) pair, bucket by bucket.  Used by the
+        cluster rebalancer to snapshot a shard for migration."""
+        out = []
+        for b in range(self.n_buckets):
+            cur = self._read_ptr(self.base + b * 8)
+            while cur:
+                k, v, nxt = NODE.unpack(self.fe.read(self.h, cur, NODE_SIZE))
+                out.append((k, v))
+                cur = nxt
+        return out
+
     # ---------------------------------------------------------------- replay
     def _replay_put(self, key: int, value: int) -> None:
         self._put_base(key, value)

@@ -1,0 +1,108 @@
+"""A tiny fallback for the subset of `hypothesis` the property tests use.
+
+The container may not ship hypothesis; rather than skipping the log-format
+crash-safety properties entirely, this shim re-implements just enough of the
+API — seeded random draws instead of coverage-guided search, no shrinking —
+so the same test bodies still execute a meaningful number of random examples.
+If the real hypothesis is installed the test modules import it instead and
+this file is inert.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class _DataObject:
+    """Stand-in for the object `st.data()` yields: lazy mid-test draws."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy) -> Any:
+        return strategy.draw(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies` (import ... as st)."""
+
+    @staticmethod
+    def integers(min_value: int = -(1 << 32), max_value: int = 1 << 32) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def binary(min_size: int = 0, max_size: int = 64) -> _Strategy:
+        def draw(rng: random.Random) -> bytes:
+            n = rng.randint(min_size, max_size)
+            return bytes(rng.getrandbits(8) for _ in range(n))
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 8) -> _Strategy:
+        def draw(rng: random.Random) -> List[Any]:
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*parts: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(p.draw(rng) for p in parts))
+
+    @staticmethod
+    def builds(target: Callable, **kwargs: _Strategy) -> _Strategy:
+        return _Strategy(
+            lambda rng: target(**{k: s.draw(rng) for k, s in kwargs.items()})
+        )
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _DataStrategy()
+
+
+st = strategies
+
+
+def settings(max_examples: int = 50, deadline=None, **_ignored):
+    """Attach the example budget to a function already wrapped by given()."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Run the test body over `max_examples` seeded random draws."""
+
+    def deco(fn):
+        # NB: deliberately not functools.wraps — pytest must see a zero-arg
+        # signature, or it would treat the strategy params as fixtures
+        def wrapper():
+            for i in range(getattr(wrapper, "_max_examples", 25)):
+                rng = random.Random(0xC0FFEE ^ (i * 0x9E3779B9))
+                drawn = [s.draw(rng) for s in strats]
+                fn(*drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis_shim = True  # marker for debugging
+        return wrapper
+
+    return deco

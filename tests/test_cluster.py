@@ -1,0 +1,294 @@
+"""repro.cluster: sharded structures, routing, failover, rebalance.
+
+The acceptance bar: a ShardedHashTable over 4 blades passes the same
+op-sequence equivalence checks as the single-blade structure; permanently
+killing a blade mid-workload promotes its mirror with zero committed-op
+loss; and aggregate throughput grows monotonically with blade count under
+>= 8 front-ends.
+"""
+
+import random
+
+import pytest
+
+from repro.cluster import (
+    ClusterFrontEnd,
+    NVMCluster,
+    ShardDirectory,
+    ShardedBPTree,
+    ShardedHashTable,
+    migrate_shard,
+    rebalance,
+)
+from repro.core import CrashError, FEConfig
+
+
+def _mk(n_blades=4, n_shards=16, **kw):
+    return NVMCluster(n_blades=n_blades, n_shards=n_shards,
+                      capacity_per_blade=1 << 25, **kw)
+
+
+# --------------------------------------------------------------- directory
+def test_directory_roundtrip_and_checksum():
+    d = ShardDirectory(32, [0, 1, 2])
+    d.assign(5, 2)
+    d.bump_epoch()
+    raw = d.encode()
+    d2 = ShardDirectory.decode(raw)
+    assert d2.epoch == 1 and d2.assignment == d.assignment and d2.blades == d.blades
+    # any single-byte corruption must invalidate the blob, not mis-decode it
+    broken = bytearray(raw)
+    broken[7] ^= 0x40
+    assert ShardDirectory.decode(bytes(broken)) is None
+
+
+def test_directory_bootstrap_prefers_highest_epoch_survivor():
+    cluster = _mk(n_blades=3)
+    cluster.directory.bump_epoch()
+    cluster.directory.persist(cluster.blades)
+    # blade 0 misses the next update (it is down during persist)
+    cluster.blades[0].crash()
+    cluster.directory.bump_epoch()
+    cluster.directory.persist(cluster.blades)
+    cluster.blades[0].reboot()
+    # blade 2 dies permanently; bootstrap still finds epoch 2 on blade 1
+    cluster.blades[2].fail_permanently()
+    d = ShardDirectory.bootstrap(cluster.blades)
+    assert d is not None and d.epoch == 2
+
+
+# ------------------------------------------------- op-sequence equivalence
+def test_sharded_hashtable_matches_model_over_4_blades():
+    cluster = _mk(n_blades=4)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    ht = ShardedHashTable(cfe, "ht")
+    model = {}
+    rng = random.Random(7)
+    for _ in range(1500):
+        k = rng.randrange(400)
+        r = rng.random()
+        if r < 0.6:
+            v = rng.randrange(1 << 30)
+            ht.put(k, v)
+            model[k] = v
+        elif r < 0.8:
+            assert ht.delete(k) == (k in model)
+            model.pop(k, None)
+        else:
+            assert ht.get(k) == model.get(k)
+    ht.drain()
+    assert sorted(ht.items()) == sorted(model.items())
+    # ops really spread over all four blades
+    used = {cluster.directory.blade_of(s) for s in range(cluster.directory.n_shards)}
+    assert used == set(cluster.blades)
+
+
+def test_sharded_bptree_sorted_items_and_range_merge():
+    cluster = _mk(n_blades=4)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    bt = ShardedBPTree(cfe, "bt")
+    rng = random.Random(3)
+    kvs = {}
+    for k in rng.sample(range(1 << 20), 1200):
+        kvs[k] = k * 5
+        bt.insert(k, k * 5)
+    bt.drain()
+    assert bt.items() == sorted(kvs.items())
+    for _ in range(5):
+        lo = rng.randrange(1 << 20)
+        hi = lo + rng.randrange(1 << 18)
+        want = sorted((k, v) for k, v in kvs.items() if lo <= k <= hi)
+        assert bt.range_scan(lo, hi) == want
+    assert bt.find(next(iter(kvs))) == next(iter(kvs)) * 5
+    assert bt.find(-1) is None
+
+
+# ----------------------------------------------------------------- failover
+def test_kill_one_blade_mid_workload_promotes_mirror_zero_loss():
+    cluster = _mk(n_blades=4)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    ht = ShardedHashTable(cfe, "ht")
+    committed = {}
+    for k in range(800):
+        ht.put(k, k * 3)
+        committed[k] = k * 3
+    ht.drain()  # commit point: everything above is durable + mirrored
+
+    victim = 2
+    cluster.blades[victim].fail_permanently()
+
+    # keep operating through the failure: ops routed at the dead blade must
+    # transparently promote its mirror and land
+    for k in range(800, 1100):
+        ht.put(k, k * 3)
+        committed[k] = k * 3
+    ht.drain()
+
+    assert cluster.failovers == 1
+    assert cluster.directory.epoch >= 1
+    assert cluster.blades[victim].alive
+    # zero committed ops lost
+    assert sorted(ht.items()) == sorted(committed.items())
+    assert all(ht.get(k) == v for k, v in committed.items())
+
+
+def test_failover_reroutes_other_inflight_frontends():
+    cluster = _mk(n_blades=2)
+    cfe_a = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    cfe_b = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=1)
+    ht_a = ShardedHashTable(cfe_a, "ht")
+    ht_b = ShardedHashTable(cfe_b, "ht")
+    for k in range(200):
+        ht_a.put(k, k)
+    ht_a.drain()
+    assert ht_b.get(5) == 5
+
+    cluster.blades[1].fail_permanently()
+    # A hits the failure first and performs the promotion ...
+    for k in range(200, 320):
+        ht_a.put(k, k)
+    ht_a.drain()
+    assert cluster.failovers == 1
+    epoch_after = cluster.directory.epoch
+    # ... B (stale epoch) transparently rebinds on its next ops, no error
+    assert cfe_b.epoch < epoch_after
+    for k in range(150, 250):
+        assert ht_b.get(k) == (k if k < 320 else None)
+    assert cfe_b.epoch == epoch_after
+    assert cluster.failovers == 1  # no duplicate promotion
+
+
+def test_transient_blade_crash_heals_on_next_op():
+    cluster = _mk(n_blades=2)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    ht = ShardedHashTable(cfe, "ht")
+    for k in range(150):
+        ht.put(k, k)
+    ht.drain()
+    cluster.blades[0].crash()  # transient: arena survives, volatile state lost
+    for k in range(150, 260):
+        ht.put(k, k)
+    ht.drain()
+    assert cluster.failovers == 0  # reboot, not promotion
+    assert sorted(ht.items()) == [(k, k) for k in range(260)]
+
+
+def test_unrecoverable_without_mirror_raises():
+    cluster = _mk(n_blades=2, num_mirrors=0)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    ht = ShardedHashTable(cfe, "ht")
+    for k in range(100):
+        ht.put(k, k)
+    ht.drain()
+    cluster.blades[0].fail_permanently()
+    with pytest.raises(CrashError):
+        for k in range(300):  # some key must land on blade 0
+            ht.put(1000 + k, k)
+
+
+# ---------------------------------------------------------------- rebalance
+def test_migrate_shard_with_concurrent_writes_catches_up():
+    cluster = _mk(n_blades=2, n_shards=8)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    cfe2 = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=1)
+    ht, ht2 = ShardedHashTable(cfe, "ht"), ShardedHashTable(cfe2, "ht")
+    model = {}
+    for k in range(400):
+        ht.put(k, k)
+        model[k] = k
+    ht.drain()
+
+    shard = 3
+    dst = cluster.add_blade()
+    racers = [k for k in range(400, 4000)
+              if cluster.directory.shard_of(k) == shard][:20]
+
+    def during_copy():  # a second front-end writes mid-migration
+        for k in racers:
+            ht2.put(k, k + 1)
+            model[k] = k + 1
+        ht2.drain()
+
+    stats = migrate_shard(ht, shard, dst, during_copy=during_copy)
+    assert stats["caught_up"] == len(racers)
+    assert cluster.directory.blade_of(shard) == dst
+    # both front-ends converge on the new placement with nothing lost
+    assert sorted(ht.items()) == sorted(model.items())
+    assert sorted(ht2.items()) == sorted(model.items())
+
+
+def test_migrate_shard_quiesces_staged_unflushed_writes():
+    """Acked ops still sitting in another front-end's op-log group window
+    (staged, not yet flushed) must survive migration: the quiesce barrier
+    flushes them to the source before catch-up reads the log tail."""
+    cluster = _mk(n_blades=2, n_shards=8)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    # big group/batch windows: puts stay staged client-side
+    cfe2 = ClusterFrontEnd(cluster, FEConfig.rcb(oplog_group=64, batch_ops=256),
+                           fe_id=1)
+    ht, ht2 = ShardedHashTable(cfe, "ht"), ShardedHashTable(cfe2, "ht")
+    model = {}
+    for k in range(300):
+        ht.put(k, k)
+        model[k] = k
+    ht.drain()
+
+    shard = 1
+    dst = cluster.add_blade()
+    racers = [k for k in range(300, 4000)
+              if cluster.directory.shard_of(k) == shard][:5]
+
+    def during_copy():  # acked but NOT drained: sits in the group window
+        for k in racers:
+            ht2.put(k, k + 7)
+            model[k] = k + 7
+
+    stats = migrate_shard(ht, shard, dst, during_copy=during_copy)
+    assert stats["caught_up"] == len(racers)
+    assert sorted(ht.items()) == sorted(model.items())
+    for k in racers:
+        assert ht.get(k) == k + 7
+        assert ht2.get(k) == k + 7
+
+
+def test_rebalance_evens_load_after_scale_out():
+    cluster = _mk(n_blades=2, n_shards=8)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    ht = ShardedHashTable(cfe, "ht")
+    model = {}
+    for k in range(300):
+        ht.put(k, k * 2)
+        model[k] = k * 2
+    ht.drain()
+    cluster.add_blade()
+    moves = rebalance(ht)
+    assert moves, "scale-out must migrate shards onto the new blade"
+    counts = cluster.directory.load_counts()
+    assert max(counts.values()) - min(counts.values()) <= 1
+    assert sorted(ht.items()) == sorted(model.items())
+    assert all(ht.get(k) == v for k, v in model.items())
+
+
+# ------------------------------------------------------------------ scaling
+def test_aggregate_throughput_scales_with_blades():
+    from benchmarks.fig_cluster_scaling import run_scaling
+
+    aggs = [run_scaling(nb, n_frontends=8, preload=80, ops=150)["aggregate_kops"]
+            for nb in (1, 2, 4)]
+    assert aggs[0] < aggs[1] <= aggs[2] * 1.0001, aggs
+    assert aggs[1] <= aggs[2] * 1.0001
+
+
+def test_cold_frontend_bootstraps_from_bytes_alone():
+    cluster = _mk(n_blades=3)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=0)
+    ht = ShardedHashTable(cfe, "ht")
+    for k in range(300):
+        ht.put(k, k * 9)
+    ht.drain()
+    # a brand-new front-end with no shared in-memory state recovers the
+    # directory from any blade's bytes and reads everything
+    cluster.bootstrap_directory()
+    cfe2 = ClusterFrontEnd(cluster, FEConfig.rc(), fe_id=5)
+    ht2 = ShardedHashTable(cfe2, "ht")
+    assert sorted(ht2.items()) == [(k, k * 9) for k in range(300)]

@@ -3,7 +3,11 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the seeded-random shim
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import CrashError, FEConfig, FrontEnd, NVMBackend
 from repro.core.structures import RemoteBST, RemoteHashTable, RemoteQueue, RemoteStack

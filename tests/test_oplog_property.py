@@ -4,7 +4,10 @@ corrupt transaction — the invariant the paper's checksummed commit provides.""
 
 import struct
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the seeded-random shim
+    from _hypothesis_shim import given, settings, st
 
 from repro.core.oplog import (
     MemLog,
