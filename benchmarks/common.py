@@ -45,7 +45,7 @@ VARIANTS: Dict[str, Callable[..., FEConfig]] = {
 }
 
 
-def make_fe(variant: str, capacity=1 << 28, **kw) -> FrontEnd:
+def make_fe(variant: str, capacity=1 << 26, **kw) -> FrontEnd:
     be = NVMBackend(capacity=capacity)
     return FrontEnd(be, VARIANTS[variant](**kw))
 

@@ -16,7 +16,7 @@ OPS = 1500
 
 
 def run(n_frontends: int, preload: int = PRELOAD, ops: int = OPS):
-    be = NVMBackend(capacity=1 << 28)
+    be = NVMBackend(capacity=1 << 26)
     fes, trees, rngs = [], [], []
     for i in range(n_frontends):
         fe = FrontEnd(be, FEConfig.rcb(batch_ops=256,

@@ -36,7 +36,7 @@ class FEDrivenReplicationFrontEnd(FrontEnd):
 
 
 def _bench(fe_cls, mirrors: int, preload: int = PRELOAD, ops: int = OPS):
-    be = NVMBackend(capacity=1 << 28, num_mirrors=mirrors)
+    be = NVMBackend(capacity=1 << 26, num_mirrors=mirrors)
     fe = fe_cls(be, FEConfig.rcb(batch_ops=256,
                                  cache_bytes=cache_bytes_for("bst", preload, 0.10)))
     t = RemoteBST(fe, "t")

@@ -27,7 +27,7 @@ def _preload_keys(n):
 
 def run_mode(mode: str, n_readers: int, preload: int = PRELOAD,
              writer_ops: int = WRITER_OPS, reader_ops: int = READER_OPS) -> Dict[str, float]:
-    be = NVMBackend(capacity=1 << 28)
+    be = NVMBackend(capacity=1 << 26)
     wfe = FrontEnd(be, FEConfig.rcb(batch_ops=256,
                                     cache_bytes=cache_bytes_for("bst", preload, 0.10)))
     keys = _preload_keys(preload)

@@ -1,0 +1,160 @@
+"""Vector-op batch execution: batched vs. serial, per structure.
+
+The paper's Table 3 credits batching (B) with the largest single win for
+pointer structures but leaves the hash-table batching cells empty — a batch
+of *independent* keys has nothing to share inside one op.  The vector-op
+path closes that gap: `get_many`/`put_many` walk all the batch's chains /
+tree paths in doorbell-batched waves (one RTT per frontier level), stage the
+whole batch's op logs for one group commit, and land the memory logs with
+one combined oplog+memlog flush.
+
+Two numbers per cell:
+
+  * simulated KOPS — ops per virtual second on the fabric model (the paper's
+    metric; batched/serial is the headline ratio);
+  * wall-clock ops/sec — how fast the simulator itself executes the run
+    (the §"make the figures runnable at full size" metric).
+
+A cluster row runs the same workload through `ShardedHashTable` so the
+batch path is measured end-to-end: partition by shard, one epoch check per
+sub-batch, per-blade fan-out, merge.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import FEConfig, FrontEnd, NVMBackend
+
+from .common import build_structure, cache_bytes_for, kops
+
+# deliberately small cache fractions: vector ops earn their keep when the
+# working set does NOT fit in the front-end cache (a cache-resident table
+# makes serial and batched both DRAM-speed).  The floor keeps one batch's
+# prefetch footprint resident through its apply pass (a skip-list batch
+# touches ~30 nodes per key, hence its larger fraction).
+CACHE_FRAC = {"skiplist": 0.20}
+CACHE_FRAC_DEFAULT = 0.05
+CACHE_FLOOR = 16 << 10
+
+STRUCTURES = ("hashtable", "bst", "bptree", "skiplist")
+
+
+def _cache_bytes(structure: str, preload: int) -> int:
+    frac = CACHE_FRAC.get(structure, CACHE_FRAC_DEFAULT)
+    return max(CACHE_FLOOR, cache_bytes_for(structure, preload, frac))
+
+
+def _fresh(structure: str, preload: int, seed: int = 0):
+    be = NVMBackend(capacity=1 << 26)
+    fe = FrontEnd(be, FEConfig.rcb(cache_bytes=_cache_bytes(structure, preload)))
+    obj, keys = build_structure(fe, f"v_{structure}", structure, preload, seed=seed)
+    return fe, obj, keys
+
+
+def _write_ops(obj, pairs: List[Tuple[int, int]], batch: int) -> None:
+    write_many = obj.put_many if hasattr(obj, "put") else obj.insert_many
+    for i in range(0, len(pairs), batch):
+        write_many(pairs[i : i + batch])
+
+
+def _read_ops(obj, keys: List[int], batch: int) -> None:
+    read_many = obj.get_many if hasattr(obj, "get") else obj.lookup_many
+    for i in range(0, len(keys), batch):
+        read_many(keys[i : i + batch])
+
+
+def bench_structure(structure: str, preload: int, n_ops: int,
+                    batch: int = 64) -> Dict[str, float]:
+    """Serial loop vs. `*_many` batches, same rNVM-RCB config, fresh
+    identically-preloaded structure for each mode."""
+    rng = random.Random(11)
+    fresh_pairs = [(rng.randrange(1 << 30), i) for i in range(n_ops)]
+    row: Dict[str, float] = {"batch": batch}
+    for mode in ("serial", "batched"):
+        fe, obj, keys = _fresh(structure, preload)
+        read_keys = rng.sample(keys, min(n_ops, len(keys)))
+        # writes -----------------------------------------------------------
+        t0, w0 = fe.clock.now, time.perf_counter()
+        if mode == "serial":
+            write = obj.put if hasattr(obj, "put") else obj.insert
+            for k, v in fresh_pairs:
+                write(k, v)
+        else:
+            _write_ops(obj, fresh_pairs, batch)
+        fe.drain(obj.h)
+        row[f"{mode}_put_kops"] = kops(n_ops, fe.clock.now - t0)
+        row[f"{mode}_put_wall_ops"] = n_ops / max(time.perf_counter() - w0, 1e-9)
+        # reads ------------------------------------------------------------
+        t0, w0 = fe.clock.now, time.perf_counter()
+        if mode == "serial":
+            read = obj.get if hasattr(obj, "get") else obj.find
+            for k in read_keys:
+                read(k)
+        else:
+            _read_ops(obj, read_keys, batch)
+        row[f"{mode}_get_kops"] = kops(len(read_keys), fe.clock.now - t0)
+        row[f"{mode}_get_wall_ops"] = len(read_keys) / max(time.perf_counter() - w0, 1e-9)
+    row["put_speedup"] = row["batched_put_kops"] / row["serial_put_kops"]
+    row["get_speedup"] = row["batched_get_kops"] / row["serial_get_kops"]
+    return row
+
+
+def bench_cluster(preload: int, n_ops: int, batch: int = 64,
+                  n_blades: int = 4) -> Dict[str, float]:
+    """End-to-end cluster batch path: ShardedHashTable over `n_blades`
+    blades, serial per-op routing vs. partition + fan-out."""
+    from repro.cluster import ClusterFrontEnd, NVMCluster
+    from repro.cluster.sharded import ShardedHashTable
+
+    rng = random.Random(13)
+    load = [(rng.randrange(1 << 30), i) for i in range(preload)]
+    fresh = [(rng.randrange(1 << 30), i) for i in range(n_ops)]
+    row: Dict[str, float] = {"batch": batch, "blades": n_blades}
+    for mode in ("serial", "batched"):
+        cluster = NVMCluster(n_blades=n_blades, n_shards=4 * n_blades)
+        cfe = ClusterFrontEnd(
+            cluster, FEConfig.rcb(cache_bytes=_cache_bytes("hashtable", preload))
+        )
+        ht = ShardedHashTable(cfe, "vkv", n_buckets=max(1024, preload // 4))
+        ht.put_many(load)  # preload batched in both modes (state identical)
+        ht.drain()
+        t0, w0 = cfe.clock.now, time.perf_counter()
+        if mode == "serial":
+            for k, v in fresh:
+                ht.put(k, v)
+        else:
+            for i in range(0, len(fresh), batch):
+                ht.put_many(fresh[i : i + batch])
+        ht.drain()
+        row[f"{mode}_put_kops"] = kops(n_ops, cfe.clock.now - t0)
+        row[f"{mode}_put_wall_ops"] = n_ops / max(time.perf_counter() - w0, 1e-9)
+    row["put_speedup"] = row["batched_put_kops"] / row["serial_put_kops"]
+    return row
+
+
+def main(preload: int = 15000, n_ops: int = 2560, batch: int = 64,
+         structures=STRUCTURES, with_cluster: bool = True) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    print(f"{'structure':<12} {'serial put':>11} {'batched put':>12} {'x':>6}"
+          f" {'serial get':>11} {'batched get':>12} {'x':>6}  wall ops/s (batched put)")
+    for s in structures:
+        row = bench_structure(s, preload, n_ops, batch)
+        out[s] = row
+        print(f"{s:<12} {row['serial_put_kops']:>9.1f}K {row['batched_put_kops']:>10.1f}K"
+              f" {row['put_speedup']:>5.1f}x {row['serial_get_kops']:>9.1f}K"
+              f" {row['batched_get_kops']:>10.1f}K {row['get_speedup']:>5.1f}x"
+              f"  {row['batched_put_wall_ops']:>10.0f}")
+    if with_cluster:
+        row = bench_cluster(preload, n_ops, batch)
+        out["cluster_hashtable"] = row
+        print(f"{'cluster-ht':<12} {row['serial_put_kops']:>9.1f}K"
+              f" {row['batched_put_kops']:>10.1f}K {row['put_speedup']:>5.1f}x"
+              f" {'':>11} {'':>12} {'':>6}  {row['batched_put_wall_ops']:>10.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

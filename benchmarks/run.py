@@ -22,7 +22,9 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes: every figure end-to-end in under a minute")
     ap.add_argument("--only", default=None,
-                    help="comma list: table2,table3,fig7,fig9,fig10,fig11,apps,cluster")
+                    help="comma list: table2,table3,fig7,fig9,fig10,fig11,apps,cluster,vector")
+    ap.add_argument("--bench-json", default="BENCH_vector_ops.json",
+                    help="where the vector-ops perf record is written")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     if args.smoke:
@@ -110,6 +112,29 @@ def main(argv=None) -> None:
         a = out["availability"]
         emit("cluster_availability", 0.0,
              f"failovers={a['failovers']}_lost_committed={a['lost_committed']}")
+
+    if want("vector"):
+        import json
+
+        from .fig_vector_ops import main as fvec
+        out = fvec(preload=preload, n_ops=max(n_ops, 128))
+        row = out["hashtable"]
+        emit("vector_hashtable_put_many", 1e3 / row["batched_put_kops"],
+             f"batched_vs_serial={row['put_speedup']:.1f}x")
+        record = []
+        for name, r in out.items():
+            for op in ("put", "get"):
+                if f"batched_{op}_kops" not in r:
+                    continue
+                record.append({
+                    "name": f"vector_{name}_{op}_many",
+                    "simulated_us_per_op": 1e3 / r[f"batched_{op}_kops"],
+                    "wall_clock_ops_per_sec": round(r[f"batched_{op}_wall_ops"], 1),
+                    "speedup_vs_serial": round(r[f"{op}_speedup"], 2),
+                })
+        with open(args.bench_json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"[vector] perf record -> {args.bench_json}")
 
     if want("apps"):
         from .common import kops, make_fe

@@ -15,4 +15,6 @@ python -m pytest -q
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== benchmark smoke: every figure script, tiny sizes =="
     python -m benchmarks.run --smoke
+    echo "== perf record =="
+    test -s BENCH_vector_ops.json && cat BENCH_vector_ops.json
 fi

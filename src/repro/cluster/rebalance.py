@@ -14,8 +14,12 @@ onto new blades *while writes keep landing*:
      recovery uses).
   3. **Epoch swap** — flip the directory assignment, bump the epoch, and
      re-persist the directory to every blade.  Every front-end's next op
-     sees the stale epoch, rebinds, and routes to the destination; the
-     source copy is left behind as a tombstoned cold replica.
+     sees the stale epoch, rebinds, and routes to the destination.
+  4. **Space reclaim** — once no front-end can route to the source (the
+     epoch swap is done), the tombstoned source copy's blocks — data nodes,
+     bucket array, both log areas — are freed back to the source blade's
+     allocator and its naming slots are tombstoned; only the ``*.moved_to``
+     marker stays behind.
 
 The catch-up window is observable in tests via the ``during_copy`` hook,
 which runs after the snapshot and before catch-up — the simulator's stand-in
@@ -51,7 +55,7 @@ def migrate_shard(
     cfe.ensure_fresh()
     src_blade = directory.blade_of(shard)
     stats = {"shard": shard, "src": src_blade, "dst": dst_blade,
-             "copied": 0, "caught_up": 0}
+             "copied": 0, "caught_up": 0, "reclaimed_blocks": 0}
     if src_blade == dst_blade:
         return stats
 
@@ -103,8 +107,8 @@ def migrate_shard(
             cfe.clock.advance_to(dst_fe.clock.now)
         stats["caught_up"] = len(tail)
 
-        # tombstone the source copy (cold replica; space reclaim is a
-        # ROADMAP follow-up)
+        # tombstone the source copy until the epoch swap below makes it
+        # unroutable, then reclaim its blocks (step 4)
         cluster.blades[src_blade].set_name(
             f"{sharded._shard_name(shard)}.moved_to", dst_blade
         )
@@ -117,6 +121,18 @@ def migrate_shard(
     directory.bump_epoch()
     directory.persist(cluster.blades)
     cluster.migrations += 1
+
+    # -- 4. space reclaim --------------------------------------------------
+    if src_obj is not None:
+        src_be = cluster.blades[src_blade]
+        free_before = len(src_be._free)
+        try:
+            src_fe.clock.advance_to(cfe.clock.now)
+            src_obj.destroy_storage()
+            cfe.clock.advance_to(src_fe.clock.now)
+            stats["reclaimed_blocks"] = len(src_be._free) - free_before
+        except CrashError:
+            pass  # source blade died mid-reclaim: nothing left to free
     return stats
 
 

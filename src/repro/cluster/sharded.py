@@ -124,6 +124,104 @@ class ShardedStructure:
     def _on_key(self, key: int, fn: Callable, **kw):
         return self._on_shard(self.cfe.directory.shard_of(key), fn, **kw)
 
+    def _on_shards(self, shard_fns: Dict[int, Callable], *,
+                   create_if_missing: bool = True, default=None) -> Dict[int, object]:
+        """Batch dispatch: run `shard_fns[shard](shard_structure)` for every
+        shard with ONE epoch check per attempt (not per op), sub-batches to
+        different blades overlapping in time (same-blade shards serialize on
+        their shared front-end), and recover-and-retry per blade on
+        failure.  Returns {shard: result}."""
+        out: Dict[int, object] = {}
+        remaining = dict(shard_fns)
+        last: Optional[CrashError] = None
+        for _ in range(1 + MAX_RETRIES):
+            if not remaining:
+                break
+            self.cfe.ensure_fresh()
+            failed_bids = set()
+            by_blade: Dict[int, List[int]] = {}
+            objs: Dict[int, object] = {}
+            for shard in sorted(remaining):
+                bid = self.cfe.directory.blade_of(shard)
+                try:
+                    obj = self._get_shard(shard, create_if_missing)
+                except CrashError as e:
+                    last = e
+                    failed_bids.add(bid)
+                    continue
+                if obj is None:
+                    out[shard] = default
+                    remaining.pop(shard)
+                    continue
+                objs[shard] = obj
+                by_blade.setdefault(bid, []).append(shard)
+            # fan out through the router's batch dispatcher (one clock model
+            # for sub-batch overlap); a blade that dies mid-sub-batch marks
+            # itself failed and the surviving blades' results stand
+            done: List[int] = []
+            errs: List[CrashError] = []
+
+            def _blade_fn(bid: int, shards: List[int]) -> Callable:
+                def run(fe) -> None:
+                    try:
+                        for shard in shards:
+                            out[shard] = remaining[shard](objs[shard])
+                            done.append(shard)
+                    except CrashError as e:
+                        errs.append(e)
+                        failed_bids.add(bid)
+                return run
+
+            self.cfe.execute_batch(
+                {bid: _blade_fn(bid, shards) for bid, shards in by_blade.items()}
+            )
+            if errs:
+                last = errs[-1]
+            for shard in done:
+                remaining.pop(shard, None)
+            for bid in failed_bids:
+                self.cfe.recover_blade(bid)
+        if remaining:
+            raise last  # unrecoverable (e.g. permanent failure, no mirror)
+        return out
+
+    # ------------------------------------------------------------ vector ops
+    def put_many(self, pairs: List[Tuple[int, int]]) -> None:
+        """Partition a write batch by shard, fan the sub-batches out to the
+        per-blade front-ends (each runs its own wave-batched `put_many`),
+        one epoch check for the whole batch."""
+        groups: Dict[int, List[Tuple[int, int]]] = {}
+        for k, v in pairs:
+            groups.setdefault(self.cfe.directory.shard_of(k), []).append((k, v))
+        self._on_shards(
+            {s: (lambda sub: lambda t: t.put_many(sub))(sub)
+             for s, sub in groups.items()}
+        )
+
+    def get_many(self, keys: List[int]) -> List[Optional[int]]:
+        """Partition a read batch by shard, fan out, merge results back into
+        input order (missing shards contribute None)."""
+        groups: Dict[int, List[int]] = {}
+        for i, k in enumerate(keys):
+            groups.setdefault(self.cfe.directory.shard_of(k), []).append(i)
+        res = self._on_shards(
+            {s: (lambda sub: lambda t: t.get_many(sub))([keys[i] for i in idxs])
+             for s, idxs in groups.items()},
+            create_if_missing=False,
+            default=None,
+        )
+        out: List[Optional[int]] = [None] * len(keys)
+        for s, idxs in groups.items():
+            vals = res.get(s)
+            if vals is None:
+                continue
+            for i, v in zip(idxs, vals):
+                out[i] = v
+        return out
+
+    insert_many = put_many
+    lookup_many = get_many
+
     # ------------------------------------------------------------- lifecycle
     def drain(self) -> None:
         """Commit point: flush every touched shard's op-log and memory-log

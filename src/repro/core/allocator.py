@@ -96,6 +96,31 @@ class FrontEndAllocator:
                 self.fe._backend_free(victim.addr, 1)
         self.fe._charge_local_alloc()
 
+    def free_chunk_if_known(self, addr: int) -> bool:
+        """Free a slab chunk only if THIS allocator carved it (bulk reclaim
+        of structures whose nodes may predate this front-end).  An unknown
+        chunk is leaked rather than guessed at: falling through to a block
+        free would release the containing slab, which can hold other
+        structures' live chunks."""
+        if addr in self.chunk_of:
+            self.free(addr)
+            return True
+        return False
+
+    def release_empty(self) -> int:
+        """Return every fully-free slab to the blade immediately (space
+        reclaim after bulk frees, e.g. destroying a migrated shard's source
+        copy).  Returns the number of slabs released."""
+        released = 0
+        for cls, empties in self.empty.items():
+            while empties:
+                victim = empties.pop()
+                for i in range(victim.total):
+                    self.chunk_of.pop(victim.addr + i * cls, None)
+                self.fe._backend_free(victim.addr, 1)
+                released += 1
+        return released
+
     # ------------------------------------------------------------------ util
     @staticmethod
     def _size_class(size: int) -> int:

@@ -30,6 +30,11 @@ NAME_SLOT = 40  # 32B name + 8B value
 NUM_NAME_SLOTS = 512
 NAMING_END = NUM_NAME_SLOTS * NAME_SLOT
 
+# a deleted naming slot: keeps the linear probe sound (an all-zero slot
+# terminates probing, so freed slots cannot simply be zeroed) and is skipped
+# by reboot(); 0xFF never appears in an encoded name
+NAME_TOMBSTONE = b"\xff" * 32
+
 
 class CrashError(RuntimeError):
     """Raised when the blade is down (transient or permanent failure)."""
@@ -79,8 +84,11 @@ class NVMBackend:
         self.permanent_failure = False
         # fail the next physical write after `fail_after` bytes (test hook)
         self._torn_write_at: Optional[int] = None
-        # per-(address, epoch) atomic-op counts (same-address serialization)
+        self._torn_write_after = 0
+        # per-(address, window) atomic-op counts (same-address serialization);
+        # windows older than _atomic_window are evicted as time advances
         self._atomic_contention: Dict = {}
+        self._atomic_window = -1
 
         n_blocks = capacity // block_size
         self.bitmap_start = self.naming_end
@@ -107,12 +115,15 @@ class NVMBackend:
         if not self.alive:
             raise CrashError("back-end blade is down")
         if self._torn_write_at is not None:
-            cut = self._torn_write_at
-            self._torn_write_at = None
-            data = data[:cut]
-            self.arena[addr : addr + len(data)] = data
-            self.alive = False  # power loss mid-write
-            return
+            if self._torn_write_after > 0:
+                self._torn_write_after -= 1
+            else:
+                cut = self._torn_write_at
+                self._torn_write_at = None
+                data = data[:cut]
+                self.arena[addr : addr + len(data)] = data
+                self.alive = False  # power loss mid-write
+                return
         self.arena[addr : addr + len(data)] = data
         if replicate:
             for m in self.mirrors:
@@ -152,18 +163,42 @@ class NVMBackend:
         if name in self._names:
             return self._names[name] * NAME_SLOT + 32
         key = name.encode()[:32].ljust(32, b"\x00")
-        # linear probe over the fixed table; persist the key bytes
+        # linear probe over the fixed table; persist the key bytes.
+        # Tombstoned slots are skipped while probing but remembered: a new
+        # name reuses the first tombstone rather than growing the table.
+        tomb: Optional[int] = None
         for slot in range(self.num_name_slots):
             base = slot * NAME_SLOT
             cur = bytes(self.arena[base : base + 32])
             if cur == key:
                 self._names[name] = slot
                 return base + 32
+            if cur == NAME_TOMBSTONE:
+                if tomb is None:
+                    tomb = slot
+                continue
             if cur == b"\x00" * 32:
+                if tomb is not None:
+                    slot, base = tomb, tomb * NAME_SLOT
                 self._phys_write(base, key)
                 self._names[name] = slot
                 return base + 32
+        if tomb is not None:
+            self._phys_write(tomb * NAME_SLOT, key)
+            self._names[name] = tomb
+            return tomb * NAME_SLOT + 32
         raise RuntimeError("naming region full")
+
+    def delete_name(self, name: str) -> bool:
+        """Tombstone a naming slot (space reclaim of per-structure names
+        after shard migration).  Returns False when the name is absent."""
+        if not self.has_name(name):
+            return False
+        slot = self._names[name]
+        base = slot * NAME_SLOT
+        self._phys_write(base, NAME_TOMBSTONE + b"\x00" * 8)
+        del self._names[name]
+        return True
 
     def get_name(self, name: str) -> int:
         return self.atomic_read(self.name_slot_addr(name))
@@ -258,6 +293,9 @@ class NVMBackend:
     def create_log_area(self, name: str, size_blocks: int) -> "LogArea":
         addr = self.alloc_blocks(size_blocks)
         area = LogArea(self, name, addr, size_blocks * self.block_size)
+        # recycled blocks may hold stale bytes from a reclaimed area; log
+        # decode relies on zeros terminating the scan, so scrub on create
+        self._phys_write(addr, b"\x00" * area.size)
         self._log_areas[name] = area
         self.set_name(f"{name}.addr", addr)
         self.set_name(f"{name}.size", area.size)
@@ -295,7 +333,10 @@ class NVMBackend:
         new_blocks = 2 * (area.size // self.block_size)
         new_addr = self.alloc_blocks(new_blocks)
         live = bytes(self.arena[area.addr + area.applied : area.addr + area.head])
-        self._phys_write(new_addr, live)
+        new_size = new_blocks * self.block_size
+        # scrub before moving the live suffix in (recycled blocks may hold
+        # stale log bytes that would decode as ghost records)
+        self._phys_write(new_addr, live + b"\x00" * (new_size - len(live)))
         self.free_blocks(area.addr, area.size // self.block_size)
         area.addr = new_addr
         area.size = new_blocks * self.block_size
@@ -337,10 +378,12 @@ class NVMBackend:
         self.alive = False
         self.permanent_failure = True
 
-    def schedule_torn_write(self, keep_bytes: int) -> None:
-        """Test hook: the next physical write persists only its first
-        `keep_bytes` bytes, then the blade loses power (paper §4.2)."""
+    def schedule_torn_write(self, keep_bytes: int, after_writes: int = 0) -> None:
+        """Test hook: after letting `after_writes` further physical writes
+        through, the next one persists only its first `keep_bytes` bytes and
+        the blade loses power (paper §4.2)."""
         self._torn_write_at = keep_bytes
+        self._torn_write_after = after_writes
 
     def reboot(self) -> "NVMBackend":
         """Restart after a transient failure.
@@ -352,12 +395,16 @@ class NVMBackend:
         """
         self.alive = True
         self._torn_write_at = None
+        self._torn_write_after = 0
         # naming cache
         self._names.clear()
         names: Dict[str, int] = {}
         for slot in range(self.num_name_slots):
             base = slot * NAME_SLOT
-            raw = bytes(self.arena[base : base + 32]).rstrip(b"\x00")
+            raw = bytes(self.arena[base : base + 32])
+            if raw == NAME_TOMBSTONE:
+                continue  # deleted slot (reusable, not a live name)
+            raw = raw.rstrip(b"\x00")
             if raw:
                 names[raw.decode()] = slot
         self._names = names
@@ -421,11 +468,19 @@ class LogArea:
         self.applied = 0   # replay watermark (LPN)
 
     def compact(self) -> None:
-        """Drop fully-applied prefix (checkpointing the log)."""
+        """Drop fully-applied prefix (checkpointing the log).
+
+        Only the previously-written extent ([0, old head)) needs rewriting:
+        the live suffix slides to the front and the rest of that extent is
+        zeroed so recovery's scan still terminates; bytes past the old head
+        were never written (areas are scrubbed at create/grow) and stay
+        zero — avoiding a full-area rewrite on every checkpoint is a large
+        wall-clock win for long runs with big log areas."""
+        extent = min(self.head, self.size)
         live = bytes(
             self.backend.arena[self.addr + self.applied : self.addr + self.head]
         )
-        self.backend._phys_write(self.addr, live.ljust(self.size, b"\x00")[: self.size])
+        self.backend._phys_write(self.addr, live + b"\x00" * (extent - len(live)))
         self.head -= self.applied
         self.applied = 0
         self.backend.set_name(f"{self.name}.head", self.head)

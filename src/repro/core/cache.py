@@ -33,6 +33,10 @@ class PageCache:
         self.rr_set_size = rr_set_size
         self.pages: Dict[int, bytearray] = {}
         self.last_used: Dict[int, int] = {}
+        # O(1) random candidate draws for rr/hybrid eviction: a dense list
+        # of cached addrs + each addr's position (swap-pop on removal)
+        self._addrs: list = []
+        self._addr_pos: Dict[int, int] = {}
         self.used_bytes = 0
         self.tick = 0
         self.hits = 0
@@ -51,16 +55,29 @@ class PageCache:
         self.last_used[addr] = self.tick
         return page
 
+    def peek(self, addr: int) -> Optional[bytearray]:
+        """Probe without touching hit/miss stats or recency (used by batch
+        prefetch so warming a wave doesn't skew the adaptive thresholds)."""
+        return self.pages.get(addr)
+
     def put(self, addr: int, data: bytes) -> None:
         self.tick += 1
-        old = self.pages.get(addr)
+        # fully remove any old page first: if it merely kept a decremented
+        # counter, the make-room loop below could evict the same addr and
+        # decrement used_bytes twice (driving it negative = over-admission)
+        old = self.pages.pop(addr, None)
         if old is not None:
             self.used_bytes -= len(old)
+            self.last_used.pop(addr, None)
+            self._drop_addr(addr)
         page = bytearray(data)
         while self.used_bytes + len(page) > self.capacity and self.pages:
             self._evict_one()
         if self.used_bytes + len(page) > self.capacity:
             return  # page larger than the whole cache: bypass
+        if addr not in self._addr_pos:
+            self._addr_pos[addr] = len(self._addrs)
+            self._addrs.append(addr)
         self.pages[addr] = page
         self.last_used[addr] = self.tick
         self.used_bytes += len(page)
@@ -71,15 +88,27 @@ class PageCache:
         if page is not None:
             page[offset : offset + len(data)] = data
 
+    def _drop_addr(self, addr: int) -> None:
+        pos = self._addr_pos.pop(addr, None)
+        if pos is None:
+            return
+        last = self._addrs.pop()
+        if last != addr:
+            self._addrs[pos] = last
+            self._addr_pos[last] = pos
+
     def invalidate(self, addr: int) -> None:
         page = self.pages.pop(addr, None)
         if page is not None:
             self.used_bytes -= len(page)
             self.last_used.pop(addr, None)
+            self._drop_addr(addr)
 
     def clear(self) -> None:
         self.pages.clear()
         self.last_used.clear()
+        self._addrs.clear()
+        self._addr_pos.clear()
         self.used_bytes = 0
 
     @property
@@ -92,13 +121,23 @@ class PageCache:
         if self.policy == "lru":
             victim = min(self.last_used, key=self.last_used.get)  # type: ignore[arg-type]
         elif self.policy == "rr":
-            victim = self._rng.choice(list(self.pages.keys()))
-        else:  # hybrid: random candidate set, evict its LRU member
-            keys = list(self.pages.keys())
-            k = min(self.rr_set_size, len(keys))
-            cand = self._rng.sample(keys, k)
-            victim = min(cand, key=lambda a: self.last_used.get(a, 0))
+            victim = self._addrs[self._rng.randrange(len(self._addrs))]
+        else:
+            # hybrid: random candidate set (drawn with replacement — O(1)
+            # per draw instead of an O(n) key-list copy), evict its LRU
+            # member
+            addrs, rng, last_used = self._addrs, self._rng, self.last_used
+            n = len(addrs)
+            k = min(self.rr_set_size, n)
+            victim = addrs[rng.randrange(n)]
+            best = last_used.get(victim, 0)
+            for _ in range(k - 1):
+                a = addrs[rng.randrange(n)]
+                t = last_used.get(a, 0)
+                if t < best:
+                    victim, best = a, t
         page = self.pages.pop(victim)
         self.last_used.pop(victim, None)
+        self._drop_addr(victim)
         self.used_bytes -= len(page)
         self.evictions += 1

@@ -20,13 +20,32 @@ clock; pipelined (async) writes charge only the post overhead plus link
 occupancy; group-committed op logs charge one round per group (classic group
 commit).  The blade's NIC serializes transfers across front-ends, giving
 natural contention for the sharing experiments.
+
+Batch execution path: ``read_many`` / ``prefetch_many`` are doorbell-batched
+vector reads (one issue + one RTT per wave, a cheap WQE post per extra
+item); ``batch(h)`` / ``execute_batch(h, ops)`` suspend the flush cadence so
+a whole group of operations stages its op logs and memory logs together and
+lands with one combined flush at the end of the window.
+
+Combined oplog+memlog flush ordering argument: when a memory-log flush finds
+staged op-log entries, both channels go out as ONE posted write whose
+payload places the op-log bytes *before* the memory-log transaction.  NVM
+persists the write in order, so the op log is durable no later than the data
+it covers: if the write tears inside the op-log bytes, the covered memory
+logs never landed either (the tx checksum drops them at recovery) and the
+surviving op-log prefix replays exactly the surviving ops; if it tears
+inside the memory-log bytes, the op log is already whole and replay
+regenerates the lost memory logs.  The ordering invariant of the two-round
+scheme (op logs durable before or with their data) is preserved while the
+separate ``flush_oplog`` round disappears from the batch path.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import struct
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .allocator import FrontEndAllocator
 from .backend import CrashError, LogArea, NVMBackend
@@ -84,6 +103,7 @@ class StructHandle:
         self.pre_flush = None
         self.post_flush = None  # e.g. multi-version root CAS after durability
         self._in_preflush = False
+        self._in_batch = False  # inside FrontEnd.batch(): flush cadence off
 
     @property
     def opsn_name(self) -> str:
@@ -122,8 +142,18 @@ class FrontEnd:
         self.clock.advance(self.cost.atomic_ns)
         end = self.backend.link.transfer(self.clock.now, 8)
         # atomics to the same 8-byte location serialize at the blade NIC
-        bucket = (addr, int(self.clock.now // 100_000.0))
+        window = int(self.clock.now // 100_000.0)
+        bucket = (addr, window)
         seen = self.backend._atomic_contention
+        # bounded state: when this blade's time moves to a new window, drop
+        # every bucket from older windows (they can never be hit again except
+        # by a front-end still behind in virtual time, whose late buckets are
+        # themselves dropped on the next advance) — long runs stay O(live).
+        if window > self.backend._atomic_window:
+            self.backend._atomic_window = window
+            stale = [k for k in seen if k[1] < window]
+            for k in stale:
+                del seen[k]
         n = seen.get(bucket, 0)
         seen[bucket] = n + 1
         self.clock.advance_to(end + n * 400.0)
@@ -195,10 +225,33 @@ class FrontEnd:
             self.cache.put(addr, data)
         return data
 
+    def _doorbell_wave(self, remote: List[Tuple[int, int, int]], *, cacheable: bool) -> Dict[int, bytes]:
+        """Charge one doorbell-batched read wave and fetch every (i, addr,
+        size) request: the first WQE pays the full issue cost (ringing the
+        doorbell), each further WQE only the cheap post, and the whole wave
+        shares a single RTT + NVM read latency."""
+        start = self.clock.now + self.cost.issue_ns
+        first = True
+        for _, addr, size in remote:
+            if not first:
+                start += self.cost.doorbell_wqe_ns
+            first = False
+            start = self.backend.link.transfer(start, size)
+        self.clock.advance_to(start + self.cost.rtt_ns + self.cost.nvm_read_ns)
+        out: Dict[int, bytes] = {}
+        for i, addr, size in remote:
+            data = self.backend.read(addr, size)
+            self.stats.rdma_reads += 1
+            self.stats.bytes_read += size
+            out[i] = data
+            if self.cfg.use_cache and cacheable:
+                self.cache.put(addr, data)
+        return out
+
     def read_many(self, h: StructHandle, reqs: List[Tuple[int, int]], *, cacheable: bool = True) -> List[bytes]:
-        """Doorbell-batched independent reads (vector ops): one RTT for the
-        batch, per-item issue+transfer.  Falls back to serial reads when
-        batching is off."""
+        """Doorbell-batched independent reads (vector ops): one issue + one
+        RTT for the batch, a cheap WQE post per extra item.  Falls back to
+        serial reads when batching is off."""
         if not self.cfg.use_batch or len(reqs) <= 1:
             return [self.read(h, a, s, cacheable=cacheable) for a, s in reqs]
         out: List[Optional[bytes]] = [None] * len(reqs)
@@ -219,19 +272,37 @@ class FrontEnd:
                 self.stats.cache_misses += 1
             remote.append((i, addr, size))
         if remote:
-            # charge: one RTT for the doorbell batch + per-item issue+xfer
-            start = self.clock.now
-            for _, addr, size in remote:
-                start += self.cost.issue_ns
-                start = self.backend.link.transfer(start, size)
-            self.clock.advance_to(start + self.cost.rtt_ns + self.cost.nvm_read_ns)
-            for i, addr, size in remote:
-                data = self.backend.read(addr, size)
-                self.stats.rdma_reads += 1
-                self.stats.bytes_read += size
+            fetched = self._doorbell_wave(remote, cacheable=cacheable)
+            for i, data in fetched.items():
                 out[i] = data
-                if self.cfg.use_cache and cacheable:
-                    self.cache.put(addr, data)
+        return out  # type: ignore[return-value]
+
+    def prefetch_many(self, h: StructHandle, reqs: List[Tuple[int, int]], *, cacheable: bool = True) -> List[bytes]:
+        """Warm the cache for a batch: like ``read_many`` but charges NO
+        per-node CPU and nothing at all for items already local (write
+        buffer / cache) — the logical node visit is paid later when the
+        operation itself reads the (now cached) node.  Only cache misses pay
+        the doorbell wave.  Returns the bytes so wave walkers can chase
+        pointers while they warm."""
+        if not self.cfg.use_batch:
+            return [self.read(h, a, s, cacheable=cacheable) for a, s in reqs]
+        out: List[Optional[bytes]] = [None] * len(reqs)
+        remote: List[Tuple[int, int, int]] = []
+        for i, (addr, size) in enumerate(reqs):
+            staged = h.wbuf.get(addr)
+            if staged is not None and len(staged) >= size:
+                out[i] = bytes(staged[:size])
+                continue
+            if self.cfg.use_cache:
+                page = self.cache.peek(addr)
+                if page is not None and len(page) >= size:
+                    out[i] = bytes(page[:size])
+                    continue
+            remote.append((i, addr, size))
+        if remote:
+            fetched = self._doorbell_wave(remote, cacheable=cacheable)
+            for i, data in fetched.items():
+                out[i] = data
         return out  # type: ignore[return-value]
 
     # ================================================================ writes
@@ -262,7 +333,7 @@ class FrontEnd:
             h.oplog_staged_ops += 1
             self.stats.oplog_appends += 1
             group = self.cfg.oplog_group if self.cfg.use_batch else self.cfg.oplog_pipeline
-            if h.oplog_staged_ops >= group:
+            if h.oplog_staged_ops >= group and not h._in_batch:
                 self.flush_oplog(h)
         return h.seq
 
@@ -296,6 +367,8 @@ class FrontEnd:
             if h.post_flush is not None:
                 h.post_flush()
             return
+        if h._in_batch:
+            return  # the batch window ends with one combined flush
         if self.cfg.use_batch:
             if h.pending_ops >= self.cfg.batch_ops:
                 self.flush_memlogs(h)
@@ -321,7 +394,13 @@ class FrontEnd:
     def flush_memlogs(self, h: StructHandle, sync: bool = False) -> None:
         """remote_tx_write: one RDMA write carrying all staged memory logs +
         commit flag + checksum.  Also persists the covered op-sequence number
-        so recovery knows which op logs are already reflected in the data."""
+        so recovery knows which op logs are already reflected in the data.
+
+        Staged op-log entries ride the SAME posted write, placed before the
+        memory-log transaction: NVM persists in order, so the op log is
+        durable no later than the data it covers (see the module docstring
+        for the full ordering argument) and the separate flush_oplog round
+        disappears from the batch path."""
         if h.pre_flush is not None and not h._in_preflush:
             h._in_preflush = True
             try:
@@ -329,20 +408,30 @@ class FrontEnd:
             finally:
                 h._in_preflush = False
         if not h.wbuf and h.pending_ops == 0:
+            if h.oplog_staged:
+                self.flush_oplog(h)  # nothing to combine with
             return
+        combined = 0
         if h.oplog_staged:
-            self.flush_oplog(h)  # op logs must be durable first (ordering)
+            # op-log bytes first in the combined payload (ordering)
+            oplog_payload = b"".join(h.oplog_staged)
+            self.backend.tx_append(h.oplog_area, oplog_payload)
+            self.backend.set_name(f"{h.name}.seq", h.seq)
+            h.oplog_staged.clear()
+            h.oplog_staged_ops = 0
+            combined = len(oplog_payload)
+            self.stats.combined_flushes += 1
         entries = [MemLog(self.backend.name_slot_addr(h.opsn_name), struct.pack("<Q", h.seq))]
         entries += [MemLog(a, d) for a, d in h.wbuf.items()]
         payload = encode_tx(entries)
         self.backend.tx_append(h.txlog_area, payload)
         self.stats.rdma_writes += 1
-        self.stats.bytes_written += len(payload)
+        self.stats.bytes_written += combined + len(payload)
         self.stats.memlogs_flushed += len(h.wbuf)
         if sync:
-            self._round(len(payload), nvm_write=True)
+            self._round(combined + len(payload), nvm_write=True)
         else:
-            self._pipelined_write(len(payload))
+            self._pipelined_write(combined + len(payload))
         h.wbuf.clear()
         h.pending_ops = 0
         # the blade applies committed logs off the front-end's critical path
@@ -358,14 +447,38 @@ class FrontEnd:
 
     def drain(self, h: StructHandle) -> None:
         """Flush everything (end of benchmark / clean shutdown)."""
-        self.flush_oplog(h)
-        self.flush_memlogs(h, sync=True)
+        self.flush_memlogs(h, sync=True)  # folds any staged op logs in
+        self.flush_oplog(h)  # pre_flush may have staged fresh entries
 
     def drain_all(self) -> None:
         """Drain every structure handle this front-end has registered — the
         per-blade hook the cluster router fans out over its member blades."""
         for h in self.handles:
             self.drain(h)
+
+    # ======================================================= batch execution
+    @contextlib.contextmanager
+    def batch(self, h: StructHandle):
+        """A batch window: operations inside stage their op logs and memory
+        logs without tripping the per-op / group flush cadence; the window
+        closes with ONE combined oplog+memlog flush (one posted write for
+        the whole batch).  Only meaningful with the op log on (R): the naive
+        and symmetric paths keep their own durability discipline."""
+        if h._in_batch or not self.cfg.use_oplog or self.cfg.symmetric:
+            yield h  # nested or non-R: no-op window
+            return
+        h._in_batch = True
+        try:
+            yield h
+        finally:
+            h._in_batch = False
+            self.flush_memlogs(h)
+
+    def execute_batch(self, h: StructHandle, ops: Sequence[Callable[[], object]]) -> List[object]:
+        """Run a group of thunks (each one structure operation) as a single
+        batch window and return their results."""
+        with self.batch(h):
+            return [op() for op in ops]
 
     # ================================================================ atomics
     def atomic_read(self, addr: int) -> int:

@@ -36,6 +36,8 @@ class CostModel:
     dram_ns: float = 60.0           # front-end cache hit
     cpu_op_ns: float = 250.0        # software overhead per data-structure op
     issue_ns: float = 450.0         # post a work-queue entry (doorbell etc.)
+    doorbell_wqe_ns: float = 120.0  # extra WQE in an already-rung doorbell
+                                    # batch (vector ops amortize issue_ns)
     atomic_ns: float = 2200.0       # RDMA atomic verb (slightly > RTT)
     backend_apply_ns_per_byte: float = 0.35   # log replay cost on the blade
     nic_msg_ns: float = 150.0       # blade NIC per-message cost (IOPS cap)
@@ -63,6 +65,7 @@ class Stats:
     tx_commits: int = 0
     memlogs_flushed: int = 0
     memlogs_coalesced: int = 0
+    combined_flushes: int = 0   # oplog+memlog folded into one posted write
     ops_annulled: int = 0
     reader_retries: int = 0
 

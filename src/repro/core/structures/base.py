@@ -1,12 +1,57 @@
-"""Shared machinery for remote persistent data structures."""
+"""Shared machinery for remote persistent data structures.
+
+Vector-op support: every structure exposes ``*_many`` batch entry points
+(``get_many``/``put_many`` on maps, ``insert_many``/``lookup_many`` on
+trees/lists — the base class aliases one family to the other).  The base
+implementations fall back to the serial loop; subclasses override them with
+wave-batched traversals built on ``FrontEnd.read_many`` /
+``prefetch_many`` (one doorbell round per wave of independent node reads)
+so a batch shares traversal prefixes and pays one RTT per frontier level
+instead of one per node.  ``wave_prefetch`` is the shared pointer-chasing
+helper: it advances a cursor per batch item, deduplicates the addresses each
+wave, and fetches them with a single doorbell batch while the per-item
+``advance`` callbacks chase the returned bytes.
+"""
 
 from __future__ import annotations
 
 import struct
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from ..frontend import FrontEnd, StructHandle
 from ..oplog import OpLog
+
+
+def wave_prefetch(
+    fe: FrontEnd,
+    h: StructHandle,
+    cursors: Dict[int, Tuple[int, int]],
+    advance: Callable[[int, bytes], Optional[Tuple[int, int]]],
+    *,
+    cacheable: bool = True,
+) -> None:
+    """Drive many pointer chases with doorbell-batched read waves.
+
+    ``cursors`` maps item id -> (addr, size) of the node it needs next;
+    ``advance(item, raw)`` consumes the node bytes and returns the next
+    (addr, size) — or None when that item's traversal is done.  Each wave
+    deduplicates the outstanding addresses, fetches them with ONE
+    ``prefetch_many`` doorbell batch (cache misses only), then advances
+    every item.  Items whose next node was fetched by the same wave simply
+    hit the warmed cache on the following wave for free.
+    """
+    while cursors:
+        reqs = sorted({req for req in cursors.values()})
+        fetched = dict(zip(reqs, fe.prefetch_many(h, list(reqs), cacheable=cacheable)))
+        nxt: Dict[int, Tuple[int, int]] = {}
+        for item, req in cursors.items():
+            cur: Optional[Tuple[int, int]] = req
+            # advance may hop several already-fetched nodes in one wave
+            while cur is not None and cur in fetched:
+                cur = advance(item, fetched[cur])
+            if cur is not None:
+                nxt[item] = cur
+        cursors = nxt
 
 
 def mix64(x: int) -> int:
@@ -45,6 +90,55 @@ class RemoteStructure:
 
     def write_root(self, value: int) -> None:
         self.fe.write(self.h, self.root_addr, struct.pack("<Q", value))
+
+    # vector ops -------------------------------------------------------------
+    # Serial fallbacks; subclasses override with wave-batched traversals.
+    # Maps speak get/put, trees and lists speak lookup/insert — the aliases
+    # below make both families available on every structure.
+    def put_many(self, pairs: List[tuple]) -> None:
+        write = getattr(self, "put", None) or self.insert  # type: ignore[attr-defined]
+        for k, v in pairs:
+            write(k, v)
+
+    def get_many(self, keys: List[int]) -> List[Optional[int]]:
+        read = getattr(self, "get", None) or self.find  # type: ignore[attr-defined]
+        return [read(k) for k in keys]
+
+    def insert_many(self, pairs: List[tuple]) -> None:
+        self.put_many(pairs)
+
+    def lookup_many(self, keys: List[int]) -> List[Optional[int]]:
+        return self.get_many(keys)
+
+    # space reclaim ----------------------------------------------------------
+    def _free_storage(self) -> None:
+        """Subclass hook: free the structure's own data blocks (nodes,
+        bucket arrays, ...) through the front-end allocator."""
+
+    def destroy_storage(self) -> None:
+        """Release every NVM block this structure owns back to the blade:
+        data nodes (via ``_free_storage``), both log areas, and the naming
+        slots (tombstoned so the linear probe stays sound).  Used by shard
+        migration to reclaim the tombstoned source copy — afterwards the
+        blocks are on the blade's free list and the structure must never be
+        touched again through this object."""
+        be = self.fe.backend
+        self._free_storage()
+        self.fe.allocator.release_empty()
+        for area in (self.h.oplog_area, self.h.txlog_area):
+            be.free_blocks(area.addr, area.size // be.block_size)
+            be._log_areas.pop(area.name, None)
+            for suffix in ("addr", "size", "head", "applied"):
+                be.delete_name(f"{area.name}.{suffix}")
+        for n in (f"{self.name}.seq", f"{self.name}.opsn", f"{self.name}.root"):
+            be.delete_name(n)
+        # a destroyed handle must not be drained again
+        if self.h in self.fe.handles:
+            self.fe.handles.remove(self.h)
+        self.h.wbuf.clear()
+        self.h.oplog_staged.clear()
+        self.h.oplog_staged_ops = 0
+        self.h.pending_ops = 0
 
     # recovery ---------------------------------------------------------------
     def replay(self, entries: List[OpLog]) -> int:

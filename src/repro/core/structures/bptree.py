@@ -14,6 +14,8 @@ from typing import List, Optional, Tuple
 from ..frontend import FrontEnd
 from .base import RemoteStructure
 
+WAVE = 2048  # max independent reads rung with one doorbell
+
 OP_INSERT = 1
 
 FANOUT = 14  # max keys per node
@@ -143,6 +145,59 @@ class RemoteBPTree(RemoteStructure):
             return node.ptrs[i]
         return None
 
+    # ------------------------------------------------------------ vector ops
+    def get_many(self, keys: List[int]) -> List[Optional[int]]:
+        """Vector lookup (aliased as ``lookup_many``): the sorted batch
+        descends as key *segments* — every frontier level is one
+        doorbell-batched read wave, so a batch of B lookups costs one RTT
+        per tree level instead of B of them."""
+        if not self.fe.cfg.use_batch or len(keys) <= 1 or not self._root:
+            return [self.find(k) for k in keys]
+        out: List[Optional[int]] = [None] * len(keys)
+        rem: List[int] = []
+        for i, k in enumerate(keys):
+            j = bisect_left(self._vecbuf, (k,))
+            if j < len(self._vecbuf) and self._vecbuf[j][0] == k:
+                out[i] = self._vecbuf[j][1]
+            else:
+                rem.append(i)
+        if not rem:
+            return out
+        rem.sort(key=lambda i: keys[i])
+        skeys = [keys[i] for i in rem]
+        frontier: List[Tuple[int, int, int]] = [(0, len(rem), self._root)]
+        depth = 0
+        while frontier:
+            reads = self.fe.read_many(
+                self.h,
+                [(addr, NODE_SIZE) for _, _, addr in frontier],
+                cacheable=depth <= self.cache_level_thr,
+            )
+            nxt: List[Tuple[int, int, int]] = []
+            for (b, e, _), raw in zip(frontier, reads):
+                node = BNode.decode(raw)
+                if node.kind == LEAF:
+                    for idx in range(b, e):
+                        j = bisect_left(node.keys, skeys[idx])
+                        if j < len(node.keys) and node.keys[j] == skeys[idx]:
+                            out[rem[idx]] = node.ptrs[j]
+                else:
+                    i = b
+                    while i < e:
+                        child = bisect_right(node.keys, skeys[i])
+                        # extent of the segment routed to this child: keys
+                        # strictly beyond the child's separator leave it
+                        hi = (bisect_left(skeys, node.keys[child], i, e)
+                              if child < len(node.keys) else e)
+                        hi = max(hi, i + 1)
+                        nxt.append((i, hi, node.ptrs[child]))
+                        i = hi
+            frontier = nxt
+            depth += 1
+        for _ in keys:
+            self._adapt()
+        return out
+
     # ------------------------------------------------------------ primitives
     def _insert_base(self, key: int, value: int) -> None:
         if not self._root:
@@ -208,29 +263,47 @@ class RemoteBPTree(RemoteStructure):
 
     # ------------------------------------------------------------- traversal
     def items(self) -> List[Tuple[int, int]]:
-        out: List[Tuple[int, int]] = []
-        if self._root:
-            addr, depth = self._root, 0
-            node = self._read(addr, depth)
-            while node.kind == INTERNAL:
-                addr, depth = node.ptrs[0], depth + 1
-                node = self._read(addr, depth)
-            while True:
-                out.extend(zip(node.keys, node.ptrs[:-1]))
-                if not node.next_leaf:
-                    break
-                node = self._read(node.next_leaf, depth)
-        overlay = dict(self._vecbuf)
-        merged = {k: v for k, v in out}
-        merged.update(overlay)
-        return sorted(merged.items())
+        return self.range_items(-(1 << 63), (1 << 63) - 1)
 
     def range_items(self, lo: int, hi: int) -> List[Tuple[int, int]]:
-        """All (key, value) with lo <= key <= hi, via the leaf chain.  The
-        unmaterialized vector-insert overlay is merged in, so results match
-        items() restricted to the range."""
+        """All (key, value) with lo <= key <= hi.  The unmaterialized
+        vector-insert overlay is merged in, so results match a full scan
+        restricted to the range.
+
+        With batching on, the scan fans out down the subtree covering
+        [lo, hi]: each level's covered children are read with one doorbell
+        wave (chunked at WAVE), so the leaf level — the bulk of the reads,
+        and previously a strictly serial ``next_leaf`` pointer chase — costs
+        one RTT instead of one per leaf."""
         out: List[Tuple[int, int]] = []
-        if self._root:
+        if self._root and self.fe.cfg.use_batch:
+            level: List[int] = [self._root]
+            depth = 0
+            while level:
+                nodes: List[BNode] = []
+                for c in range(0, len(level), WAVE):
+                    raws = self.fe.read_many(
+                        self.h,
+                        [(a, NODE_SIZE) for a in level[c : c + WAVE]],
+                        cacheable=depth <= self.cache_level_thr,
+                    )
+                    nodes.extend(BNode.decode(r) for r in raws)
+                if nodes[0].kind == LEAF:
+                    for node in nodes:
+                        for k, v in zip(node.keys, node.ptrs[:-1]):
+                            if lo <= k <= hi:
+                                out.append((k, v))
+                    break
+                nxt: List[int] = []
+                last = len(nodes) - 1
+                for m, node in enumerate(nodes):
+                    jlo = bisect_right(node.keys, lo) if m == 0 else 0
+                    jhi = (bisect_right(node.keys, hi)
+                           if m == last else len(node.ptrs) - 1)
+                    nxt.extend(node.ptrs[jlo : jhi + 1])
+                level = nxt
+                depth += 1
+        elif self._root:
             addr, depth = self._root, 0
             node = self._read(addr, depth)
             while node.kind == INTERNAL:
@@ -251,3 +324,20 @@ class RemoteBPTree(RemoteStructure):
             if lo <= k <= hi:
                 merged[k] = v
         return sorted(merged.items())
+
+    # ---------------------------------------------------------- space reclaim
+    def _free_storage(self) -> None:
+        """Free every node level by level (shard migration reclaim).  Nodes
+        carved by an earlier front-end incarnation are leaked rather than
+        guessed at (see free_chunk_if_known)."""
+        level = [self._root] if self._root else []
+        while level:
+            raws = self.fe.read_many(self.h, [(a, NODE_SIZE) for a in level])
+            nxt: List[int] = []
+            for addr, raw in zip(level, raws):
+                node = BNode.decode(raw)
+                if node.kind == INTERNAL:
+                    nxt.extend(node.ptrs)
+                self.fe.allocator.free_chunk_if_known(addr)
+            level = nxt
+        self._root = 0

@@ -91,6 +91,51 @@ class RemoteBST(RemoteStructure):
         self._adapt()
         return None
 
+    # ------------------------------------------------------------ vector ops
+    def get_many(self, keys: List[int]) -> List[Optional[int]]:
+        """Vector lookup (aliased as ``lookup_many``): the sorted batch
+        descends once as key segments — BFS over [begin, end) ranges, one
+        doorbell-batched read wave per frontier level (the read pattern of
+        Algorithm 1's vector insert, applied to lookups)."""
+        if not self.fe.cfg.use_batch or len(keys) <= 1 or not self._root:
+            return [self.find(k) for k in keys]
+        out: List[Optional[int]] = [None] * len(keys)
+        rem: List[int] = []
+        for i, k in enumerate(keys):
+            j = bisect_left(self._vecbuf, (k,))
+            if j < len(self._vecbuf) and self._vecbuf[j][0] == k:
+                out[i] = self._vecbuf[j][1]
+            else:
+                rem.append(i)
+        if not rem:
+            return out
+        rem.sort(key=lambda i: keys[i])
+        skeys = [keys[i] for i in rem]
+        frontier: List[Tuple[int, int, int, int]] = [(0, len(rem), self._root, 0)]
+        while frontier:
+            depth = frontier[0][3]  # BFS: one level per wave
+            reads = self.fe.read_many(
+                self.h,
+                [(addr, NODE_SIZE) for _, _, addr, _ in frontier],
+                cacheable=depth <= self.cache_level_thr,
+            )
+            nxt: List[Tuple[int, int, int, int]] = []
+            for (b, e, _, depth), raw in zip(frontier, reads):
+                k, v, l, r = NODE.unpack(raw)
+                mid_lo = bisect_left(skeys, k, b, e)
+                mid_hi = mid_lo
+                while mid_hi < e and skeys[mid_hi] == k:
+                    out[rem[mid_hi]] = v
+                    mid_hi += 1
+                if b < mid_lo and l:
+                    nxt.append((b, mid_lo, l, depth + 1))
+                if mid_hi < e and r:
+                    nxt.append((mid_hi, e, r, depth + 1))
+            frontier = nxt
+        for _ in keys:
+            self._adapt()
+        return out
+
     # ------------------------------------------------------------ primitives
     def _insert_base(self, key: int, value: int) -> None:
         if not self._root:
