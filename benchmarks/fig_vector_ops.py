@@ -102,6 +102,44 @@ def bench_structure(structure: str, preload: int, n_ops: int,
     return row
 
 
+def bench_cross_structure(preload: int, n_ops: int, batch: int = 64) -> Dict[str, float]:
+    """Cross-structure batch_all() window on one blade: a mixed workload
+    touching a hash table AND a bst.  Serial per-op routing vs. windows
+    that partition each batch by structure, run each part through its own
+    wave-batched ``put_many``/``insert_many``, and drain BOTH structures'
+    staged channels in ONE combined oplog+memlog posted write at window
+    close (the same composition ``ClusterFrontEnd.execute_batch`` applies
+    per blade)."""
+    rng = random.Random(19)
+    mixed = [(rng.randrange(2), rng.randrange(1 << 30), i) for i in range(n_ops)]
+    row: Dict[str, float] = {"batch": batch}
+    for mode in ("serial", "batched"):
+        be = NVMBackend(capacity=1 << 26)
+        fe = FrontEnd(be, FEConfig.rcb(cache_bytes=_cache_bytes("hashtable", preload)))
+        ht, _ = build_structure(fe, "x_ht", "hashtable", preload, seed=0)
+        bst, _ = build_structure(fe, "x_bst", "bst", preload, seed=1)
+        t0, w0 = fe.clock.now, time.perf_counter()
+        if mode == "serial":
+            for which, k, v in mixed:
+                (ht.put if which else bst.insert)(k, v)
+        else:
+            for i in range(0, len(mixed), batch):
+                chunk = mixed[i : i + batch]
+                ht_part = [(k, v) for which, k, v in chunk if which]
+                bst_part = [(k, v) for which, k, v in chunk if not which]
+                with fe.batch_all():
+                    if ht_part:
+                        ht.put_many(ht_part)
+                    if bst_part:
+                        bst.insert_many(bst_part)
+        fe.drain(ht.h)
+        fe.drain(bst.h)
+        row[f"{mode}_put_kops"] = kops(n_ops, fe.clock.now - t0)
+        row[f"{mode}_put_wall_ops"] = n_ops / max(time.perf_counter() - w0, 1e-9)
+    row["put_speedup"] = row["batched_put_kops"] / row["serial_put_kops"]
+    return row
+
+
 def bench_cluster(preload: int, n_ops: int, batch: int = 64,
                   n_blades: int = 4) -> Dict[str, float]:
     """End-to-end cluster batch path: ShardedHashTable over `n_blades`
@@ -147,6 +185,11 @@ def main(preload: int = 15000, n_ops: int = 2560, batch: int = 64,
               f" {row['put_speedup']:>5.1f}x {row['serial_get_kops']:>9.1f}K"
               f" {row['batched_get_kops']:>10.1f}K {row['get_speedup']:>5.1f}x"
               f"  {row['batched_put_wall_ops']:>10.0f}")
+    row = bench_cross_structure(preload, n_ops, batch)
+    out["cross_structure"] = row
+    print(f"{'ht+bst':<12} {row['serial_put_kops']:>9.1f}K"
+          f" {row['batched_put_kops']:>10.1f}K {row['put_speedup']:>5.1f}x"
+          f" {'':>11} {'':>12} {'':>6}  {row['batched_put_wall_ops']:>10.0f}")
     if with_cluster:
         row = bench_cluster(preload, n_ops, batch)
         out["cluster_hashtable"] = row

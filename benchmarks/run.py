@@ -115,9 +115,12 @@ def main(argv=None) -> None:
 
     if want("vector"):
         import json
+        import time
 
         from .fig_vector_ops import main as fvec
+        wall0 = time.perf_counter()
         out = fvec(preload=preload, n_ops=max(n_ops, 128))
+        wall_s = time.perf_counter() - wall0
         row = out["hashtable"]
         emit("vector_hashtable_put_many", 1e3 / row["batched_put_kops"],
              f"batched_vs_serial={row['put_speedup']:.1f}x")
@@ -132,9 +135,17 @@ def main(argv=None) -> None:
                     "wall_clock_ops_per_sec": round(r[f"batched_{op}_wall_ops"], 1),
                     "speedup_vs_serial": round(r[f"{op}_speedup"], 2),
                 })
+        # provenance + wall-clock of the emitting run, so the CI regression
+        # guard compares like-for-like (see scripts/check_bench.py)
+        record.append({
+            "name": "vector_bench_meta",
+            "preload": preload,
+            "n_ops": max(n_ops, 128),
+            "wall_clock_seconds": round(wall_s, 1),
+        })
         with open(args.bench_json, "w") as f:
             json.dump(record, f, indent=2)
-        print(f"[vector] perf record -> {args.bench_json}")
+        print(f"[vector] perf record -> {args.bench_json} ({wall_s:.0f}s wall)")
 
     if want("apps"):
         from .common import kops, make_fe

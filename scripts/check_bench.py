@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Bench-regression guard for the vector-ops perf record.
+
+Usage: check_bench.py FRESH_JSON BASELINE_JSON [--max-drop 0.10]
+
+Compares every ``speedup_vs_serial`` entry in a freshly emitted
+``BENCH_vector_ops.json`` against the committed baseline and fails (exit 1)
+when any entry dropped more than ``--max-drop`` (default 10%) below it, or
+when a baseline entry disappeared.  Both files must come from the same
+``benchmarks.run`` invocation sizes — the ``vector_bench_meta`` entry records
+the sizes, and a mismatch is an error (a smoke-size run compared against a
+quick-size baseline would guard nothing).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path: str) -> tuple[dict, dict]:
+    with open(path) as f:
+        entries = json.load(f)
+    speedups = {e["name"]: e["speedup_vs_serial"]
+                for e in entries if "speedup_vs_serial" in e}
+    meta = next((e for e in entries if e.get("name") == "vector_bench_meta"), {})
+    return speedups, meta
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh")
+    ap.add_argument("baseline")
+    ap.add_argument("--max-drop", type=float, default=0.10)
+    args = ap.parse_args(argv)
+
+    fresh, fmeta = _load(args.fresh)
+    base, bmeta = _load(args.baseline)
+
+    fsz = (fmeta.get("preload"), fmeta.get("n_ops"))
+    bsz = (bmeta.get("preload"), bmeta.get("n_ops"))
+    if None not in fsz and None not in bsz and fsz != bsz:
+        print(f"check_bench: size mismatch fresh={fsz} baseline={bsz} — "
+              "regenerate the baseline with the same run sizes", file=sys.stderr)
+        return 1
+
+    failed = False
+    for name, ref in sorted(base.items()):
+        cur = fresh.get(name)
+        if cur is None:
+            print(f"check_bench: FAIL {name}: missing from fresh record", file=sys.stderr)
+            failed = True
+            continue
+        floor = ref * (1.0 - args.max_drop)
+        status = "ok"
+        if cur < floor:
+            status = f"FAIL (<{floor:.2f})"
+            failed = True
+        print(f"check_bench: {name}: baseline {ref:.2f}x fresh {cur:.2f}x {status}")
+    if fmeta.get("wall_clock_seconds") is not None:
+        print(f"check_bench: fresh run wall-clock {fmeta['wall_clock_seconds']}s")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

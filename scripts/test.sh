@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + a benchmark smoke pass.
+# CI entry point: tier-1 tests + a benchmark smoke pass + bench-regression guard.
 #
-#   scripts/test.sh            tier-1 suite, then every figure script end to
-#                              end at --smoke sizes (< ~1 min)
+#   scripts/test.sh            tier-1 suite, every figure script end to end at
+#                              --smoke sizes (< ~1 min), then the vector-ops
+#                              bench-regression guard at --quick sizes
 #   scripts/test.sh --no-bench tier-1 suite only
+#
+# The committed BENCH_vector_ops.json baseline is generated with
+#   python -m benchmarks.run --quick --only vector
+# (sizes are recorded in its vector_bench_meta entry); the guard re-runs the
+# same invocation into a scratch file and fails on a >10% speedup drop.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,8 +19,11 @@ echo "== tier-1: pytest =="
 python -m pytest -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
+    scratch="$(mktemp -d)"
+    trap 'rm -rf "$scratch"' EXIT
     echo "== benchmark smoke: every figure script, tiny sizes =="
-    python -m benchmarks.run --smoke
-    echo "== perf record =="
-    test -s BENCH_vector_ops.json && cat BENCH_vector_ops.json
+    python -m benchmarks.run --smoke --bench-json "$scratch/bench_smoke.json"
+    echo "== bench-regression guard: vector ops at --quick sizes =="
+    python -m benchmarks.run --quick --only vector --bench-json "$scratch/bench_fresh.json"
+    python scripts/check_bench.py "$scratch/bench_fresh.json" BENCH_vector_ops.json
 fi

@@ -28,11 +28,10 @@ for concurrent front-ends writing mid-migration.
 
 from __future__ import annotations
 
-import struct
 from typing import Callable, Dict, Optional
 
 from ..core.backend import CrashError
-from ..core.oplog import OpLog, decode_oplogs
+from ..core.oplog import committed_tail
 from .sharded import ShardedStructure
 
 
@@ -91,14 +90,14 @@ def migrate_shard(
         # silently drained to the tombstoned source after the epoch swap
         cluster.quiesce_blade(src_blade)
         # re-read the source op log: entries past the snapshot watermark
-        # arrived mid-copy (from any front-end sharing this shard)
+        # arrived mid-copy (from any front-end sharing this shard).
+        # committed_tail applies the same commit guards as crash recovery:
+        # capped at the durable {name}.seq watermark (torn-window ghost
+        # entries the source's own recovery would discard are not replayed
+        # onto the destination) and deduplicated by seq last-wins.
         src_fe.clock.advance_to(cfe.clock.now)
-        raw = src_obj.h.oplog_area.read_all()
-        tail = []
-        for e in decode_oplogs(raw):
-            (seq,) = struct.unpack_from("<Q", e.payload, 0)
-            if seq > snapshot_seq:
-                tail.append(OpLog(e.op, e.payload[8:]))
+        durable = cluster.blades[src_blade].get_name(f"{src_obj.name}.seq")
+        tail = committed_tail(src_obj.h.oplog_area.read_all(), snapshot_seq, durable)
         cfe.clock.advance_to(src_fe.clock.now)
         if tail:
             dst_fe.clock.advance_to(cfe.clock.now)

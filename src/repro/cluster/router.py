@@ -211,14 +211,22 @@ class ClusterFrontEnd:
             self.clock.advance_to(fe.clock.now)
 
     # --------------------------------------------------------- batch dispatch
-    def execute_batch(self, per_blade: Dict[int, Callable[[FrontEnd], object]]) -> Dict[int, object]:
+    def execute_batch(self, per_blade: Dict[int, Callable[[FrontEnd], object]],
+                      combined: bool = True) -> Dict[int, object]:
         """Fan a batch out over blades: ONE epoch check for the whole batch,
         then every blade's sub-batch starts at the same client time and runs
         against its own front-end/link — the client resumes at the *latest*
         completion (sub-batches to different blades overlap on the fabric,
         which is exactly the aggregate-bandwidth win of a multi-blade
-        cluster; per-op routing serialized them needlessly).  Returns
-        {blade_id: fn result}."""
+        cluster; per-op routing serialized them needlessly).
+
+        With ``combined`` (the default) each blade's sub-batch runs inside
+        that front-end's cross-structure ``batch_all()`` window: ops may
+        span several handles on the blade and still drain as ONE combined
+        oplog+memlog posted write per blade.  Callers that manage their own
+        windows (e.g. the sharded batch dispatcher, which needs to observe
+        the window close for all-or-none retry accounting) pass
+        ``combined=False``.  Returns {blade_id: fn result}."""
         self.ensure_fresh()
         t0 = self.clock.now
         out: Dict[int, object] = {}
@@ -226,7 +234,11 @@ class ClusterFrontEnd:
         for bid, fn in sorted(per_blade.items()):
             fe = self.fe_for_blade(bid)
             fe.clock.advance_to(t0)
-            out[bid] = fn(fe)
+            if combined:
+                with fe.batch_all():
+                    out[bid] = fn(fe)
+            else:
+                out[bid] = fn(fe)
             end = max(end, fe.clock.now)
         self.clock.advance_to(end)
         return out

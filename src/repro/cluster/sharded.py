@@ -156,24 +156,40 @@ class ShardedStructure:
                 objs[shard] = obj
                 by_blade.setdefault(bid, []).append(shard)
             # fan out through the router's batch dispatcher (one clock model
-            # for sub-batch overlap); a blade that dies mid-sub-batch marks
-            # itself failed and the surviving blades' results stand
+            # for sub-batch overlap).  Each blade's sub-batch runs inside a
+            # cross-structure batch_all() window — every shard on the blade
+            # stages into one combined oplog+memlog posted write — and a
+            # shard only counts as done once its blade's window CLOSED
+            # (combined flush landed).  A blade that dies mid-window gets
+            # its WHOLE sub-batch re-run after recovery; the combined flush
+            # commits per handle (seq watermark), so a shard whose window
+            # segment already committed before the tear re-applies the same
+            # ops — safe because every op routed through this dispatcher is
+            # an idempotent upsert (put/insert/delete), NOT a general
+            # exactly-once guarantee for non-idempotent ops.
             done: List[int] = []
             errs: List[CrashError] = []
 
             def _blade_fn(bid: int, shards: List[int]) -> Callable:
                 def run(fe) -> None:
+                    ran: List[int] = []
                     try:
-                        for shard in shards:
-                            out[shard] = remaining[shard](objs[shard])
-                            done.append(shard)
+                        with fe.batch_all():
+                            for shard in shards:
+                                out[shard] = remaining[shard](objs[shard])
+                                ran.append(shard)
                     except CrashError as e:
                         errs.append(e)
                         failed_bids.add(bid)
+                        for shard in ran:  # window lost with the blade
+                            out.pop(shard, None)
+                    else:
+                        done.extend(ran)
                 return run
 
             self.cfe.execute_batch(
-                {bid: _blade_fn(bid, shards) for bid, shards in by_blade.items()}
+                {bid: _blade_fn(bid, shards) for bid, shards in by_blade.items()},
+                combined=False,
             )
             if errs:
                 last = errs[-1]
@@ -189,7 +205,10 @@ class ShardedStructure:
     def put_many(self, pairs: List[Tuple[int, int]]) -> None:
         """Partition a write batch by shard, fan the sub-batches out to the
         per-blade front-ends (each runs its own wave-batched `put_many`),
-        one epoch check for the whole batch."""
+        one epoch check for the whole batch.  Shards co-resident on one
+        blade share that blade's batch_all() window, so the entire blade
+        sub-batch — however many shard structures it spans — drains with a
+        single combined oplog+memlog posted write."""
         groups: Dict[int, List[Tuple[int, int]]] = {}
         for k, v in pairs:
             groups.setdefault(self.cfe.directory.shard_of(k), []).append((k, v))

@@ -120,6 +120,16 @@ class NVMBackend:
             else:
                 cut = self._torn_write_at
                 self._torn_write_at = None
+                if len(data) <= 8:
+                    # 8-byte (word) writes are persist-atomic on PM hardware
+                    # — commit-point slots (log heads, seq watermarks) land
+                    # whole; the power loss follows the word.  The mirror is
+                    # NOT updated: replication of this last word never left
+                    # the dying blade, so the mirror stays at the previous
+                    # commit point (each copy recovers consistently).
+                    self.arena[addr : addr + len(data)] = data
+                    self.alive = False
+                    return
                 data = data[:cut]
                 self.arena[addr : addr + len(data)] = data
                 self.alive = False  # power loss mid-write

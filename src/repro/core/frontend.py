@@ -27,6 +27,38 @@ item); ``batch(h)`` / ``execute_batch(h, ops)`` suspend the flush cadence so
 a whole group of operations stages its op logs and memory logs together and
 lands with one combined flush at the end of the window.
 
+The *write* side mirrors it:
+
+  * ``write_wave()`` opens a doorbell write wave: every posted-write round
+    issued inside (slab-refill/free RPCs, sync op-log group commits) pays
+    ``issue_ns`` for the first WQE and ``doorbell_wqe_ns`` per extra one,
+    with the completion (RTT + NVM write) charged once when the wave closes
+    — the vector-op analogue of pipelining the batch's allocation RPCs and
+    group commits behind the apply compute.  Data-structure ops inside a
+    wave charge ``cpu_batch_op_ns`` instead of ``cpu_op_ns`` (one software
+    dispatch for the whole batch).  All ``*_many`` entry points run inside
+    a wave.
+  * ``write_many(h, writes)`` stages a batch of apply-phase writes exactly
+    as the serial loop would (same bytes, same order — the arena stays
+    byte-identical) but charges the staging cost per *combined WQE*:
+    adjacent-address writes merge into one.
+  * ``batch_all()`` generalizes ``batch(h)`` across every handle this
+    front-end owns: ops touching several structures on one blade stage
+    together and drain with ONE combined oplog+memlog posted write for the
+    whole blade (op-log bytes first, per handle — see below).
+  * the wave *width* (WQEs per doorbell before re-ringing) is adaptive:
+    picked from the observed cache miss-ratio and the blade link's epoch
+    utilization inside a ``CostModel``-derived floor/ceiling band
+    (``wave_floor``/``wave_ceiling``); ``FEConfig.fixed_wave=N`` pins it
+    for deterministic tests.
+
+Group/window commit point: every op-log flush writes the entry bytes first
+and the persisted ``{name}.seq`` watermark slot *after* them, and recovery
+(``unreplayed_oplogs``) replays only entries at or below the watermark — so
+a flush torn anywhere before the watermark write makes the whole group
+invisible (all-or-none), and entries are never replayed while newer bytes
+for the same seq exist later in the log (last-wins dedup).
+
 Combined oplog+memlog flush ordering argument: when a memory-log flush finds
 staged op-log entries, both channels go out as ONE posted write whose
 payload places the op-log bytes *before* the memory-log transaction.  NVM
@@ -50,8 +82,22 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from .allocator import FrontEndAllocator
 from .backend import CrashError, LogArea, NVMBackend
 from .cache import PageCache
-from .oplog import MemLog, OpLog, decode_oplogs, encode_oplog, encode_tx
+from .oplog import MemLog, OpLog, committed_tail, encode_oplog, encode_tx
 from .sim import Clock, CostModel, Stats
+
+
+def combine_runs(reqs: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Merge (addr, size) requests into contiguous (addr, nbytes) runs —
+    the adjacent-address WQE combining shared by read waves and
+    ``write_many``.  Duplicate requests collapse (they coalesce in the
+    cache / write buffer anyway)."""
+    runs: List[Tuple[int, int]] = []
+    for addr, size in sorted(set(reqs)):
+        if runs and addr == runs[-1][0] + runs[-1][1]:
+            runs[-1] = (runs[-1][0], runs[-1][1] + size)
+        else:
+            runs.append((addr, size))
+    return runs
 
 
 @dataclasses.dataclass
@@ -67,6 +113,7 @@ class FEConfig:
     cpu_node_ns: float = 300.0      # software cost per node visit
     symmetric: bool = False         # paper's symmetric baseline
     sym_batch: bool = False         # Symmetric-B row
+    fixed_wave: Optional[int] = None  # pin the doorbell wave width (tests)
 
     @classmethod
     def naive(cls, **kw) -> "FEConfig":
@@ -110,6 +157,47 @@ class StructHandle:
         return f"{self.name}.opsn"
 
 
+class WaveSizer:
+    """Adaptive doorbell-wave width: how many WQEs ring per doorbell before
+    the front-end re-issues (reads) or fences (writes).
+
+    The controller replaces the caller's chunking: a high observed cache
+    miss-ratio means waves are doing real remote work, so widening amortizes
+    more ``issue_ns``; a hot blade link (epoch utilization) means wide waves
+    just queue behind themselves, so the width backs off.  The band is
+    derived from the ``CostModel`` (``wave_floor``/``wave_ceiling``), and
+    ``FEConfig.fixed_wave=N`` pins the width for deterministic tests.
+    """
+
+    def __init__(self, fe: "FrontEnd"):
+        self.fe = fe
+        cost = fe.cost
+        self.floor = cost.wave_floor()
+        self.ceiling = cost.wave_ceiling(fe.backend.link.epoch)
+        self._width = min(64, self.ceiling)
+
+    @property
+    def width(self) -> int:
+        fixed = self.fe.cfg.fixed_wave
+        if fixed:
+            return max(1, fixed)
+        return self._width
+
+    def observe(self, local_hits: int, remote: int) -> None:
+        """Feed one wave's outcome back into the width."""
+        if self.fe.cfg.fixed_wave:
+            return
+        total = local_hits + remote
+        if not total:
+            return
+        if self.fe.backend.link.utilization(self.fe.clock.now) > 0.85:
+            self._width = max(self.floor, self._width // 2)
+        elif remote / total > 0.5:
+            self._width = min(self.ceiling, self._width * 2)
+        elif remote / total < 0.05:
+            self._width = max(self.floor, self._width - self.floor)
+
+
 class FrontEnd:
     def __init__(self, backend: NVMBackend, config: Optional[FEConfig] = None, fe_id: int = 0):
         self.backend = backend
@@ -123,10 +211,30 @@ class FrontEnd:
         self._oplog_inflight = 0
         self.busy_ns = 0.0  # front-end CPU busy time (utilization bench)
         self.handles: List[StructHandle] = []  # every handle this FE registered
+        self.waves = WaveSizer(self)
+        # open doorbell write wave; posted-write completions are deferred to
+        # the wave close fence.  `_wave_linger` marks a wave the adaptive
+        # controller keeps open across consecutive vector-op calls (the
+        # controller, not the caller's chunking, picks the effective window:
+        # it rolls the wave over at the flush cadence and `drain` fences it).
+        self._wave_depth = 0
+        self._wave_linger = False
+        self._wave_posts = 0
+        self._wave_ops = 0
+        self._wave_end = 0.0
 
     # ======================================================== network charges
     def _round(self, nbytes: int, *, nvm_write: bool = False) -> None:
-        """A synchronous one-sided round: post, transfer, completion."""
+        """A synchronous one-sided round: post, transfer, completion.
+
+        Write-class rounds (``nvm_write=True``: allocation/free RPCs, sync
+        op-log group commits) inside an open write wave post into the wave
+        instead — their completions are what the wave-close fence waits for.
+        Read rounds always complete synchronously (their data is needed
+        now), wave or no wave."""
+        if nvm_write and self._wave_active():
+            self._wave_post(nbytes)
+            return
         start = self.clock.now + self.cost.issue_ns
         end = self.backend.link.transfer(start, nbytes)
         extra = self.cost.nvm_write_ns if nvm_write else self.cost.nvm_read_ns
@@ -134,9 +242,83 @@ class FrontEnd:
 
     def _pipelined_write(self, nbytes: int) -> None:
         """Posted write without waiting for the completion (durability comes
-        from the op log, so memory-log flushes may overlap computation)."""
-        self.clock.advance(self.cost.issue_ns)
+        from the op log, so memory-log flushes may overlap computation).
+        Inside an open write wave the post rides the rung doorbell: a cheap
+        WQE instead of a fresh issue."""
+        if self._wave_active() and self._wave_posts:
+            self.clock.advance(self.cost.doorbell_wqe_ns)
+        else:
+            self.clock.advance(self.cost.issue_ns)
         self.backend.link.transfer(self.clock.now, nbytes)
+
+    def _wave_active(self) -> bool:
+        return self._wave_depth > 0 or self._wave_linger
+
+    def _wave_post(self, nbytes: int) -> None:
+        """Post one write-class WQE into the open wave: first of a doorbell
+        pays the full issue, the rest the cheap WQE cost; the wave width
+        bounds WQEs per doorbell before re-ringing."""
+        first = self._wave_posts % self.waves.width == 0
+        self.clock.advance(self.cost.issue_ns if first else self.cost.doorbell_wqe_ns)
+        end = self.backend.link.transfer(self.clock.now, nbytes)
+        if end > self._wave_end:
+            self._wave_end = end
+        self._wave_posts += 1
+        self.stats.wqe_posts += 1
+
+    def _close_wave(self) -> None:
+        """Completion fence: one RTT + NVM write for everything the wave
+        posted (the batch's RPC responses / write completions stream back
+        while the front-end computes; it blocks once, here)."""
+        if self._wave_posts:
+            self.stats.write_waves += 1
+            self.clock.advance_to(self._wave_end + self.cost.rtt_ns + self.cost.nvm_write_ns)
+        self._wave_posts = 0
+        self._wave_ops = 0
+        self._wave_end = 0.0
+
+    @contextlib.contextmanager
+    def write_wave(self, linger: bool = False):
+        """A doorbell write wave window — the write-side analogue of
+        ``read_many``'s doorbell batch.  Posted-write rounds issued inside
+        (slab refills, op-log group commits, memory-log flushes) share
+        doorbells and defer their completions to one close fence; structure
+        ops charge the vector-op CPU cost.  Nested waves are no-ops; the
+        naive/symmetric paths keep their own discipline.
+
+        ``linger=True`` hands the wave to the adaptive controller instead of
+        fencing at context exit: consecutive vector-op calls share one wave
+        (the effective window is the controller's, not the caller's
+        chunking), rolled over at the memory-log flush cadence and fenced
+        by ``end_wave`` / ``drain`` — or by the next *serial* ``op_begin``,
+        so a lingering wave never leaks its batch cost accounting into
+        serial ops.  Ops in a lingering wave are posted but not yet fenced
+        — the same bounded-loss window as an op-log group commit, recovered
+        all-or-none via the seq watermark."""
+        if not self.cfg.use_batch or self.cfg.symmetric:
+            yield
+            return
+        if self._wave_linger and self._wave_depth == 0:
+            self._wave_linger = False  # adopt the lingering wave ...
+            if self._wave_ops >= self.cfg.batch_ops:
+                self._close_wave()     # ... unless its window aged out
+        self._wave_depth += 1
+        try:
+            yield
+        finally:
+            self._wave_depth -= 1
+            if self._wave_depth == 0:
+                if linger:
+                    self._wave_linger = True
+                else:
+                    self._close_wave()
+
+    def end_wave(self) -> None:
+        """Fence a lingering write wave (commit point for posted vector-op
+        windows); no-op when no wave is open."""
+        if self._wave_linger and self._wave_depth == 0:
+            self._wave_linger = False
+            self._close_wave()
 
     def _atomic(self, addr: int = 0) -> None:
         self.clock.advance(self.cost.atomic_ns)
@@ -163,7 +345,11 @@ class FrontEnd:
         self.busy_ns += self.cfg.cpu_node_ns
 
     def _charge_local_alloc(self) -> None:
-        self.clock.advance(100.0)
+        # tier-2 slab carve.  Inside a write wave the allocator serves the
+        # batch from contiguous chunk runs in one free-list pass, so each
+        # item pays only the vector-op per-item share of the carve instead
+        # of the full per-call dispatch.
+        self.clock.advance(self.cost.cpu_batch_op_ns if self._wave_active() else 100.0)
 
     # ========================================================== registration
     def register(self, name: str, oplog_blocks: int = 4096, txlog_blocks: int = 4096) -> StructHandle:
@@ -227,16 +413,20 @@ class FrontEnd:
 
     def _doorbell_wave(self, remote: List[Tuple[int, int, int]], *, cacheable: bool) -> Dict[int, bytes]:
         """Charge one doorbell-batched read wave and fetch every (i, addr,
-        size) request: the first WQE pays the full issue cost (ringing the
-        doorbell), each further WQE only the cheap post, and the whole wave
-        shares a single RTT + NVM read latency."""
-        start = self.clock.now + self.cost.issue_ns
-        first = True
-        for _, addr, size in remote:
-            if not first:
-                start += self.cost.doorbell_wqe_ns
-            first = False
-            start = self.backend.link.transfer(start, size)
+        size) request: the first WQE of each doorbell pays the full issue
+        cost (ringing it), each further WQE only the cheap post, and the
+        whole wave shares a single RTT + NVM read latency.  The adaptive
+        wave width bounds WQEs per doorbell — a request past it re-rings
+        (fresh issue) but still completes with the shared fence.  Requests
+        for adjacent addresses combine into one WQE (a single range read —
+        bulk-built nodes are carved from contiguous slabs, so sibling scans
+        collapse to a few messages)."""
+        runs = combine_runs([(a, s) for _, a, s in remote])
+        width = self.waves.width
+        start = self.clock.now
+        for i, (_, nbytes) in enumerate(runs):
+            start += self.cost.issue_ns if i % width == 0 else self.cost.doorbell_wqe_ns
+            start = self.backend.link.transfer(start, nbytes)
         self.clock.advance_to(start + self.cost.rtt_ns + self.cost.nvm_read_ns)
         out: Dict[int, bytes] = {}
         for i, addr, size in remote:
@@ -275,6 +465,7 @@ class FrontEnd:
             fetched = self._doorbell_wave(remote, cacheable=cacheable)
             for i, data in fetched.items():
                 out[i] = data
+        self.waves.observe(len(reqs) - len(remote), len(remote))
         return out  # type: ignore[return-value]
 
     def prefetch_many(self, h: StructHandle, reqs: List[Tuple[int, int]], *, cacheable: bool = True) -> List[bytes]:
@@ -303,6 +494,7 @@ class FrontEnd:
             fetched = self._doorbell_wave(remote, cacheable=cacheable)
             for i, data in fetched.items():
                 out[i] = data
+        self.waves.observe(len(reqs) - len(remote), len(remote))
         return out  # type: ignore[return-value]
 
     # ================================================================ writes
@@ -322,8 +514,36 @@ class FrontEnd:
             self.cache.update_or_put(addr, data)
         self.clock.advance(self.cost.dram_ns)
 
+    def write_many(self, h: StructHandle, writes: Sequence[Tuple[int, bytes]]) -> int:
+        """Batched apply-phase writes: stage every (addr, data) exactly as
+        the serial ``write`` loop would — same bytes, same order, so the
+        arena stays byte-identical to serial execution — but charge the
+        staging cost per *combined WQE*: writes to adjacent addresses merge
+        into one (one memcpy / one WQE at flush time).  Returns the number
+        of combined WQEs."""
+        if self.cfg.symmetric or not self.cfg.use_batch or len(writes) <= 1:
+            for addr, data in writes:
+                self.write(h, addr, data)
+            return len(writes)
+        for addr, data in writes:
+            if addr in h.wbuf:
+                self.stats.memlogs_coalesced += 1
+            h.wbuf[addr] = data
+            if self.cfg.use_cache:
+                self.cache.update_or_put(addr, data)
+        runs = len(combine_runs([(a, len(d)) for a, d in writes]))
+        self.stats.writes_combined += len(writes) - runs
+        self.clock.advance(runs * self.cost.dram_ns)
+        return runs
+
     # ========================================================== op lifecycle
     def op_begin(self, h: StructHandle, opcode: int, payload: bytes) -> int:
+        if self._wave_linger and self._wave_depth == 0:
+            # a serial op is starting outside any wave: fence the lingering
+            # vector-op wave first — serial ops pay serial costs and their
+            # group commits complete synchronously, so the controller's
+            # window must not leak past the vector call sequence
+            self.end_wave()
         h.seq += 1
         if self.cfg.symmetric:
             return h.seq
@@ -338,8 +558,15 @@ class FrontEnd:
         return h.seq
 
     def op_commit(self, h: StructHandle) -> None:
-        self.clock.advance(self.cost.cpu_op_ns)
-        self.busy_ns += self.cost.cpu_op_ns
+        # inside a doorbell write wave the batch shares one software
+        # dispatch; each item pays only its staging work
+        if self._wave_active():
+            cpu = self.cost.cpu_batch_op_ns
+            self._wave_ops += 1
+        else:
+            cpu = self.cost.cpu_op_ns
+        self.clock.advance(cpu)
+        self.busy_ns += cpu
         h.pending_ops += 1
         if self.cfg.symmetric:
             # local data already updated; stream the log to the mirror async
@@ -392,63 +619,90 @@ class FrontEnd:
         h.oplog_staged_ops = 0
 
     def flush_memlogs(self, h: StructHandle, sync: bool = False) -> None:
-        """remote_tx_write: one RDMA write carrying all staged memory logs +
-        commit flag + checksum.  Also persists the covered op-sequence number
-        so recovery knows which op logs are already reflected in the data.
+        """remote_tx_write for one handle: see ``flush_combined``."""
+        self.flush_combined([h], sync=sync)
 
-        Staged op-log entries ride the SAME posted write, placed before the
-        memory-log transaction: NVM persists in order, so the op log is
-        durable no later than the data it covers (see the module docstring
-        for the full ordering argument) and the separate flush_oplog round
-        disappears from the batch path."""
-        if h.pre_flush is not None and not h._in_preflush:
-            h._in_preflush = True
-            try:
-                h.pre_flush()
-            finally:
-                h._in_preflush = False
-        if not h.wbuf and h.pending_ops == 0:
-            if h.oplog_staged:
-                self.flush_oplog(h)  # nothing to combine with
+    def flush_combined(self, handles: Sequence[StructHandle], sync: bool = False) -> None:
+        """remote_tx_write across one or more handles: ONE posted write
+        carrying every handle's staged op-log entries followed by every
+        handle's memory-log transaction (+ commit flag + checksum each).
+        Each transaction also persists its handle's covered op-sequence
+        number so recovery knows which op logs are reflected in the data.
+
+        Ordering: within the combined payload each handle's op-log bytes
+        precede every memory-log transaction.  NVM persists the write in
+        order, so each op log is durable no later than the data it covers
+        (the module docstring's ordering argument, unchanged) — the
+        separate ``flush_oplog`` round disappears from the batch path, and
+        a cross-structure ``batch_all()`` window drains a whole blade's
+        worth of structures with a single posted write.
+
+        Crash atomicity per handle: the op-log append lands entry bytes
+        first and the ``{name}.seq`` watermark slot after them; recovery
+        replays only entries at or below the watermark, so a flush torn
+        anywhere inside a handle's segment makes that handle's whole window
+        invisible (all-or-none), while handles earlier in the payload —
+        whose watermark write already persisted — keep theirs."""
+        for h in handles:
+            if h.pre_flush is not None and not h._in_preflush:
+                h._in_preflush = True
+                try:
+                    h.pre_flush()
+                finally:
+                    h._in_preflush = False
+        dirty = [h for h in handles if h.wbuf or h.pending_ops or h.oplog_staged]
+        if not dirty:
             return
-        combined = 0
-        if h.oplog_staged:
-            # op-log bytes first in the combined payload (ordering)
+        total = 0
+        # op-log bytes first, every handle (durability ordering)
+        for h in dirty:
+            if not h.oplog_staged:
+                continue
             oplog_payload = b"".join(h.oplog_staged)
             self.backend.tx_append(h.oplog_area, oplog_payload)
             self.backend.set_name(f"{h.name}.seq", h.seq)
             h.oplog_staged.clear()
             h.oplog_staged_ops = 0
-            combined = len(oplog_payload)
-            self.stats.combined_flushes += 1
-        entries = [MemLog(self.backend.name_slot_addr(h.opsn_name), struct.pack("<Q", h.seq))]
-        entries += [MemLog(a, d) for a, d in h.wbuf.items()]
-        payload = encode_tx(entries)
-        self.backend.tx_append(h.txlog_area, payload)
+            total += len(oplog_payload)
+            if h.wbuf or h.pending_ops:
+                self.stats.combined_flushes += 1
+        flushed: List[StructHandle] = []
+        for h in dirty:
+            if not h.wbuf and h.pending_ops == 0:
+                continue
+            entries = [MemLog(self.backend.name_slot_addr(h.opsn_name), struct.pack("<Q", h.seq))]
+            entries += [MemLog(a, d) for a, d in h.wbuf.items()]
+            payload = encode_tx(entries)
+            self.backend.tx_append(h.txlog_area, payload)
+            total += len(payload)
+            self.stats.memlogs_flushed += len(h.wbuf)
+            h.wbuf.clear()
+            h.pending_ops = 0
+            flushed.append(h)
         self.stats.rdma_writes += 1
-        self.stats.bytes_written += combined + len(payload)
-        self.stats.memlogs_flushed += len(h.wbuf)
+        self.stats.bytes_written += total
         if sync:
-            self._round(combined + len(payload), nvm_write=True)
+            self._round(total, nvm_write=True)
         else:
-            self._pipelined_write(combined + len(payload))
-        h.wbuf.clear()
-        h.pending_ops = 0
-        # the blade applies committed logs off the front-end's critical path
-        self.backend.tx_apply(h.txlog_area)
-        # op logs <= h.seq are now reflected in the data area: advance LPN
-        h.oplog_area.applied = h.oplog_area.head
-        if h.oplog_area.head > h.oplog_area.size // 2:
-            h.oplog_area.compact()
-        if h.txlog_area.applied > h.txlog_area.size // 2:
-            h.txlog_area.compact()
-        if h.post_flush is not None and not h._in_preflush:
-            h.post_flush()
+            self._pipelined_write(total)
+        for h in flushed:
+            # the blade applies committed logs off the front-end's critical path
+            self.backend.tx_apply(h.txlog_area)
+            # op logs <= h.seq are now reflected in the data area: advance LPN
+            h.oplog_area.applied = h.oplog_area.head
+            if h.oplog_area.head > h.oplog_area.size // 2:
+                h.oplog_area.compact()
+            if h.txlog_area.applied > h.txlog_area.size // 2:
+                h.txlog_area.compact()
+        for h in flushed:
+            if h.post_flush is not None and not h._in_preflush:
+                h.post_flush()
 
     def drain(self, h: StructHandle) -> None:
         """Flush everything (end of benchmark / clean shutdown)."""
         self.flush_memlogs(h, sync=True)  # folds any staged op logs in
         self.flush_oplog(h)  # pre_flush may have staged fresh entries
+        self.end_wave()  # fence any lingering vector-op wave (durability)
 
     def drain_all(self) -> None:
         """Drain every structure handle this front-end has registered — the
@@ -480,6 +734,40 @@ class FrontEnd:
         with self.batch(h):
             return [op() for op in ops]
 
+    @contextlib.contextmanager
+    def batch_all(self, handles: Optional[Sequence[StructHandle]] = None):
+        """A cross-structure batch window: operations against EVERY handle
+        this front-end owns (or the given explicit subset) stage their op
+        logs and memory logs without tripping any per-handle flush cadence,
+        and the window closes with ONE combined oplog+memlog posted write
+        for the whole blade (``flush_combined``).  The body AND the closing
+        flush run inside one doorbell write wave, so allocation RPCs, group
+        commits, and the apply phase of any pre-flush materialization batch
+        too, fenced once at window exit.  In the default all-handles form,
+        handles registered *during* the window are swept into the final
+        flush; an explicit ``handles`` subset stays exactly that subset.
+        Nested windows are no-ops; only meaningful with the op log on (R),
+        as for ``batch(h)``."""
+        if not self.cfg.use_oplog or self.cfg.symmetric:
+            yield self
+            return
+        hs = list(self.handles) if handles is None else list(handles)
+        opened = [h for h in hs if not h._in_batch]
+        for h in opened:
+            h._in_batch = True
+        with self.write_wave():
+            try:
+                yield self
+            finally:
+                for h in opened:
+                    h._in_batch = False
+                if handles is None:
+                    hs = list(self.handles)
+                # still-open handles belong to an enclosing window; flush
+                # the rest while the wave is open (materialization and its
+                # allocation RPCs ride the wave; the fence follows)
+                self.flush_combined([h for h in hs if not h._in_batch])
+
     # ================================================================ atomics
     def atomic_read(self, addr: int) -> int:
         self._atomic(addr)
@@ -500,14 +788,21 @@ class FrontEnd:
     def unreplayed_oplogs(self, h: StructHandle) -> List[OpLog]:
         """Op logs recorded in remote NVM whose effects are NOT yet in the
         data area (seq > persisted opsn watermark) — the replay set after a
-        front-end crash (paper §7.5)."""
+        front-end crash (paper §7.5).
+
+        Two guards make group/window commits all-or-none:
+
+          * entries above the durable ``{name}.seq`` watermark are ignored —
+            every flush lands the entry bytes first and the watermark slot
+            after them, so a torn flush leaves its whole group uncommitted
+            instead of replaying a partial suffix of unacked ops;
+          * entries are deduplicated by seq with the LAST bytes winning — a
+            front-end re-attached after a torn flush restarts numbering at
+            the watermark, so stale ghost entries from the torn window may
+            precede live ones with the same seq in the log."""
         opsn = self.backend.get_name(h.opsn_name)
-        entries = decode_oplogs(h.oplog_area.read_all())
-        out = []
-        for e in entries:
-            (seq,) = struct.unpack_from("<Q", e.payload, 0)
-            if seq > opsn:
-                out.append(OpLog(e.op, e.payload[8:]))
+        durable = self.backend.get_name(f"{h.name}.seq")
+        out = committed_tail(h.oplog_area.read_all(), opsn, durable)
         self._round(h.oplog_area.head)
         return out
 

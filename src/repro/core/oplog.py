@@ -81,6 +81,40 @@ class OpLog(NamedTuple):
     payload: bytes
 
 
+def committed_tail(buf: bytes, lo_seq: int, hi_seq: int) -> List[OpLog]:
+    """Decode the op-log entries with ``lo_seq < seq <= hi_seq`` and strip
+    the seq prefix from their payloads — the shared commit-guard filter of
+    crash recovery (``FrontEnd.unreplayed_oplogs``) and migration catch-up
+    (``rebalance.migrate_shard``).
+
+    ``hi_seq`` is the durable ``{name}.seq`` watermark: every flush writes
+    the entry bytes first and the watermark slot after them, so entries
+    above it belong to a torn (uncommitted) group/window and must not
+    replay.  Entries are deduplicated by seq with the LAST bytes winning —
+    a front-end re-attached after a torn flush restarts numbering at the
+    watermark, so stale ghost entries from the torn window may precede live
+    ones with the same seq.  Returned in seq order.
+    """
+    by_seq: dict = {}
+    for e in decode_oplogs(buf):
+        seq = entry_seq(e)
+        if lo_seq < seq <= hi_seq:
+            by_seq[seq] = OpLog(e.op, e.payload[8:])
+    return [by_seq[s] for s in sorted(by_seq)]
+
+
+def entry_seq(e: OpLog) -> int:
+    """Operation sequence number of a structure-level op-log entry.
+
+    The front-end prefixes every op-log payload with the 8-byte op sequence
+    number (``op_begin``); the persisted ``{name}.seq`` naming slot — written
+    *after* the entry bytes in every flush — is the durable watermark that
+    commits entries up to it.  Recovery and migration catch-up both filter
+    entries by this seq.
+    """
+    return struct.unpack_from("<Q", e.payload, 0)[0]
+
+
 def encode_memlog(entry: MemLog) -> bytes:
     return struct.pack("<BQI", FLAG_MEM, entry.addr, len(entry.data)) + entry.data
 

@@ -35,12 +35,30 @@ class CostModel:
     nvm_read_ns: float = 100.0      # NVM read ~ DRAM read
     dram_ns: float = 60.0           # front-end cache hit
     cpu_op_ns: float = 250.0        # software overhead per data-structure op
+    cpu_batch_op_ns: float = 40.0   # per-item software overhead inside a
+                                    # vector-op wave: the batch shares one
+                                    # dispatch, each item pays only its
+                                    # staging work (a few cache-line writes
+                                    # in a tight loop).  Also the per-chunk
+                                    # share of a wave's batched slab carve.
     issue_ns: float = 450.0         # post a work-queue entry (doorbell etc.)
     doorbell_wqe_ns: float = 120.0  # extra WQE in an already-rung doorbell
                                     # batch (vector ops amortize issue_ns)
     atomic_ns: float = 2200.0       # RDMA atomic verb (slightly > RTT)
     backend_apply_ns_per_byte: float = 0.35   # log replay cost on the blade
     nic_msg_ns: float = 150.0       # blade NIC per-message cost (IOPS cap)
+
+    # ---------------------------------------------- wave-width derivations
+    # Floor: below this many WQEs per doorbell the issue amortization cannot
+    # even halve the per-item post cost, so narrower waves are pointless.
+    def wave_floor(self) -> int:
+        return max(2, round(self.issue_ns / max(self.doorbell_wqe_ns, 1.0)))
+
+    # Ceiling: one wave must not oversubscribe a Link epoch's message budget
+    # (beyond ~3/4 of it the M/M/1 queueing delay and the hard-overflow
+    # penalty dominate whatever the doorbell amortizes).
+    def wave_ceiling(self, epoch_ns: float) -> int:
+        return max(self.wave_floor(), int(0.75 * epoch_ns / self.nic_msg_ns))
 
     @property
     def bytes_per_ns(self) -> float:
@@ -66,6 +84,9 @@ class Stats:
     memlogs_flushed: int = 0
     memlogs_coalesced: int = 0
     combined_flushes: int = 0   # oplog+memlog folded into one posted write
+    write_waves: int = 0        # closed doorbell write waves (>=1 WQE each)
+    wqe_posts: int = 0          # posted-write WQEs that joined a write wave
+    writes_combined: int = 0    # adjacent-address writes merged into one WQE
     ops_annulled: int = 0
     reader_retries: int = 0
 
@@ -84,15 +105,46 @@ class Link:
     reservations made by entities already ahead in virtual time).
     """
 
+    #: epochs kept behind the latest one seen; older buckets can only be hit
+    #: by a front-end lagging that far in virtual time, and a long-gone
+    #: epoch re-created empty merely forgets contention that is over anyway.
+    HORIZON_EPOCHS = 64
+
     def __init__(self, cost: CostModel, epoch_ns: float = 50_000.0):
         self.cost = cost
         self.epoch = epoch_ns
         self.bytes_in_epoch: dict = {}
         self.msgs_in_epoch: dict = {}
         self.busy_total: float = 0.0
+        self._hi_epoch = -1
+
+    def _prune(self, e: int) -> None:
+        """Sliding-horizon eviction: once epoch `e` is seen, buckets older
+        than ``e - HORIZON_EPOCHS`` are dead weight — without this a
+        multi-minute benchmark run accumulates one dict entry per 50us of
+        virtual time, forever."""
+        self._hi_epoch = e
+        floor = e - self.HORIZON_EPOCHS
+        if floor <= 0:
+            return
+        for d in (self.bytes_in_epoch, self.msgs_in_epoch):
+            stale = [k for k in d if k < floor]
+            for k in stale:
+                del d[k]
+
+    def utilization(self, t_ns: float) -> float:
+        """Fraction of the epoch containing `t_ns` already spoken for (the
+        adaptive wave-width controller's congestion signal)."""
+        e = int(t_ns // self.epoch)
+        cap_bytes = self.cost.bytes_per_ns * self.epoch
+        cap_msgs = self.epoch / self.cost.nic_msg_ns
+        return max(self.bytes_in_epoch.get(e, 0.0) / cap_bytes,
+                   self.msgs_in_epoch.get(e, 0.0) / cap_msgs)
 
     def transfer(self, start_ns: float, nbytes: int) -> float:
         e = int(start_ns // self.epoch)
+        if e > self._hi_epoch:
+            self._prune(e)
         self.bytes_in_epoch[e] = self.bytes_in_epoch.get(e, 0.0) + nbytes
         self.msgs_in_epoch[e] = self.msgs_in_epoch.get(e, 0.0) + 1
         cap_bytes = self.cost.bytes_per_ns * self.epoch
@@ -112,6 +164,7 @@ class Link:
         self.bytes_in_epoch.clear()
         self.msgs_in_epoch.clear()
         self.busy_total = 0.0
+        self._hi_epoch = -1
 
 
 class Clock:

@@ -96,9 +96,15 @@ class RemoteStructure:
     # Maps speak get/put, trees and lists speak lookup/insert — the aliases
     # below make both families available on every structure.
     def put_many(self, pairs: List[tuple]) -> None:
+        """Vector write: the serial apply loop IS the source of truth for
+        what bytes land (the arena stays byte-identical to per-op calls);
+        the surrounding doorbell write wave batches the costs — allocation
+        RPCs and op-log group commits post into shared doorbells with one
+        completion fence, and each op charges the vector-op CPU cost."""
         write = getattr(self, "put", None) or self.insert  # type: ignore[attr-defined]
-        for k, v in pairs:
-            write(k, v)
+        with self.fe.write_wave(linger=True):
+            for k, v in pairs:
+                write(k, v)
 
     def get_many(self, keys: List[int]) -> List[Optional[int]]:
         read = getattr(self, "get", None) or self.find  # type: ignore[attr-defined]

@@ -9,12 +9,26 @@ from __future__ import annotations
 
 import struct
 from bisect import bisect_left, bisect_right, insort
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from ..frontend import FrontEnd
 from .base import RemoteStructure
 
 WAVE = 2048  # max independent reads rung with one doorbell
+
+
+def _balanced_chunks(items: list, cap: int) -> List[list]:
+    """Split `items` into the fewest chunks of at most `cap`, sizes as even
+    as possible (earlier chunks take the remainder)."""
+    j = -(-len(items) // cap)
+    base, extra = divmod(len(items), j)
+    out: List[list] = []
+    off = 0
+    for i in range(j):
+        sz = base + (1 if i < extra else 0)
+        out.append(items[off:off + sz])
+        off += sz
+    return out
 
 OP_INSERT = 1
 
@@ -251,11 +265,160 @@ class RemoteBPTree(RemoteStructure):
         self.write_root(new_root)
 
     def _materialize(self) -> None:
-        """Vector insert: the sorted batch shares its root-to-leaf path reads
-        through the cache, and leaf/parent rewrites coalesce in the tx buffer."""
+        """Vector insert (Algorithm 1 applied to the B+Tree): the sorted
+        batch descends once as key *segments* — one doorbell-batched read
+        wave per frontier level, each touched node read and visited ONCE for
+        the whole batch instead of once per pair — then every leaf absorbs
+        its whole segment at once, splits bubbling up level by level
+        (deepest parents first, so a child's promotions land before its
+        parent's own split).  All rewrites stage through one ``write_many``
+        batch.  Leaf depth stays uniform, so ``range_items``'s level-order
+        fan-out remains valid."""
         kvs, self._vecbuf = self._vecbuf, []
-        for k, v in kvs:
-            self._insert_base(k, v)
+        if not kvs:
+            return
+        if not self._root:
+            self._bulk_build(kvs)
+            return
+        fe, h = self.fe, self.h
+        nodes: Dict[int, BNode] = {}           # addr -> decoded node
+        parent: Dict[int, Optional[int]] = {self._root: None}
+        level_of: Dict[int, int] = {self._root: 0}
+        leaf_segs: List[Tuple[int, int, int]] = []   # (addr, begin, end)
+        frontier: List[Tuple[int, int, int]] = [(0, len(kvs), self._root)]
+        depth = 0
+        while frontier:
+            need = list(dict.fromkeys(
+                addr for _, _, addr in frontier if addr not in nodes))
+            raws = fe.read_many(h, [(a, NODE_SIZE) for a in need],
+                                cacheable=depth <= self.cache_level_thr)
+            for a, raw in zip(need, raws):
+                nodes[a] = BNode.decode(raw)
+            nxt: List[Tuple[int, int, int]] = []
+            for b, e, addr in frontier:
+                node = nodes[addr]
+                if node.kind == LEAF:
+                    leaf_segs.append((addr, b, e))
+                    continue
+                i = b
+                while i < e:
+                    child = bisect_right(node.keys, kvs[i][0])
+                    hi = (bisect_left(kvs, (node.keys[child],), i, e)
+                          if child < len(node.keys) else e)
+                    hi = max(hi, i + 1)
+                    caddr = node.ptrs[child]
+                    parent[caddr] = addr
+                    level_of[caddr] = depth + 1
+                    nxt.append((i, hi, caddr))
+                    i = hi
+            frontier = nxt
+            depth += 1
+        dirty: Dict[int, BNode] = {}
+        # parent addr (None = above the root) -> [(separator key, new child)]
+        promos: Dict[Optional[int], List[Tuple[int, int]]] = {}
+        for addr, b, e in leaf_segs:
+            node = nodes[addr]
+            merged = dict(zip(node.keys, node.ptrs[:-1]))
+            merged.update(kvs[b:e])
+            skeys = sorted(merged)
+            if len(skeys) <= FANOUT:
+                node.keys = skeys
+                node.ptrs = [merged[k] for k in skeys] + [node.next_leaf]
+                dirty[addr] = node
+                continue
+            next0 = node.next_leaf
+            chunks = _balanced_chunks(skeys, FANOUT)
+            addrs = [addr] + [fe.alloc(NODE_SIZE) for _ in chunks[1:]]
+            for i, chunk in enumerate(chunks):
+                nxt_leaf = addrs[i + 1] if i + 1 < len(addrs) else next0
+                piece = BNode(LEAF, chunk, [merged[k] for k in chunk] + [nxt_leaf])
+                dirty[addrs[i]] = piece
+                nodes[addrs[i]] = piece
+            promos.setdefault(parent.get(addr), []).extend(
+                (chunk[0], addrs[i]) for i, chunk in enumerate(chunks) if i)
+        # bubble splits up, deepest parents first
+        while True:
+            real = [a for a in promos if a is not None]
+            if not real:
+                break
+            deepest = max(level_of[a] for a in real)
+            for a in [a for a in real if level_of[a] == deepest]:
+                lst = promos.pop(a)
+                node = nodes[a]
+                for key, child in sorted(lst):
+                    idx = bisect_right(node.keys, key)
+                    node.keys.insert(idx, key)
+                    node.ptrs.insert(idx + 1, child)
+                if len(node.keys) <= FANOUT:
+                    dirty[a] = node
+                    continue
+                pieces, seps = self._split_internal(node)
+                addrs = [a] + [fe.alloc(NODE_SIZE) for _ in pieces[1:]]
+                for paddr, piece in zip(addrs, pieces):
+                    dirty[paddr] = piece
+                    nodes[paddr] = piece
+                promos.setdefault(parent.get(a), []).extend(
+                    (k, addrs[i + 1]) for i, k in enumerate(seps))
+        root_promos = promos.pop(None, None)
+        if root_promos:
+            root_promos.sort()
+            node = BNode(INTERNAL,
+                         [k for k, _ in root_promos],
+                         [self._root] + [c for _, c in root_promos])
+            while len(node.keys) > FANOUT:
+                pieces, seps = self._split_internal(node)
+                addrs = [fe.alloc(NODE_SIZE) for _ in pieces]
+                for paddr, piece in zip(addrs, pieces):
+                    dirty[paddr] = piece
+                node = BNode(INTERNAL, seps, addrs)
+            raddr = fe.alloc(NODE_SIZE)
+            dirty[raddr] = node
+            self._root = raddr
+        fe.write_many(h, [(a, n.encode()) for a, n in dirty.items()])
+        if root_promos:
+            self.write_root(self._root)
+
+    @staticmethod
+    def _split_internal(node: BNode) -> Tuple[List[BNode], List[int]]:
+        """Split an overfull internal node into balanced pieces; returns
+        (pieces, promoted separator keys) — piece i+1 follows separator i."""
+        ptr_chunks = _balanced_chunks(node.ptrs, FANOUT + 1)
+        pieces: List[BNode] = []
+        seps: List[int] = []
+        off = 0
+        for i, pc in enumerate(ptr_chunks):
+            pieces.append(BNode(INTERNAL, node.keys[off:off + len(pc) - 1], pc))
+            if i + 1 < len(ptr_chunks):
+                seps.append(node.keys[off + len(pc) - 1])
+            off += len(pc)
+        return pieces, seps
+
+    def _bulk_build(self, kvs: List[Tuple[int, int]]) -> None:
+        """Bottom-up bulk load of an empty tree: balanced chained leaves,
+        then internal levels until a single root (separator = first key of
+        the right child, matching the descent's ``bisect_right`` routing)."""
+        fe = self.fe
+        writes: List[Tuple[int, bytes]] = []
+        chunks = _balanced_chunks(kvs, FANOUT)
+        addrs = [fe.alloc(NODE_SIZE) for _ in chunks]
+        firsts = [chunk[0][0] for chunk in chunks]
+        for i, chunk in enumerate(chunks):
+            nxt = addrs[i + 1] if i + 1 < len(addrs) else 0
+            writes.append((addrs[i], BNode(
+                LEAF, [k for k, _ in chunk], [v for _, v in chunk] + [nxt]
+            ).encode()))
+        while len(addrs) > 1:
+            a_chunks = _balanced_chunks(addrs, FANOUT + 1)
+            f_chunks = _balanced_chunks(firsts, FANOUT + 1)
+            addrs, firsts = [], []
+            for ca, cf in zip(a_chunks, f_chunks):
+                a = fe.alloc(NODE_SIZE)
+                addrs.append(a)
+                firsts.append(cf[0])
+                writes.append((a, BNode(INTERNAL, cf[1:], ca).encode()))
+        fe.write_many(self.h, writes)
+        self._root = addrs[0]
+        self.write_root(self._root)
 
     # ---------------------------------------------------------------- replay
     def _replay_insert(self, key: int, value: int) -> None:

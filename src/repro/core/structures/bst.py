@@ -164,14 +164,29 @@ class RemoteBST(RemoteStructure):
         return addr
 
     def _create_sub_tree(self, kvs: List[Tuple[int, int]]) -> int:
-        """Balanced subtree from a sorted segment, built locally then written
-        once per node (Algorithm 1's create_sub_tree)."""
+        """Balanced subtree from a sorted segment, built locally and staged
+        through one ``write_many`` batch (Algorithm 1's create_sub_tree).
+        Allocation and staging order match the node-at-a-time recursion
+        exactly (post-order), so the arena is byte-identical to it; only
+        the write accounting batches — freshly carved chunks are adjacent,
+        so most of the subtree combines into a few WQEs."""
         if not kvs:
             return 0
-        mid = len(kvs) // 2
-        left = self._create_sub_tree(kvs[:mid])
-        right = self._create_sub_tree(kvs[mid + 1 :])
-        return self._new_node(kvs[mid][0], kvs[mid][1], left, right)
+        writes: List[Tuple[int, bytes]] = []
+
+        def build(lo: int, hi: int) -> int:
+            if lo >= hi:
+                return 0
+            mid = (lo + hi) // 2
+            left = build(lo, mid)
+            right = build(mid + 1, hi)
+            addr = self.fe.alloc(NODE_SIZE)
+            writes.append((addr, NODE.pack(kvs[mid][0], kvs[mid][1], left, right)))
+            return addr
+
+        root = build(0, len(kvs))
+        self.fe.write_many(self.h, writes)
+        return root
 
     # ------------------------------------------------- vector insert (Alg. 1)
     def _materialize(self) -> None:

@@ -130,17 +130,20 @@ class RemoteHashTable(RemoteStructure):
         """Vector put: one doorbell wave per chain level to warm the cache,
         then the exact serial apply per pair — so the structure state (and
         the whole back-end arena) is byte-identical to the serial loop while
-        the network charges are batched."""
+        the network charges are batched.  The write wave batches the apply
+        phase's posted writes too: node-slab refill RPCs and op-log group
+        commits post into shared doorbells with one completion fence."""
         cfg = self.fe.cfg
         if not (cfg.use_batch and cfg.use_cache) or len(pairs) <= 1:
             for k, v in pairs:
                 self.put(k, v)
             return
-        self._prefetch_chains([k for k, _ in pairs])
-        for k, v in pairs:
-            self.fe.op_begin(self.h, OP_PUT, self.encode_args(k, v))
-            self._put_base(k, v)
-            self.fe.op_commit(self.h)
+        with self.fe.write_wave(linger=True):
+            self._prefetch_chains([k for k, _ in pairs])
+            for k, v in pairs:
+                self.fe.op_begin(self.h, OP_PUT, self.encode_args(k, v))
+                self._put_base(k, v)
+                self.fe.op_commit(self.h)
 
     def delete(self, key: int) -> bool:
         self.fe.op_begin(self.h, OP_DEL, self.encode_args(key))

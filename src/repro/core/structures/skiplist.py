@@ -189,9 +189,10 @@ class RemoteSkipList(RemoteStructure):
             return
         thr0, self.cache_level_thr = self.cache_level_thr, 1
         try:
-            self._walk_many([k for k, _ in kvs], prefetch=True)
-            for k, v in kvs:
-                self.insert(k, v)
+            with self.fe.write_wave(linger=True):
+                self._walk_many([k for k, _ in kvs], prefetch=True)
+                for k, v in kvs:
+                    self.insert(k, v)
         finally:
             self.cache_level_thr = min(thr0, self.cache_level_thr)
 

@@ -25,6 +25,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 MOD = 65535
 ROWS, LANES = 8, 128
 BLOCK = ROWS * LANES  # words per grid step
@@ -80,7 +82,7 @@ def fletcher32(words: jax.Array, *, interpret: bool = False) -> jax.Array:
         out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
         out_shape=jax.ShapeDtypeStruct((2,), jnp.int32),
         scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -1,0 +1,15 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+jax renamed the TPU compiler-params dataclass across versions
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``); every kernel in
+this package imports the resolved symbol from here so the fallback lives in
+exactly one place.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

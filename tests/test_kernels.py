@@ -124,3 +124,40 @@ def test_topk_compress_sweep(n, k, block):
     np.testing.assert_allclose(np.asarray(rr), np.asarray(rk), atol=1e-6)
     dec = R.topk_decompress_reference(vk, ik, n, block=block)
     np.testing.assert_allclose(np.asarray(dec + rk), np.asarray(x), atol=1e-6)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the seeded-random shim
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_shim import given, settings, st
+
+
+def _fletcher32_kernel_on_bytes(data: bytes) -> int:
+    """The kernel contract applied to a byte string: pad to an even length,
+    view as little-endian 16-bit words carried in int32 lanes."""
+    if len(data) % 2:
+        data = data + b"\x00"
+    w = np.frombuffer(data, dtype="<u2").astype(np.int32)
+    return int(fletcher32(jnp.asarray(w), interpret=True))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.binary(min_size=1, max_size=5000))
+def test_fletcher32_kernel_matches_numpy_mirror_on_bytes(data):
+    """Property: for any byte string — odd lengths and non-multiples of the
+    1024-word block included — the Pallas kernel (interpret mode) and its
+    numpy mirror agree, so the writer (kernel) and verifier (mirror) sides
+    of the checksum contract cannot drift."""
+    assert _fletcher32_kernel_on_bytes(data) == fletcher32_padded_np(data)
+
+
+@pytest.mark.parametrize("nbytes", [1, 2, 3, 2047, 2048, 2049, 4096 + 7])
+def test_fletcher32_kernel_matches_numpy_mirror_edges(nbytes):
+    """Deterministic edge sizes: odd lengths, one byte short of / exactly /
+    one byte past the 1024-word (2048-byte) block boundary."""
+    rng = np.random.default_rng(nbytes)
+    data = rng.integers(0, 256, nbytes, dtype=np.uint8).tobytes()
+    assert _fletcher32_kernel_on_bytes(data) == fletcher32_padded_np(data)

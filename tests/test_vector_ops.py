@@ -285,3 +285,270 @@ def test_frontend_batch_context_single_flush():
     assert fe.stats.rdma_writes == w0 + 1
     assert fe.stats.combined_flushes >= 1
     assert ht.get(150) == 150
+
+
+# ===================================================================== PR 4:
+# doorbell write waves, write_many combining, cross-structure batch_all
+# windows, adaptive wave sizing, and crash atomicity of combined flushes.
+
+
+@pytest.mark.parametrize("cls", [RemoteBST, RemoteBPTree, RemoteSkipList])
+def test_tree_put_many_byte_identical_to_serial(cls):
+    """The wave-batched write path changes only cost accounting and flush
+    scheduling: same pairs, same config, the serial insert loop and
+    put_many must leave the two blades' arenas byte-for-byte identical —
+    with a small flush cadence so several materialize/flush rounds fire
+    mid-run on both sides (not just at drain)."""
+    rng = random.Random(21)
+    pairs = sorted({rng.randrange(1 << 22): i for i in range(300)}.items())
+    cfg = dict(cache_bytes=1 << 16, batch_ops=96)
+
+    be_s = NVMBackend(capacity=1 << 24)
+    fe_s = FrontEnd(be_s, FEConfig.rcb(**cfg))
+    t_s = cls(fe_s, "t")
+    for k, v in pairs:
+        t_s.insert(k, v)
+    fe_s.drain(t_s.h)
+
+    be_b = NVMBackend(capacity=1 << 24)
+    fe_b = FrontEnd(be_b, FEConfig.rcb(**cfg))
+    t_b = cls(fe_b, "t")
+    for i in range(0, len(pairs), 64):
+        t_b.insert_many(pairs[i : i + 64])
+    fe_b.drain(t_b.h)
+
+    assert bytes(be_s.arena) == bytes(be_b.arena), cls.__name__
+    assert fe_b.clock.now <= fe_s.clock.now, cls.__name__
+
+
+def test_write_many_combines_adjacent_writes():
+    _, fe, ht = _mk_ht()
+    h = ht.h
+    a1 = fe.alloc(64)
+    a2 = fe.alloc(64)
+    a4 = fe.alloc(64)
+    assert a2 == a1 + 64  # same slab, ascending carve
+    t0 = fe.clock.now
+    runs = fe.write_many(h, [(a1, b"a" * 64), (a2, b"b" * 64), (a4 + 64, b"c" * 64)])
+    assert runs == 2  # a1+a2 combine into one WQE; the gap breaks the run
+    assert fe.stats.writes_combined == 1
+    assert fe.clock.now - t0 == pytest.approx(2 * fe.cost.dram_ns)
+    # staged bytes identical to what the serial loop would stage
+    assert h.wbuf[a1] == b"a" * 64 and h.wbuf[a2] == b"b" * 64
+
+
+def test_fixed_wave_pins_the_width():
+    _, fe, _ = _mk_ht(fixed_wave=7)
+    assert fe.waves.width == 7
+    fe.waves.observe(0, 1000)  # adaptive feedback must not move a pinned width
+    assert fe.waves.width == 7
+
+
+def test_adaptive_wave_width_stays_in_cost_model_band():
+    _, fe, _ = _mk_ht()
+    floor, ceiling = fe.waves.floor, fe.waves.ceiling
+    assert floor == fe.cost.wave_floor()
+    assert ceiling == fe.cost.wave_ceiling(fe.backend.link.epoch)
+    for _ in range(32):  # miss-heavy waves widen ...
+        fe.waves.observe(0, 100)
+    assert fe.waves.width == ceiling
+    for _ in range(256):  # ... hit-heavy waves narrow
+        fe.waves.observe(100, 0)
+    assert fe.waves.width == floor
+    assert floor >= 2
+
+
+def test_write_wave_posts_and_fences():
+    """Inside a wave, posted-write rounds (slab refills, group commits)
+    become WQE posts with one close fence instead of synchronous rounds."""
+    _, fe, ht = _mk_ht()
+    pairs = [(k, k) for k in range(200)]
+    ht.put_many(pairs)
+    fe.drain(ht.h)
+    assert fe.stats.wqe_posts > 0
+    assert fe.stats.write_waves >= 1
+    # and the lingering wave was fenced by drain
+    assert not fe._wave_linger and fe._wave_posts == 0
+
+
+def test_batch_all_combines_structures_into_one_posted_write():
+    be, fe, ht = _mk_ht()
+    bst = RemoteBST(fe, "b")
+    w0 = fe.stats.rdma_writes
+    with fe.batch_all():
+        for k in range(30):
+            ht.put(k, k * 2)
+        for k in range(30):
+            bst.insert(k, k * 3)
+    assert fe.stats.rdma_writes == w0 + 1  # ONE combined posted write
+    assert fe.stats.combined_flushes >= 2  # both handles folded their op logs
+    assert ht.get(7) == 14 and bst.find(7) == 21
+
+
+def test_batch_all_arena_identical_to_serial_apply():
+    def run(batched):
+        be = NVMBackend(capacity=1 << 24)
+        fe = FrontEnd(be, FEConfig.rcb(cache_bytes=1 << 16))
+        ht = RemoteHashTable(fe, "a", n_buckets=64)
+        t = RemoteBST(fe, "b")
+
+        def ops():
+            for k in range(40):
+                ht.put(k, k + 1)
+            for k in range(40):
+                t.insert(k, k + 2)
+
+        if batched:
+            with fe.batch_all():
+                ops()
+        else:
+            ops()
+        fe.drain(ht.h)
+        fe.drain(t.h)
+        return bytes(be.arena), fe.clock.now
+
+    arena_s, t_s = run(False)
+    arena_b, t_b = run(True)
+    assert arena_s == arena_b
+    assert t_b <= t_s
+
+
+def test_batch_all_torn_combined_flush_is_all_or_none_per_structure():
+    """Crash mid-cross-structure-batch: whatever physical write of the
+    combined flush the power loss lands on, recovery must show, for EACH
+    structure in the window, either all of its window ops or none — the seq
+    watermark slot written after the entry bytes is the commit record, and
+    8-byte slot writes are persist-atomic."""
+    hit = 0
+    for after_writes in range(0, 12):
+        be = NVMBackend(capacity=1 << 24)
+        fe = FrontEnd(be, FEConfig.rcb(cache_bytes=1 << 16))
+        ht = RemoteHashTable(fe, "a", n_buckets=64)
+        t = RemoteBST(fe, "b")
+        try:
+            with fe.batch_all():
+                for k in range(20):
+                    ht.put(k, k + 1)
+                for k in range(20):
+                    t.insert(k, k + 2)
+                be.schedule_torn_write(3, after_writes=after_writes)
+        except CrashError:
+            pass
+        if be.alive:
+            be._torn_write_at = None  # flush used fewer writes; tear unused
+            continue
+        hit += 1
+        be.reboot()
+        fe2 = FrontEnd(be, FEConfig.rcb(cache_bytes=1 << 16), fe_id=1)
+        ht2 = RemoteHashTable.recover(fe2, "a")
+        t2 = RemoteBST.recover(fe2, "b")
+        for vals, off in (([ht2.get(k) for k in range(20)], 1),
+                          ([t2.find(k) for k in range(20)], 2)):
+            got = [v is not None for v in vals]
+            assert all(got) or not any(got), (after_writes, vals)
+            for k, v in enumerate(vals):
+                if v is not None:
+                    assert v == k + off
+    assert hit >= 6  # the sweep actually exercised tears across the flush
+
+
+def test_crash_mid_wave_replays_a_clean_prefix():
+    """Tear the blade during a put_many wave (at an op-log group commit):
+    recovery replays exactly the groups whose watermark committed — a clean
+    prefix of the batch, no holes, no partial group."""
+    be = NVMBackend(capacity=1 << 24)
+    fe = FrontEnd(be, FEConfig.rcb(cache_bytes=1 << 16, batch_ops=1 << 30))
+    ht = RemoteHashTable(fe, "t", n_buckets=128)
+    pairs = [(k, k + 9) for k in range(160)]  # several op-log groups of 64
+    be.schedule_torn_write(5, after_writes=3)  # dies inside the 2nd group
+    with pytest.raises(CrashError):
+        ht.put_many(pairs)
+    be.reboot()
+    fe2 = FrontEnd(be, FEConfig.rcb(cache_bytes=1 << 16), fe_id=1)
+    ht2 = RemoteHashTable.recover(fe2, "t")
+    vals = [ht2.get(k) for k, _ in pairs]
+    done = [v is not None for v in vals]
+    assert done == sorted(done, reverse=True)  # a prefix, no holes
+    assert done.count(True) % 64 == 0  # whole committed groups only
+    for (k, v), got in zip(pairs, vals):
+        if got is not None:
+            assert got == v
+
+
+def test_link_epoch_buckets_are_pruned():
+    from repro.core.sim import CostModel, Link
+
+    link = Link(CostModel())
+    for i in range(10_000):  # one fresh epoch per transfer
+        link.transfer(i * link.epoch, 100)
+    assert len(link.bytes_in_epoch) <= Link.HORIZON_EPOCHS + 1
+    assert len(link.msgs_in_epoch) <= Link.HORIZON_EPOCHS + 1
+    assert 0.0 <= link.utilization(9_999 * link.epoch) <= 1.0
+
+
+def test_cluster_blade_sub_batch_is_one_combined_write():
+    from repro.cluster import ClusterFrontEnd, NVMCluster
+    from repro.cluster.sharded import ShardedHashTable
+
+    cluster = NVMCluster(n_blades=2, n_shards=4)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rcb(cache_bytes=1 << 16))
+    ht = ShardedHashTable(cfe, "kv", n_buckets=1 << 8)
+    rng = random.Random(23)
+    pairs = [(rng.randrange(1 << 26), i) for i in range(200)]
+    ht.put_many(pairs)  # ~50 ops per shard: below the group size, so every
+    # blade's sub-batch drains only through its batch_all() combined flush
+    stats = cfe.aggregate_stats()
+    assert 0 < stats["rdma_writes"] <= len(cluster.blades)
+    assert stats["combined_flushes"] >= 2  # several shard handles per write
+    expect = dict(pairs)
+    vals = ht.get_many([k for k, _ in pairs])
+    assert all(v == expect[k] for (k, _), v in zip(pairs, vals))
+
+
+def test_serial_op_fences_a_lingering_wave():
+    """A lingering vector-op wave must not leak its batch cost accounting
+    into later serial ops: the first serial op_begin fences it, and serial
+    ops charge the full per-op CPU cost again."""
+    _, fe, ht = _mk_ht()
+    ht.put_many([(k, k) for k in range(100)])
+    assert fe._wave_linger  # controller kept the wave open past the call
+    busy0 = fe.busy_ns
+    ht.put(1000, 1)  # serial op: fences the wave, pays serial costs
+    assert not fe._wave_linger and fe._wave_posts == 0
+    assert fe.busy_ns - busy0 >= fe.cost.cpu_op_ns
+
+
+def test_cluster_execute_batch_combined_window():
+    """ClusterFrontEnd.execute_batch(combined=True) — the default — wraps
+    each blade sub-batch in that front-end's batch_all() window: ops over
+    several handles on one blade drain in one combined posted write, and
+    the results match per-op routing."""
+    from repro.cluster import ClusterFrontEnd, NVMCluster
+    from repro.core.structures import RemoteBST, RemoteHashTable
+
+    cluster = NVMCluster(n_blades=2, n_shards=4)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rcb(cache_bytes=1 << 16))
+    objs = {}
+
+    def setup(fe):
+        objs[fe.backend.blade_id] = (
+            RemoteHashTable(fe, f"h{fe.backend.blade_id}", n_buckets=64),
+            RemoteBST(fe, f"b{fe.backend.blade_id}"),
+        )
+
+    for bid in cluster.blades:
+        cfe.run_on(bid, setup)
+    w0 = {bid: cfe.fe_for_blade(bid).stats.rdma_writes for bid in cluster.blades}
+
+    def work(fe):
+        ht, bst = objs[fe.backend.blade_id]
+        for k in range(25):
+            ht.put(k, k * 2)
+            bst.insert(k, k * 3)
+
+    cfe.execute_batch({bid: work for bid in cluster.blades})  # combined=True
+    for bid in cluster.blades:
+        fe = cfe.fe_for_blade(bid)
+        assert fe.stats.rdma_writes == w0[bid] + 1  # one combined write/blade
+        ht, bst = objs[bid]
+        assert ht.get(7) == 14 and bst.find(7) == 21
