@@ -12,6 +12,16 @@ loses one blade permanently mid-run.  The trace shows per-time-bucket
 aggregate throughput: a dip while the first front-end to hit the dead blade
 promotes its mirror (log-tail replay + directory epoch bump + full rebind),
 then recovery to steady state — with every committed op still readable.
+
+Panel C (replica reads): the same fleet on a read-heavy mix (90% batched
+``get_many``), primary-only routing vs. replica routing (``ReadPolicy
+auto``: read waves spread over each blade's primary + mirror links, pinned
+keys and over-lag mirrors falling back to the primary).  The mirrors
+already hold byte-exact arenas for availability; serving reads from them
+multiplies the read-path link capacity — the disaggregation argument of
+the paper (and of Tsai & Zhang's disaggregated-PM stores) applied to the
+read path.  The speedup is recorded in BENCH_cluster_reads.json and
+guarded by scripts/check_bench.py.
 """
 
 from __future__ import annotations
@@ -20,7 +30,7 @@ import argparse
 import random
 from typing import Dict, List
 
-from repro.cluster import ClusterFrontEnd, NVMCluster, ShardedHashTable
+from repro.cluster import ClusterFrontEnd, NVMCluster, ReadPolicy, ShardedHashTable
 from repro.core import FEConfig
 
 from .common import kops
@@ -83,6 +93,74 @@ def run_scaling(n_blades: int, n_frontends: int = 16, preload: int = 400,
     }
 
 
+def run_replica_reads(n_blades: int = 2, n_frontends: int = 32, preload: int = 400,
+                      ops: int = 600, batch: int = 64, read_frac: float = 0.9,
+                      max_staleness_ops: int = 256, num_mirrors: int = 2) -> Dict[str, float]:
+    """Read-heavy mix, primary-only vs replica-routed ``get_many``.
+
+    Same seeds both modes: every front-end runs an identical op sequence of
+    batched reads over its preloaded keys (plus a write batch every
+    ``1/(1-read_frac)`` rounds, so pins and staleness are exercised, not
+    idle).  rNVM R+B with the cache OFF: every read wave goes remote —
+    reads genuinely disaggregated, as in the paper's pooled deployment —
+    and aggregate load presses on the blades' links.  Primary-only routing
+    queues every wave behind the writes on each blade's single NIC; the
+    replica policy spreads waves over primary + mirror endpoints."""
+    out: Dict[str, float] = {}
+    for mode in ("primary", "replica"):
+        policy = (ReadPolicy(mode="auto", max_staleness_ops=max_staleness_ops)
+                  if mode == "replica" else None)
+        cluster = NVMCluster(n_blades=n_blades, capacity_per_blade=1 << 26,
+                             n_shards=N_SHARDS, num_mirrors=num_mirrors)
+        cfg = FEConfig(use_oplog=True, use_cache=False, use_batch=True)
+        cfes, tables, rngs, key_pools = [], [], [], []
+        for i in range(n_frontends):
+            cfe = ClusterFrontEnd(cluster, cfg, fe_id=i)
+            t = ShardedHashTable(cfe, f"t{i}", n_buckets=max(256, preload // 2),
+                                 read_policy=policy)
+            rng = random.Random(2000 + i)
+            pool = rng.sample(range(KEYSPACE), preload)
+            t.put_many([(k, k) for k in pool])
+            t.drain()
+            cfes.append(cfe)
+            tables.append(t)
+            rngs.append(rng)
+            key_pools.append(pool)
+        _reset_clocks(cluster, cfes)
+
+        def _agg() -> Dict[str, int]:
+            total: Dict[str, int] = {}
+            for cfe in cfes:
+                for k, v in cfe.aggregate_stats().items():
+                    total[k] = total.get(k, 0) + v
+            return total
+
+        before = _agg()  # preload traffic must not dilute the replica share
+        # interleave front-ends in virtual-time order, one batch per step
+        done = [0] * n_frontends
+        while any(d < ops for d in done):
+            i = min((cfes[i].clock.now, i)
+                    for i in range(n_frontends) if done[i] < ops)[1]
+            rng, pool, t = rngs[i], key_pools[i], tables[i]
+            n = min(batch, ops - done[i])
+            if rng.random() < read_frac:
+                t.get_many([rng.choice(pool) for _ in range(n)])
+            else:
+                t.put_many([(rng.choice(pool), done[i] + j) for j in range(n)])
+            done[i] += n
+        for t in tables:
+            t.drain()
+        out[f"{mode}_kops"] = sum(kops(ops, cfe.clock.now) for cfe in cfes)
+        if mode == "replica":
+            agg = _agg()
+            out["replica_read_frac"] = (
+                (agg["replica_reads"] - before.get("replica_reads", 0))
+                / max(1, agg["rdma_reads"] - before.get("rdma_reads", 0))
+            )
+    out["speedup"] = out["replica_kops"] / out["primary_kops"]
+    return out
+
+
 def run_availability(n_blades: int = 4, n_frontends: int = 16, preload: int = 300,
                      ops: int = 800, kill_at_frac: float = 0.4,
                      bucket_ns: float = 5e5) -> Dict:
@@ -141,8 +219,8 @@ def run_availability(n_blades: int = 4, n_frontends: int = 16, preload: int = 30
 
 
 def main(blades=(1, 2, 4, 8), n_frontends: int = 16, preload: int = 400,
-         ops: int = 600, availability: bool = True):
-    out = {"scaling": {}, "availability": None}
+         ops: int = 600, availability: bool = True, replica: bool = True):
+    out = {"scaling": {}, "availability": None, "replica_reads": None}
     prev = 0.0
     for n in blades:
         r = run_scaling(n, n_frontends, preload, ops)
@@ -151,6 +229,13 @@ def main(blades=(1, 2, 4, 8), n_frontends: int = 16, preload: int = 400,
         prev = r["aggregate_kops"]
         print(f"cluster blades={n}: aggregate={r['aggregate_kops']:9.1f} KOPS "
               f"per-client={r['per_client_kops']:8.1f} KOPS {arrow}")
+    if replica:
+        rr = run_replica_reads(preload=preload, ops=ops)
+        out["replica_reads"] = rr
+        print(f"cluster replica reads: primary={rr['primary_kops']:9.1f} KOPS "
+              f"replica={rr['replica_kops']:9.1f} KOPS "
+              f"speedup={rr['speedup']:.2f}x "
+              f"(replica share {rr['replica_read_frac'] * 100:.0f}%)")
     if availability:
         a = run_availability(n_blades=max(2, min(4, max(blades))),
                              n_frontends=n_frontends,

@@ -13,7 +13,24 @@ paths exercised.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+
+def _write_record(path: str, rows: list, prefix: str, preload: int,
+                  n_ops: int, wall_s: float) -> None:
+    """Emit a perf record in the schema scripts/check_bench.py guards: the
+    measurement rows plus a ``{prefix}_bench_meta`` provenance entry (run
+    sizes + wall clock) so the guard compares like-for-like."""
+    record = rows + [{
+        "name": f"{prefix}_bench_meta",
+        "preload": preload,
+        "n_ops": n_ops,
+        "wall_clock_seconds": round(wall_s, 1),
+    }]
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"[{prefix}] perf record -> {path} ({wall_s:.0f}s wall)")
 
 
 def main(argv=None) -> None:
@@ -23,9 +40,22 @@ def main(argv=None) -> None:
                     help="tiny sizes: every figure end-to-end in under a minute")
     ap.add_argument("--only", default=None,
                     help="comma list: table2,table3,fig7,fig9,fig10,fig11,apps,cluster,vector")
-    ap.add_argument("--bench-json", default="BENCH_vector_ops.json",
-                    help="where the vector-ops perf record is written")
+    ap.add_argument("--bench-json", default=None,
+                    help="where the vector-ops perf record is written "
+                         "(default BENCH_vector_ops.json; --smoke runs write "
+                         "a .smoke.json sibling so toy-size numbers never "
+                         "clobber the committed baseline)")
+    ap.add_argument("--cluster-json", default=None,
+                    help="where the cluster replica-read perf record is "
+                         "written (default BENCH_cluster_reads.json, same "
+                         "--smoke guard)")
     args = ap.parse_args(argv)
+    if args.bench_json is None:
+        args.bench_json = ("BENCH_vector_ops.smoke.json" if args.smoke
+                           else "BENCH_vector_ops.json")
+    if args.cluster_json is None:
+        args.cluster_json = ("BENCH_cluster_reads.smoke.json" if args.smoke
+                             else "BENCH_cluster_reads.json")
     only = set(args.only.split(",")) if args.only else None
     if args.smoke:
         preload, n_ops = (400, 120)
@@ -96,13 +126,20 @@ def main(argv=None) -> None:
              f"overhead={out['overhead_blade']*100:.1f}%_fe_driven={out['overhead_fe']*100:.1f}%")
 
     if want("cluster"):
+        import time
+
         from .fig_cluster_scaling import main as fcluster
+        wall0 = time.perf_counter()
         if args.smoke:
-            out = fcluster(blades=(1, 2, 4), preload=80, ops=150)
+            cpreload, cops = 80, 150
+            out = fcluster(blades=(1, 2, 4), preload=cpreload, ops=cops)
         elif args.quick:
-            out = fcluster(blades=(1, 2, 4), preload=250, ops=400)
+            cpreload, cops = 250, 400
+            out = fcluster(blades=(1, 2, 4), preload=cpreload, ops=cops)
         else:
+            cpreload, cops = 400, 600
             out = fcluster()
+        wall_s = time.perf_counter() - wall0
         scaling = out["scaling"]
         lo, hi = min(scaling), max(scaling)
         gain = scaling[hi]["aggregate_kops"] / scaling[lo]["aggregate_kops"]
@@ -112,9 +149,19 @@ def main(argv=None) -> None:
         a = out["availability"]
         emit("cluster_availability", 0.0,
              f"failovers={a['failovers']}_lost_committed={a['lost_committed']}")
+        rr = out["replica_reads"]
+        emit("cluster_replica_get_many", 1e3 / rr["replica_kops"],
+             f"replica_vs_primary={rr['speedup']:.2f}x")
+        # replica-read perf record: guarded by scripts/check_bench.py like
+        # the vector-ops record (same schema, sibling file)
+        _write_record(args.cluster_json, [{
+            "name": "cluster_replica_get_many",
+            "simulated_us_per_op": 1e3 / rr["replica_kops"],
+            "replica_read_frac": round(rr["replica_read_frac"], 3),
+            "speedup_vs_serial": round(rr["speedup"], 2),
+        }], "cluster", cpreload, cops, wall_s)
 
     if want("vector"):
-        import json
         import time
 
         from .fig_vector_ops import main as fvec
@@ -124,28 +171,19 @@ def main(argv=None) -> None:
         row = out["hashtable"]
         emit("vector_hashtable_put_many", 1e3 / row["batched_put_kops"],
              f"batched_vs_serial={row['put_speedup']:.1f}x")
-        record = []
+        rows = []
         for name, r in out.items():
             for op in ("put", "get"):
                 if f"batched_{op}_kops" not in r:
                     continue
-                record.append({
+                rows.append({
                     "name": f"vector_{name}_{op}_many",
                     "simulated_us_per_op": 1e3 / r[f"batched_{op}_kops"],
                     "wall_clock_ops_per_sec": round(r[f"batched_{op}_wall_ops"], 1),
                     "speedup_vs_serial": round(r[f"{op}_speedup"], 2),
                 })
-        # provenance + wall-clock of the emitting run, so the CI regression
-        # guard compares like-for-like (see scripts/check_bench.py)
-        record.append({
-            "name": "vector_bench_meta",
-            "preload": preload,
-            "n_ops": max(n_ops, 128),
-            "wall_clock_seconds": round(wall_s, 1),
-        })
-        with open(args.bench_json, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"[vector] perf record -> {args.bench_json} ({wall_s:.0f}s wall)")
+        _write_record(args.bench_json, rows, "vector", preload,
+                      max(n_ops, 128), wall_s)
 
     if want("apps"):
         from .common import kops, make_fe

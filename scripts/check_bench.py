@@ -1,15 +1,17 @@
 #!/usr/bin/env python
-"""Bench-regression guard for the vector-ops perf record.
+"""Bench-regression guard for the committed perf records.
 
 Usage: check_bench.py FRESH_JSON BASELINE_JSON [--max-drop 0.10]
 
-Compares every ``speedup_vs_serial`` entry in a freshly emitted
-``BENCH_vector_ops.json`` against the committed baseline and fails (exit 1)
-when any entry dropped more than ``--max-drop`` (default 10%) below it, or
-when a baseline entry disappeared.  Both files must come from the same
-``benchmarks.run`` invocation sizes — the ``vector_bench_meta`` entry records
-the sizes, and a mismatch is an error (a smoke-size run compared against a
-quick-size baseline would guard nothing).
+Compares every ``speedup_vs_serial`` entry in a freshly emitted perf record
+(``BENCH_vector_ops.json`` — batched vs serial — or
+``BENCH_cluster_reads.json`` — replica-routed vs primary-only) against the
+committed baseline and fails (exit 1) when any entry dropped more than
+``--max-drop`` (default 10%) below it, or when a baseline entry
+disappeared.  Both files must come from the same ``benchmarks.run``
+invocation sizes — the ``*_bench_meta`` entry records the sizes, and a
+mismatch is an error (a smoke-size run compared against a quick-size
+baseline would guard nothing).
 """
 
 from __future__ import annotations
@@ -24,7 +26,9 @@ def _load(path: str) -> tuple[dict, dict]:
         entries = json.load(f)
     speedups = {e["name"]: e["speedup_vs_serial"]
                 for e in entries if "speedup_vs_serial" in e}
-    meta = next((e for e in entries if e.get("name") == "vector_bench_meta"), {})
+    meta = next(
+        (e for e in entries if str(e.get("name", "")).endswith("_bench_meta")), {}
+    )
     return speedups, meta
 
 

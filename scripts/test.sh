@@ -3,13 +3,16 @@
 #
 #   scripts/test.sh            tier-1 suite, every figure script end to end at
 #                              --smoke sizes (< ~1 min), then the vector-ops
-#                              bench-regression guard at --quick sizes
+#                              and cluster replica-read bench-regression
+#                              guards at --quick sizes
 #   scripts/test.sh --no-bench tier-1 suite only
 #
-# The committed BENCH_vector_ops.json baseline is generated with
+# The committed BENCH_vector_ops.json / BENCH_cluster_reads.json baselines
+# are generated with
 #   python -m benchmarks.run --quick --only vector
-# (sizes are recorded in its vector_bench_meta entry); the guard re-runs the
-# same invocation into a scratch file and fails on a >10% speedup drop.
+#   python -m benchmarks.run --quick --only cluster
+# (sizes are recorded in their *_bench_meta entries); the guard re-runs the
+# same invocations into scratch files and fails on a >10% speedup drop.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,8 +25,12 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     scratch="$(mktemp -d)"
     trap 'rm -rf "$scratch"' EXIT
     echo "== benchmark smoke: every figure script, tiny sizes =="
-    python -m benchmarks.run --smoke --bench-json "$scratch/bench_smoke.json"
+    python -m benchmarks.run --smoke --bench-json "$scratch/bench_smoke.json" \
+        --cluster-json "$scratch/cluster_smoke.json"
     echo "== bench-regression guard: vector ops at --quick sizes =="
     python -m benchmarks.run --quick --only vector --bench-json "$scratch/bench_fresh.json"
     python scripts/check_bench.py "$scratch/bench_fresh.json" BENCH_vector_ops.json
+    echo "== bench-regression guard: cluster replica reads at --quick sizes =="
+    python -m benchmarks.run --quick --only cluster --cluster-json "$scratch/cluster_fresh.json"
+    python scripts/check_bench.py "$scratch/cluster_fresh.json" BENCH_cluster_reads.json
 fi

@@ -8,17 +8,22 @@ handling via mirror promotion + log replay, and online shard migration for
 elastic scale-out.
 """
 
-from .directory import DIRECTORY_NAME, ShardDirectory
+from ..core.frontend import ReadPolicy
+from .directory import DIRECTORY_NAME, LEASES_NAME, LeaseTable, ShardDirectory
 from .failover import blade_health, promote_blade
 from .rebalance import migrate_shard, rebalance
-from .router import ClusterFrontEnd, NVMCluster
+from .router import ClusterFrontEnd, ClusterWaveScheduler, NVMCluster
 from .sharded import ShardedBPTree, ShardedHashTable, ShardedStructure
 
 __all__ = [
     "ShardDirectory",
     "DIRECTORY_NAME",
+    "LeaseTable",
+    "LEASES_NAME",
+    "ReadPolicy",
     "NVMCluster",
     "ClusterFrontEnd",
+    "ClusterWaveScheduler",
     "ShardedStructure",
     "ShardedHashTable",
     "ShardedBPTree",

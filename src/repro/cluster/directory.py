@@ -10,23 +10,38 @@ highest valid epoch (a newly promoted mirror carries the epoch that was
 current when it was last replicated to, so the maximum wins).
 
 Epochs order reconfigurations: failover promotions and shard migrations bump
-the epoch, and every front-end validates its cached epoch against the
-authoritative one before routing an op (the simulator's stand-in for an
-epoch-in-every-RPC scheme a la Tsai & Zhang's disaggregated-PM stores).
+the epoch, and every front-end validates its cached epoch before routing an
+op (the simulator's stand-in for an epoch-in-every-RPC scheme a la Tsai &
+Zhang's disaggregated-PM stores).
+
+Leases (PR 5) replace the per-op validation against the authoritative copy:
+a front-end that fetches the directory is granted a lease — (epoch, expiry
+in sim-ns) recorded in the cluster ``LeaseTable``, persisted like the
+directory itself — and validates *locally* for the lease window.  The
+authority in exchange promises to revoke every outstanding lease (paying an
+invalidation-broadcast cost) BEFORE any reconfiguration swaps the mapping,
+so a lease holder can never route to a tombstoned source.  Expiry bounds
+the damage of a lost revocation in a real deployment; here it forces a
+periodic renewal fetch, which is the whole steady-state cost of staying
+fresh.
 """
 
 from __future__ import annotations
 
 import struct
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from ..core.backend import NVMBackend
 from ..core.oplog import fletcher64
 from ..core.structures.base import mix64
 
 DIRECTORY_NAME = "cluster.directory"
+LEASES_NAME = "cluster.leases"
 _MAGIC = 0x52444952  # "RDIR"
 _HEADER = struct.Struct("<IQII")  # magic, epoch, n_shards, n_blades
+_LEASE_MAGIC = 0x5341454C  # "LEAS"
+_LEASE_HEADER = struct.Struct("<II")   # magic, n_entries
+_LEASE_ENTRY = struct.Struct("<IQd")   # fe_id, epoch, expiry_ns
 
 
 class ShardDirectory:
@@ -41,6 +56,11 @@ class ShardDirectory:
             # round-robin initial placement over the member blades
             assignment = {s: blades[s % len(blades)] for s in range(n_shards)}
         self.assignment = dict(assignment)     # shard -> blade id
+        # soft load statistics: data-path ops routed per shard since the
+        # directory was created.  Volatile by design (not encoded): a clone
+        # or a bootstrap starts counting afresh; placement decisions read
+        # the *authoritative* copy, which sees every front-end's traffic.
+        self.op_counts: Dict[int, int] = {}
 
     # ------------------------------------------------------------- routing
     def shard_of(self, key: int) -> int:
@@ -74,6 +94,36 @@ class ShardDirectory:
         for b in self.assignment.values():
             counts[b] = counts.get(b, 0) + 1
         return counts
+
+    # -------------------------------------------------------- load statistics
+    def record_ops(self, shard: int, n: int = 1) -> None:
+        """Count `n` data-path ops routed at `shard` (soft state feeding the
+        weighted rebalancer)."""
+        self.op_counts[shard] = self.op_counts.get(shard, 0) + n
+
+    def shard_weight(self, shard: int) -> int:
+        """Placement weight of one shard: 1 (its existence — a proxy for its
+        resident size, every item having arrived through an op) + the ops
+        routed at it."""
+        return 1 + self.op_counts.get(shard, 0)
+
+    def load_weights(self) -> Dict[int, int]:
+        """Per-blade sum of shard weights — what the weighted rebalancer
+        evens out, instead of the raw shard counts of ``load_counts``."""
+        weights = {b: 0 for b in self.blades}
+        for s, b in self.assignment.items():
+            weights[b] = weights.get(b, 0) + self.shard_weight(s)
+        return weights
+
+    # ------------------------------------------------------------------ clone
+    def clone(self) -> "ShardDirectory":
+        """A routing snapshot for one front-end: same mapping and epoch,
+        independent storage — so a lease holder genuinely routes on its
+        cached copy and reconfigurations CANNOT leak through object
+        aliasing (stale routing is observable, which is exactly what the
+        revoke-before-swap protocol must prevent)."""
+        return ShardDirectory(self.n_shards, self.blades,
+                              dict(self.assignment), self.epoch)
 
     # ----------------------------------------------------------- wire format
     def encode(self) -> bytes:
@@ -128,3 +178,103 @@ class ShardDirectory:
             if d is not None and (best is None or d.epoch > best.epoch):
                 best = d
         return best
+
+
+class LeaseTable:
+    """Per-front-end directory leases: fe_id -> (epoch, expiry sim-ns).
+
+    A valid lease lets ``ClusterFrontEnd.ensure_fresh`` validate its cached
+    directory locally — no authoritative check, no cost — for the lease
+    window.  The table is the authority's revocation handle: every
+    reconfiguration calls ``revoke_all`` (and pays the invalidation
+    broadcast) BEFORE swapping the mapping, so no holder can keep routing
+    to a tombstoned source.  Persisted as a checksummed blob on every live
+    blade (like the directory): a restarted authority recovers which leases
+    are outstanding and must be waited out / revoked, instead of silently
+    breaking the holders' contract."""
+
+    def __init__(self) -> None:
+        self.leases: Dict[int, Tuple[int, float]] = {}
+        self.revocations = 0  # total leases revoked (observability)
+
+    # -------------------------------------------------------------- protocol
+    def grant(self, fe_id: int, epoch: int, now_ns: float, ttl_ns: float) -> bool:
+        """Grant/renew a lease.  Returns True when the durable table changed
+        materially — a new holder or a new epoch.  A pure expiry extension
+        returns False so callers can skip re-persisting on every renewal
+        (the persisted table records WHO holds leases at WHICH epoch; the
+        expiry only bounds how long a lost revocation can stay stale)."""
+        prev = self.leases.get(fe_id)
+        self.leases[fe_id] = (epoch, now_ns + ttl_ns)
+        return prev is None or prev[0] != epoch
+
+    def valid(self, fe_id: int, epoch: int, now_ns: float) -> bool:
+        entry = self.leases.get(fe_id)
+        return entry is not None and entry[0] == epoch and now_ns < entry[1]
+
+    def revoke(self, fe_id: int) -> bool:
+        if fe_id in self.leases:
+            del self.leases[fe_id]
+            self.revocations += 1
+            return True
+        return False
+
+    def revoke_all(self) -> int:
+        """Invalidate every outstanding lease; returns how many holders the
+        invalidation broadcast must reach (its cost scales with this)."""
+        n = len(self.leases)
+        self.leases.clear()
+        self.revocations += n
+        return n
+
+    # ----------------------------------------------------------- wire format
+    def encode(self) -> bytes:
+        body = _LEASE_HEADER.pack(_LEASE_MAGIC, len(self.leases))
+        for fe_id in sorted(self.leases):
+            epoch, expiry = self.leases[fe_id]
+            body += _LEASE_ENTRY.pack(fe_id, epoch, expiry)
+        return body + struct.pack("<Q", fletcher64(body))
+
+    @classmethod
+    def decode(cls, raw: bytes) -> Optional["LeaseTable"]:
+        if len(raw) < _LEASE_HEADER.size + 8:
+            return None
+        body, (csum,) = raw[:-8], struct.unpack("<Q", raw[-8:])
+        if fletcher64(body) != csum:
+            return None
+        magic, n = _LEASE_HEADER.unpack_from(body, 0)
+        if magic != _LEASE_MAGIC:
+            return None
+        t = cls()
+        off = _LEASE_HEADER.size
+        for _ in range(n):
+            fe_id, epoch, expiry = _LEASE_ENTRY.unpack_from(body, off)
+            off += _LEASE_ENTRY.size
+            t.leases[fe_id] = (epoch, expiry)
+        return t
+
+    # ------------------------------------------------------------ persistence
+    def persist(self, blades: Dict[int, NVMBackend]) -> int:
+        raw = self.encode()
+        landed = 0
+        for be in blades.values():
+            if not be.alive:
+                continue
+            be.put_blob(LEASES_NAME, raw)
+            landed += 1
+        return landed
+
+    @classmethod
+    def bootstrap(cls, blades: Dict[int, NVMBackend]) -> "LeaseTable":
+        """Recover outstanding leases from any live blade's copy (an absent
+        or torn blob means no leases are outstanding)."""
+        for be in blades.values():
+            if not be.alive:
+                continue
+            raw = be.get_blob(LEASES_NAME)
+            if raw is None:
+                continue
+            t = cls.decode(raw)
+            if t is not None:
+                return t
+        return cls()

@@ -22,22 +22,28 @@ single-blade machinery end to end:
 
 from __future__ import annotations
 
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Optional
 
 from ..core.backend import NVMBackend
+from ..core.sim import Clock
 
 if TYPE_CHECKING:  # pragma: no cover
     from .router import NVMCluster
 
 
-def promote_blade(cluster: "NVMCluster", blade_id: int, mirror_idx: int = 0) -> NVMBackend:
-    """Swap blade `blade_id`'s mirror in as the new primary."""
+def promote_blade(cluster: "NVMCluster", blade_id: int, mirror_idx: int = 0,
+                  clock: Optional[Clock] = None) -> NVMBackend:
+    """Swap blade `blade_id`'s mirror in as the new primary.
+
+    Lease protocol: every outstanding directory lease is revoked (and the
+    invalidation broadcast paid) BEFORE the fresh blade is swapped in and
+    the epoch bumped — a lease holder skipping per-op validation must never
+    route another op at the dead primary's binding."""
+    cluster.revoke_leases(clock)
     old = cluster.blades[blade_id]
+    # promote_mirror re-seeds the fresh blade's own mirror set with the full
+    # arena, so replication fan-in (and replica reads) continue correctly
     fresh = old.promote_mirror(mirror_idx)
-    # replication fan-in continues: the promoted primary mirrors to its own
-    # (fresh, re-seeded) mirror set from now on
-    for m in fresh.mirrors:
-        m.arena[:] = fresh.arena
     cluster.blades[blade_id] = fresh
     cluster.failovers += 1
     cluster.directory.bump_epoch()

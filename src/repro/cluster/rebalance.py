@@ -116,6 +116,11 @@ def migrate_shard(
         during_copy()
 
     # -- 3. epoch swap ----------------------------------------------------
+    # revoke-before-swap: every outstanding directory lease is invalidated
+    # (broadcast cost on this front-end's clock) BEFORE the assignment
+    # flips, so no lease holder validating locally can route another op at
+    # the source copy we are about to tombstone and reclaim
+    cluster.revoke_leases(cfe.clock)
     directory.assign(shard, dst_blade)
     directory.bump_epoch()
     directory.persist(cluster.blades)
@@ -136,21 +141,38 @@ def migrate_shard(
 
 
 def rebalance(sharded: ShardedStructure) -> Dict[int, int]:
-    """Even out shard placement across live blades (used after add_blade):
-    repeatedly move a shard from the most- to the least-loaded blade until
-    the spread is <= 1.  Returns {shard: dst_blade} for every move."""
+    """Even out shard placement across live blades (used after add_blade),
+    weighted by observed load: each shard weighs 1 + the data-path ops the
+    authoritative directory has seen routed at it
+    (``ShardDirectory.record_ops``), so a blade hosting two hot shards
+    sheds one to a blade hosting ten cold ones — instead of evening raw
+    shard counts and calling an obviously skewed placement balanced.
+
+    Greedy: repeatedly move the heaviest shard that still *strictly
+    reduces* the load variance (a shard of weight w moves from the
+    heaviest to the lightest blade only when ``w < heaviest - lightest``,
+    which is exactly the sum-of-squares descent condition, so the loop
+    terminates).  With uniform weights (no recorded traffic) this
+    degenerates to the old count-evening behaviour.  Returns
+    {shard: dst_blade} for every move."""
     cluster = sharded.cfe.cluster
     directory = cluster.directory
     moves: Dict[int, int] = {}
     while True:
-        counts = {
-            b: n for b, n in directory.load_counts().items()
+        weights = {
+            b: w for b, w in directory.load_weights().items()
             if cluster.blades[b].alive
         }
-        hi = max(counts, key=lambda b: (counts[b], b))
-        lo = min(counts, key=lambda b: (counts[b], b))
-        if counts[hi] - counts[lo] <= 1:
+        hi = max(weights, key=lambda b: (weights[b], b))
+        lo = min(weights, key=lambda b: (weights[b], b))
+        gap = weights[hi] - weights[lo]
+        movable = [
+            (directory.shard_weight(s), -s, s)
+            for s in directory.shards_on(hi)
+            if directory.shard_weight(s) < gap
+        ]
+        if not movable:
             return moves
-        shard = min(directory.shards_on(hi))
+        shard = max(movable)[2]  # heaviest improving shard (ties: lowest id)
         migrate_shard(sharded, shard, lo)
         moves[shard] = lo

@@ -15,11 +15,31 @@ blades while leaving different clients free to hit different blades'
 links concurrently — which is exactly where the aggregate-bandwidth win of a
 multi-blade cluster comes from (fig_cluster_scaling).
 
-Staleness protocol: every data-path entry point calls ``ensure_fresh()``;
-if the cached directory epoch is behind the authoritative one, staged state
-on healthy blades is drained, all per-blade front-ends are rebound, and the
-caller re-resolves its shard — the simulator equivalent of carrying the
-epoch in every RPC and bouncing mismatches.
+Staleness protocol (leases, PR 5): every data-path entry point calls
+``ensure_fresh()``.  A front-end holding a valid directory lease validates
+*locally* against its own snapshot — no authoritative check, no cost.  The
+snapshot is a real clone (``ShardDirectory.clone``), so stale routing is
+physically possible; what makes it safe is the other half of the contract:
+every reconfiguration (migration, failover promotion, scale-out, reboot
+epoch bump) REVOKES all outstanding leases — paying one invalidation round
+per holder (``CostModel.lease_invalidate_ns``) — *before* it swaps the
+mapping.  A revoked or expired lease forces the full refresh path: drain
+staged state on healthy blades, drop every per-blade front-end (lazily
+rebound), re-fetch the directory blob, and acquire a fresh lease
+(``lease_grant_ns`` on top of the fetch round).  Lease expiry
+(``NVMCluster.lease_ttl_ns``) bounds the stale window if a revocation is
+lost in a real deployment; in steady state it shows up as one renewal
+fetch per TTL instead of a validation per op.
+
+Replica reads: the sharded layer (which owns the per-structure op streams)
+pins keys this front-end wrote until the mirror applied watermark passes
+their op-sequence number, preserving read-your-writes when ``get`` /
+``get_many`` route to mirror endpoints.
+
+``ClusterWaveScheduler`` is the cluster-level wave scheduler: per-blade
+``batch_all()`` windows (and their close fences) overlap — every blade's
+sub-batch starts at the same client time and the client resumes at the
+*latest* blade completion — instead of draining blades serially.
 """
 
 from __future__ import annotations
@@ -30,7 +50,7 @@ from typing import Callable, Dict, List, Optional
 from ..core.backend import CrashError, NVMBackend
 from ..core.frontend import FEConfig, FrontEnd
 from ..core.sim import Clock, CostModel
-from .directory import ShardDirectory
+from .directory import LeaseTable, ShardDirectory
 from .failover import promote_blade
 
 
@@ -46,6 +66,7 @@ class NVMCluster:
         num_mirrors: int = 1,
         n_shards: int = 16,
         name_slots: int = 1 << 13,
+        lease_ttl_ns: float = 2_000_000.0,
     ):
         self.cost = cost or CostModel()
         self.capacity_per_blade = capacity_per_blade
@@ -55,6 +76,7 @@ class NVMCluster:
         # dozen naming slots, so they get a much larger naming table than a
         # standalone blade's 512 slots
         self.name_slots = name_slots
+        self.lease_ttl_ns = lease_ttl_ns
         self.blades: Dict[int, NVMBackend] = {
             i: NVMBackend(
                 capacity_per_blade,
@@ -68,6 +90,8 @@ class NVMCluster:
         }
         self.directory = ShardDirectory(n_shards, sorted(self.blades))
         self.directory.persist(self.blades)
+        self.leases = LeaseTable()
+        self.leases.persist(self.blades)
         self.failovers = 0
         self.migrations = 0
         self._frontends: List["weakref.ref[ClusterFrontEnd]"] = []
@@ -94,6 +118,21 @@ class NVMCluster:
             fe.drain_all()
             cfe.clock.advance_to(fe.clock.now)
 
+    # ----------------------------------------------------------------- leases
+    def revoke_leases(self, clock: Optional[Clock] = None) -> int:
+        """Invalidate every outstanding directory lease and re-persist the
+        lease table — the mandatory first step of ANY reconfiguration: only
+        after the broadcast lands may the mapping swap, so no lease holder
+        can keep routing ops at a source that is about to be tombstoned.
+        Costs one invalidation round per holder, charged to the initiator's
+        `clock` when one is in scope (an external admin action passes
+        None).  Returns the number of leases revoked."""
+        n = self.leases.revoke_all()
+        if n and clock is not None:
+            clock.advance(n * self.cost.lease_invalidate_ns)
+        self.leases.persist(self.blades)
+        return n
+
     # ------------------------------------------------------------- membership
     def add_blade(self) -> int:
         """Elastic scale-out: a new empty blade joins; shards move to it only
@@ -107,13 +146,14 @@ class NVMCluster:
             blade_id=bid,
             name_slots=self.name_slots,
         )
+        self.revoke_leases()
         self.directory.add_blade(bid)
         self.directory.bump_epoch()
         self.directory.persist(self.blades)
         return bid
 
     # --------------------------------------------------------------- failures
-    def handle_blade_failure(self, blade_id: int) -> NVMBackend:
+    def handle_blade_failure(self, blade_id: int, clock: Optional[Clock] = None) -> NVMBackend:
         """Bring blade `blade_id` back: reboot after a transient power loss,
         or promote its mirror after a permanent failure.  Idempotent — the
         first front-end to notice performs the recovery; later callers see an
@@ -126,18 +166,24 @@ class NVMCluster:
                 raise CrashError(
                     f"blade {blade_id} failed permanently with no mirror to promote"
                 )
-            return promote_blade(self, blade_id)
+            return promote_blade(self, blade_id, clock=clock)
         be.reboot()
+        self.revoke_leases(clock)
         self.directory.bump_epoch()
         self.directory.persist(self.blades)
         return be
 
     # ------------------------------------------------------------------ admin
     def bootstrap_directory(self) -> ShardDirectory:
-        """Cold start from bytes alone (any surviving blade copy wins)."""
+        """Cold start from bytes alone (any surviving blade copy wins).
+        Outstanding leases are recovered the same way, then revoked: a
+        restarted authority cannot honour promises it no longer remembers
+        making, so every holder re-validates."""
         d = ShardDirectory.bootstrap(self.blades)
         if d is None:
             raise CrashError("no live blade holds a valid directory copy")
+        self.leases = LeaseTable.bootstrap(self.blades)
+        self.revoke_leases()
         self.directory = d
         return d
 
@@ -145,9 +191,54 @@ class NVMCluster:
         return [b for b, be in self.blades.items() if be.alive]
 
 
+class ClusterWaveScheduler:
+    """Cluster-level wave scheduling: fan per-blade work out so every
+    blade's sub-batch — including its ``batch_all()`` window and the close
+    fence of any doorbell write wave inside — starts at the same client
+    time and runs against its own front-end/link, with the client resuming
+    at the *latest* blade completion.  Per-op routing (and the previous
+    serial drains) needlessly serialized windows that target disjoint
+    links; overlapping them is the read-side counterpart of the write-wave
+    refactor's aggregate-bandwidth argument."""
+
+    def __init__(self, cfe: "ClusterFrontEnd"):
+        self.cfe = cfe
+
+    def run(
+        self,
+        per_blade: Dict[int, Callable[[FrontEnd], object]],
+        *,
+        combined: bool = False,
+        bind: Optional[Callable[[int], FrontEnd]] = None,
+    ) -> Dict[int, object]:
+        """Run `per_blade[bid](fe)` for every blade, overlapped.  With
+        ``combined`` each blade's thunk runs inside that front-end's
+        cross-structure ``batch_all()`` window (ONE combined oplog+memlog
+        posted write per blade).  ``bind`` overrides front-end resolution
+        (the drain path operates on the already-bound fleet instead of
+        rebinding through the directory)."""
+        cfe = self.cfe
+        resolve = bind or cfe.fe_for_blade
+        t0 = cfe.clock.now
+        out: Dict[int, object] = {}
+        end = t0
+        for bid in sorted(per_blade):
+            fe = resolve(bid)
+            fe.clock.advance_to(t0)
+            if combined:
+                with fe.batch_all():
+                    out[bid] = per_blade[bid](fe)
+            else:
+                out[bid] = per_blade[bid](fe)
+            end = max(end, fe.clock.now)
+        cfe.clock.advance_to(end)
+        return out
+
+
 class ClusterFrontEnd:
     """One client's view of the cluster: a per-blade FrontEnd fleet, routed
-    through the shard directory, serialized on a single client clock."""
+    through a leased directory snapshot, serialized on a single client
+    clock."""
 
     def __init__(self, cluster: NVMCluster, config: Optional[FEConfig] = None, fe_id: int = 0):
         self.cluster = cluster
@@ -156,38 +247,55 @@ class ClusterFrontEnd:
         self.cost = cluster.cost
         self.clock = Clock()
         self.fes: Dict[int, FrontEnd] = {}
-        self.directory = cluster.directory
+        self.directory: Optional[ShardDirectory] = None  # leased snapshot
         self.epoch = -1  # force a fetch (and its cost) on first use
         self.directory_fetches = 0
+        self.lease_validations = 0  # ops validated locally under the lease
+        self.scheduler = ClusterWaveScheduler(self)
         cluster.register_frontend(self)
         self.ensure_fresh()
 
     # ------------------------------------------------------- epoch validation
     def ensure_fresh(self) -> bool:
-        """Validate the cached directory epoch; on mismatch, drain staged
-        state on healthy blades, drop every per-blade front-end (they are
-        lazily rebound against the current blade objects), and charge one
-        round for re-fetching the directory blob."""
-        d = self.cluster.directory
-        if d.epoch == self.epoch and d is self.directory:
+        """Validate the cached directory snapshot.
+
+        Inside a valid lease window this is LOCAL: no authoritative check,
+        no cost — the revoke-before-swap contract guarantees the snapshot
+        cannot be stale while the lease stands.  A revoked/expired lease
+        (or a cold start) pays the full path: drain staged state on healthy
+        blades and drop every per-blade front-end if the epoch moved, then
+        one round to re-fetch the directory blob plus the lease grant.
+        Returns True when the epoch (and thus the binding) changed."""
+        now = self.clock.now
+        if self.directory is not None and self.cluster.leases.valid(self.fe_id, self.epoch, now):
+            self.lease_validations += 1
             return False
-        for bid, fe in list(self.fes.items()):
-            be = self.cluster.blades.get(bid)
-            if be is not None and be.alive and fe.backend is be:
-                fe.clock.advance_to(self.clock.now)
-                try:
-                    fe.drain_all()
-                except CrashError:
-                    pass  # blade died mid-drain: those staged ops are lost
-                self.clock.advance_to(fe.clock.now)
-            del self.fes[bid]
+        d = self.cluster.directory
+        changed = d.epoch != self.epoch or self.directory is None
+        if changed:
+            for bid, fe in list(self.fes.items()):
+                be = self.cluster.blades.get(bid)
+                if be is not None and be.alive and fe.backend is be:
+                    fe.clock.advance_to(self.clock.now)
+                    try:
+                        fe.drain_all()
+                    except CrashError:
+                        pass  # blade died mid-drain: those staged ops are lost
+                    self.clock.advance_to(fe.clock.now)
+                del self.fes[bid]
         self.clock.advance(
             self.cost.issue_ns + self.cost.rtt_ns + self.cost.xfer_ns(len(d.encode()))
+            + self.cost.lease_grant_ns
         )
         self.directory_fetches += 1
-        self.directory = d
+        self.directory = d.clone()
         self.epoch = d.epoch
-        return True
+        if self.cluster.leases.grant(self.fe_id, self.epoch, self.clock.now,
+                                     self.cluster.lease_ttl_ns):
+            # durable table changed (new holder / new epoch) — a pure
+            # expiry renewal skips the per-blade blob rewrite
+            self.cluster.leases.persist(self.cluster.blades)
+        return changed
 
     # --------------------------------------------------------------- binding
     def fe_for_blade(self, blade_id: int) -> FrontEnd:
@@ -213,12 +321,9 @@ class ClusterFrontEnd:
     # --------------------------------------------------------- batch dispatch
     def execute_batch(self, per_blade: Dict[int, Callable[[FrontEnd], object]],
                       combined: bool = True) -> Dict[int, object]:
-        """Fan a batch out over blades: ONE epoch check for the whole batch,
-        then every blade's sub-batch starts at the same client time and runs
-        against its own front-end/link — the client resumes at the *latest*
-        completion (sub-batches to different blades overlap on the fabric,
-        which is exactly the aggregate-bandwidth win of a multi-blade
-        cluster; per-op routing serialized them needlessly).
+        """Fan a batch out over blades through the cluster wave scheduler:
+        ONE epoch check for the whole batch, per-blade sub-batches (and
+        their window fences) overlapped on the fabric.
 
         With ``combined`` (the default) each blade's sub-batch runs inside
         that front-end's cross-structure ``batch_all()`` window: ops may
@@ -228,37 +333,28 @@ class ClusterFrontEnd:
         the window close for all-or-none retry accounting) pass
         ``combined=False``.  Returns {blade_id: fn result}."""
         self.ensure_fresh()
-        t0 = self.clock.now
-        out: Dict[int, object] = {}
-        end = t0
-        for bid, fn in sorted(per_blade.items()):
-            fe = self.fe_for_blade(bid)
-            fe.clock.advance_to(t0)
-            if combined:
-                with fe.batch_all():
-                    out[bid] = fn(fe)
-            else:
-                out[bid] = fn(fe)
-            end = max(end, fe.clock.now)
-        self.clock.advance_to(end)
-        return out
+        return self.scheduler.run(per_blade, combined=combined)
 
     def recover_blade(self, blade_id: int) -> None:
         """Data-path failure handler: recover the blade (reboot / mirror
-        promotion) and force a full rebind via the epoch bump it caused."""
-        self.cluster.handle_blade_failure(blade_id)
+        promotion) and force a full rebind via the epoch bump (and lease
+        revocation) it caused."""
+        self.cluster.handle_blade_failure(blade_id, clock=self.clock)
         self.fes.pop(blade_id, None)
         self.ensure_fresh()
 
     # ----------------------------------------------------------------- drains
     def drain_all(self) -> None:
         """Fan the per-blade drain hooks out over the fleet (clean shutdown /
-        end-of-benchmark barrier)."""
-        for bid in sorted(self.fes):
-            fe = self.fes[bid]
-            fe.clock.advance_to(self.clock.now)
-            fe.drain_all()
-            self.clock.advance_to(fe.clock.now)
+        end-of-benchmark barrier), overlapped by the wave scheduler: every
+        blade's combined flush and wave fence lands against its own link
+        starting from the same client time."""
+        if not self.fes:
+            return
+        self.scheduler.run(
+            {bid: (lambda fe: fe.drain_all()) for bid in self.fes},
+            bind=self.fes.__getitem__,
+        )
 
     # ------------------------------------------------------------------ stats
     def aggregate_stats(self) -> Dict[str, int]:

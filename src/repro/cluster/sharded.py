@@ -29,6 +29,7 @@ import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..core.backend import CrashError
+from ..core.frontend import ReadPolicy
 from ..core.structures import RemoteBPTree, RemoteHashTable
 from .router import ClusterFrontEnd
 
@@ -51,12 +52,24 @@ class _ShardBPTree(RemoteBPTree):
 
 
 class ShardedStructure:
-    """Shared routing/failover machinery for the sharded wrappers."""
+    """Shared routing/failover machinery for the sharded wrappers.
 
-    def __init__(self, cfe: ClusterFrontEnd, name: str):
+    Replica reads: with a ``read_policy`` set, ``get``/``get_many`` route
+    to the shard blade's *mirror* endpoints under the policy's bounded-
+    staleness contract.  Read-your-writes is preserved by pinning: every
+    key this wrapper writes is recorded with the op-sequence number of its
+    write, and its reads stay on the primary until the mirrors' applied
+    watermark passes that seq — at which point the mirror provably holds
+    the write's effects and the pin is released.  Writes are primary-only
+    always."""
+
+    def __init__(self, cfe: ClusterFrontEnd, name: str,
+                 read_policy: Optional[ReadPolicy] = None):
         self.cfe = cfe
         self.name = name
+        self.read_policy = read_policy
         self._shards: Dict[int, object] = {}  # shard -> bound structure
+        self._pinned: Dict[int, Tuple[int, int]] = {}  # key -> (shard, seq)
 
     # ------------------------------------------------------- shard resolution
     def _shard_name(self, shard: int) -> str:
@@ -95,7 +108,79 @@ class ShardedStructure:
         finally:
             self.cfe.clock.advance_to(fe.clock.now)
         self._shards[shard] = obj
+        # (re)binding starts a fresh view of the shard's op stream — after a
+        # migration or failover the destination renumbers ops, so pin seqs
+        # recorded against the old stream are meaningless there.  Re-pin the
+        # shard's keys at the new binding's committed tail: they stay on the
+        # primary until the new blade's mirrors have provably applied the
+        # whole rebound state (which includes every migrated write).
+        if self._pinned:
+            for k, entry in self._pinned.items():
+                if entry[0] == shard:
+                    self._pinned[k] = (shard, obj.h.seq)
         return obj
+
+    # --------------------------------------------------- replica read routing
+    def _note_write(self, key: int, shard: int, obj) -> None:
+        """Pin `key` to the primary for reads: recorded at the op-seq of its
+        write, released once every mirror's applied watermark passes it.
+        Pins only matter when replica routing can actually happen — without
+        a policy, or on a blade with no mirrors, every read goes to the
+        primary anyway, so nothing is recorded (and nothing can leak)."""
+        if self.read_policy is None or not obj.fe.backend.mirrors:
+            return
+        self._pinned[key] = (shard, obj.h.seq)
+
+    def _replica_floor(self, obj) -> int:
+        """The lowest applied watermark across the shard blade's mirrors:
+        pins at or below it are releasable (every replica already holds
+        those writes' effects).  -1 when the blade has no mirrors."""
+        be = obj.fe.backend
+        if not be.mirrors:
+            return -1
+        return min(be.replica_applied_seq(obj.name, i)
+                   for i in range(len(be.mirrors)))
+
+    def _serve_reads(self, obj, keys: List[int], reader: Callable) -> List:
+        """Serve a shard's read sub-batch under the read policy: pinned keys
+        (written here, not yet provably on every mirror) go to the primary;
+        the rest resolve their target through ``FrontEnd.replica_reads`` —
+        mirror endpoints within the staleness bound, with automatic primary
+        fallback.  Returns values in input-key order."""
+        pol = self.read_policy
+        if pol is None:
+            return reader(obj, keys)
+        floor = self._replica_floor(obj)
+        if len(self._pinned) > 1 << 12:
+            # oversize sweep: release every pin whose own shard's mirrors
+            # already cover it, read or not (keys written once and never
+            # read again must not accumulate forever).  Floors are computed
+            # per shard from the currently-bound structures.
+            floors: Dict[int, Optional[int]] = {}
+            for k, (s, q) in list(self._pinned.items()):
+                if s not in floors:
+                    bound = self._shards.get(s)
+                    floors[s] = None if bound is None else self._replica_floor(bound)
+                sf = floors[s]
+                if sf is not None and q <= sf:
+                    del self._pinned[k]
+        replica_ok: List[int] = []
+        pinned: List[int] = []
+        for k in keys:
+            entry = self._pinned.get(k)
+            if entry is not None and entry[1] <= floor:
+                del self._pinned[k]  # mirrors caught up: release the pin
+                entry = None
+            (pinned if entry is not None else replica_ok).append(k)
+        vals: Dict[int, object] = {}
+        if replica_ok:
+            with obj.fe.replica_reads(pol):
+                for k, v in zip(replica_ok, reader(obj, replica_ok)):
+                    vals[k] = v
+        if pinned:
+            for k, v in zip(pinned, reader(obj, pinned)):
+                vals[k] = v
+        return [vals[k] for k in keys]
 
     # ------------------------------------------------------------ op dispatch
     def _on_shard(self, shard: int, fn: Callable, *, create_if_missing: bool = True,
@@ -113,9 +198,13 @@ class ShardedStructure:
                 fe = obj.fe
                 fe.clock.advance_to(self.cfe.clock.now)
                 try:
-                    return fn(obj)
+                    result = fn(obj)
                 finally:
                     self.cfe.clock.advance_to(fe.clock.now)
+                # load accounting on success only: a failed attempt retries
+                # and must not double-count its op into the shard weight
+                self.cfe.cluster.directory.record_ops(shard)
+                return result
             except CrashError as e:
                 last = e
                 self.cfe.recover_blade(bid)
@@ -125,12 +214,15 @@ class ShardedStructure:
         return self._on_shard(self.cfe.directory.shard_of(key), fn, **kw)
 
     def _on_shards(self, shard_fns: Dict[int, Callable], *,
-                   create_if_missing: bool = True, default=None) -> Dict[int, object]:
+                   create_if_missing: bool = True, default=None,
+                   ops_per_shard: Optional[Dict[int, int]] = None) -> Dict[int, object]:
         """Batch dispatch: run `shard_fns[shard](shard_structure)` for every
         shard with ONE epoch check per attempt (not per op), sub-batches to
         different blades overlapping in time (same-blade shards serialize on
         their shared front-end), and recover-and-retry per blade on
-        failure.  Returns {shard: result}."""
+        failure.  ``ops_per_shard`` feeds the load-weight accounting with
+        the real sub-batch sizes (default 1 per shard; pass 0 for non-op
+        dispatches like drains).  Returns {shard: result}."""
         out: Dict[int, object] = {}
         remaining = dict(shard_fns)
         last: Optional[CrashError] = None
@@ -195,6 +287,9 @@ class ShardedStructure:
                 last = errs[-1]
             for shard in done:
                 remaining.pop(shard, None)
+                n = 1 if ops_per_shard is None else ops_per_shard.get(shard, 1)
+                if n:
+                    self.cfe.cluster.directory.record_ops(shard, n)
             for bid in failed_bids:
                 self.cfe.recover_blade(bid)
         if remaining:
@@ -208,26 +303,44 @@ class ShardedStructure:
         one epoch check for the whole batch.  Shards co-resident on one
         blade share that blade's batch_all() window, so the entire blade
         sub-batch — however many shard structures it spans — drains with a
-        single combined oplog+memlog posted write."""
+        single combined oplog+memlog posted write.  Every written key is
+        pinned at the batch's closing op-seq (conservative: the whole batch
+        must reach the mirrors before any of its keys reads from one)."""
         groups: Dict[int, List[Tuple[int, int]]] = {}
         for k, v in pairs:
             groups.setdefault(self.cfe.directory.shard_of(k), []).append((k, v))
-        self._on_shards(
-            {s: (lambda sub: lambda t: t.put_many(sub))(sub)
-             for s, sub in groups.items()}
-        )
+
+        def mk(shard: int, sub: List[Tuple[int, int]]) -> Callable:
+            def run(t):
+                t.put_many(sub)
+                if self.read_policy is not None and t.fe.backend.mirrors:
+                    for k, _ in sub:
+                        self._pinned[k] = (shard, t.h.seq)
+            return run
+
+        self._on_shards({s: mk(s, sub) for s, sub in groups.items()},
+                        ops_per_shard={s: len(sub) for s, sub in groups.items()})
 
     def get_many(self, keys: List[int]) -> List[Optional[int]]:
         """Partition a read batch by shard, fan out, merge results back into
-        input order (missing shards contribute None)."""
+        input order (missing shards contribute None).  Under a read policy
+        each shard sub-batch routes through ``_serve_reads``: unpinned keys
+        go to mirror endpoints within the staleness bound, pinned keys to
+        the primary."""
         groups: Dict[int, List[int]] = {}
         for i, k in enumerate(keys):
             groups.setdefault(self.cfe.directory.shard_of(k), []).append(i)
+
+        def mk(sub: List[int]) -> Callable:
+            return lambda t: self._serve_reads(
+                t, sub, lambda obj, ks: obj.get_many(ks)
+            )
+
         res = self._on_shards(
-            {s: (lambda sub: lambda t: t.get_many(sub))([keys[i] for i in idxs])
-             for s, idxs in groups.items()},
+            {s: mk([keys[i] for i in idxs]) for s, idxs in groups.items()},
             create_if_missing=False,
             default=None,
+            ops_per_shard={s: len(idxs) for s, idxs in groups.items()},
         )
         out: List[Optional[int]] = [None] * len(keys)
         for s, idxs in groups.items():
@@ -244,13 +357,17 @@ class ShardedStructure:
     # ------------------------------------------------------------- lifecycle
     def drain(self) -> None:
         """Commit point: flush every touched shard's op-log and memory-log
-        channels (only shards this front-end touched can hold staged state)."""
-        for shard in sorted(self._shards):
-            self._on_shard(
-                shard,
-                lambda obj: obj.fe.drain(obj.h),
-                create_if_missing=False,
-            )
+        channels (only shards this front-end touched can hold staged
+        state).  Fanned out through the cluster wave scheduler — shards
+        grouped by blade, every blade's combined flush overlapped —
+        instead of one serial round per shard."""
+        if not self._shards:
+            return
+        self._on_shards(
+            {s: (lambda obj: obj.fe.drain(obj.h)) for s in sorted(self._shards)},
+            create_if_missing=False,
+            ops_per_shard={s: 0 for s in self._shards},  # drains aren't load
+        )
 
     def shard_objects(self) -> Dict[int, object]:
         return dict(self._shards)
@@ -259,8 +376,9 @@ class ShardedStructure:
 class ShardedHashTable(ShardedStructure):
     """Hash table hash-partitioned over the cluster's blades."""
 
-    def __init__(self, cfe: ClusterFrontEnd, name: str, n_buckets: int = 1 << 12):
-        super().__init__(cfe, name)
+    def __init__(self, cfe: ClusterFrontEnd, name: str, n_buckets: int = 1 << 12,
+                 read_policy: Optional[ReadPolicy] = None):
+        super().__init__(cfe, name, read_policy=read_policy)
         # n_buckets is the logical total; each shard gets its slice
         self.buckets_per_shard = max(64, n_buckets // cfe.directory.n_shards)
 
@@ -275,15 +393,32 @@ class ShardedHashTable(ShardedStructure):
 
     # -------------------------------------------------------------------- ops
     def put(self, key: int, value: int) -> None:
-        self._on_key(key, lambda t: t.put(key, value))
+        shard = self.cfe.directory.shard_of(key)
+
+        def run(t):
+            t.put(key, value)
+            self._note_write(key, shard, t)
+
+        self._on_shard(shard, run)
 
     def get(self, key: int):
-        return self._on_key(key, lambda t: t.get(key), create_if_missing=False)
+        return self._on_key(
+            key,
+            lambda t: self._serve_reads(
+                t, [key], lambda obj, ks: obj.get_many(ks)
+            )[0],
+            create_if_missing=False,
+        )
 
     def delete(self, key: int) -> bool:
-        return self._on_key(
-            key, lambda t: t.delete(key), create_if_missing=False, default=False
-        )
+        shard = self.cfe.directory.shard_of(key)
+
+        def run(t):
+            ok = t.delete(key)
+            self._note_write(key, shard, t)  # deletions pin too (no resurrection)
+            return ok
+
+        return self._on_shard(shard, run, create_if_missing=False, default=False)
 
     def items(self) -> List[Tuple[int, int]]:
         out: List[Tuple[int, int]] = []
@@ -310,10 +445,22 @@ class ShardedBPTree(ShardedStructure):
 
     # -------------------------------------------------------------------- ops
     def insert(self, key: int, value: int) -> None:
-        self._on_key(key, lambda t: t.insert(key, value))
+        shard = self.cfe.directory.shard_of(key)
+
+        def run(t):
+            t.insert(key, value)
+            self._note_write(key, shard, t)
+
+        self._on_shard(shard, run)
 
     def find(self, key: int):
-        return self._on_key(key, lambda t: t.find(key), create_if_missing=False)
+        return self._on_key(
+            key,
+            lambda t: self._serve_reads(
+                t, [key], lambda obj, ks: obj.lookup_many(ks)
+            )[0],
+            create_if_missing=False,
+        )
 
     def range_scan(self, lo: int, hi: int) -> List[Tuple[int, int]]:
         """All (key, value) with lo <= key <= hi, globally sorted: per-shard

@@ -20,8 +20,9 @@ rebuilds all volatile state (free lists, log-head caches) from bytes, and
 
 from __future__ import annotations
 
+import collections
 import struct
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 from .oplog import MemLog, decode_oplogs, decode_txs, encode_oplog, encode_tx
 from .sim import Clock, CostModel, Link, Stats
@@ -46,15 +47,56 @@ class Mirror:
     The primary replicates every arena mutation (memory/operation logs,
     naming updates, atomics) before commit; on permanent primary failure the
     mirror's arena *is* a byte-exact replacement (paper §4.3).
+
+    Since PR 5 the mirror is also a *readable endpoint*: it is a separate
+    physical blade with its own NIC (``link``), so replica-routed reads
+    transfer against the mirror's capacity instead of contending with the
+    primary's write traffic.  By default replication stays byte-synchronous
+    (``lag_writes == 0``) and the mirror arena is identical to the primary
+    at every instant — the invariant the failover tests pin down.  Setting
+    ``lag_writes = N`` models an asynchronous replication channel that runs
+    N physical writes behind: replicated bytes queue in arrival order and
+    apply as newer writes push them through, so the mirror arena is always
+    a *consistent prefix* of the primary's write stream.  The per-structure
+    applied watermark (the mirror's copy of the ``{name}.seq`` slot) then
+    genuinely lags the primary's committed tail, which is what the bounded-
+    staleness read contract measures against.
     """
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, cost: Optional[CostModel] = None):
         self.arena = bytearray(capacity)
         self.bytes_replicated = 0
+        self.link = Link(cost or CostModel())
+        self.lag_writes = 0  # replication-channel depth (0 = synchronous)
+        self._pending: Deque[Tuple[int, bytes]] = collections.deque()
 
     def apply(self, addr: int, data: bytes) -> None:
+        if self.lag_writes <= 0 and not self._pending:
+            self._apply_now(addr, data)
+            return
+        self._pending.append((addr, bytes(data)))
+        while len(self._pending) > self.lag_writes:
+            a, d = self._pending.popleft()
+            self._apply_now(a, d)
+
+    def _apply_now(self, addr: int, data: bytes) -> None:
         self.arena[addr : addr + len(data)] = data
         self.bytes_replicated += len(data)
+
+    def sync(self) -> None:
+        """Drain the replication channel (promotion barrier: everything the
+        primary sent before dying has arrived by the time the mirror is
+        promoted — in-flight bytes were sent, only unsent ones are lost,
+        and a dead primary sends nothing)."""
+        while self._pending:
+            a, d = self._pending.popleft()
+            self._apply_now(a, d)
+
+    def read(self, addr: int, size: int) -> bytes:
+        return bytes(self.arena[addr : addr + size])
+
+    def word(self, addr: int) -> int:
+        return struct.unpack_from("<Q", self.arena, addr)[0]
 
 
 class NVMBackend:
@@ -79,7 +121,7 @@ class NVMBackend:
         self.link = Link(self.cost)
         self.clock = Clock()
         self.stats = Stats()
-        self.mirrors: List[Mirror] = [Mirror(capacity) for _ in range(num_mirrors)]
+        self.mirrors: List[Mirror] = [Mirror(capacity, self.cost) for _ in range(num_mirrors)]
         self.alive = True
         self.permanent_failure = False
         # fail the next physical write after `fail_after` bytes (test hook)
@@ -230,6 +272,30 @@ class NVMBackend:
             if cur == b"\x00" * 32:
                 return False
         return False
+
+    # ------------------------------------------------------- replica endpoints
+    # Mirror arenas as readable endpoints (PR 5): a mirror is a separate
+    # physical blade, so replica-routed reads neither require the primary to
+    # be alive nor contend with its NIC.  The watermark helpers express the
+    # bounded-staleness contract: the data a mirror serves reflects exactly
+    # the ops at or below its copy of the ``{name}.seq`` slot (replication
+    # preserves write order, and the primary writes that slot only after the
+    # entry bytes it covers).
+    def read_replica(self, addr: int, size: int, mirror_idx: int = 0) -> bytes:
+        return self.mirrors[mirror_idx].read(addr, size)
+
+    def replica_applied_seq(self, name: str, mirror_idx: int = 0) -> int:
+        """The mirror's applied op-sequence watermark for structure `name`:
+        its (possibly lagging) copy of the durable ``{name}.seq`` slot."""
+        if not self.has_name(f"{name}.seq"):
+            return 0
+        return self.mirrors[mirror_idx].word(self.name_slot_addr(f"{name}.seq"))
+
+    def replica_lag_ops(self, name: str, committed_seq: int, mirror_idx: int = 0) -> int:
+        """Replica lag in acked ops: the caller's committed tail (its local
+        op-sequence counter — the front-end owns the op stream, so this is
+        free local knowledge) minus the mirror's applied watermark."""
+        return max(0, committed_seq - self.replica_applied_seq(name, mirror_idx))
 
     # ------------------------------------------------------------ named blobs
     # Variable-length persistent values (e.g. the cluster shard directory).
@@ -454,6 +520,10 @@ class NVMBackend:
 
     def promote_mirror(self, idx: int = 0) -> "NVMBackend":
         """Permanent primary failure: build a fresh blade from a mirror."""
+        # drain the replication channel first: bytes the primary sent before
+        # dying are considered delivered (an async channel loses only what
+        # was never sent — and _phys_write stops sending at death)
+        self.mirrors[idx].sync()
         fresh = NVMBackend(
             self.capacity,
             self.block_size,
@@ -463,6 +533,13 @@ class NVMBackend:
             name_slots=self.num_name_slots,
         )
         fresh.arena = bytearray(self.mirrors[idx].arena)
+        # the promoted primary's OWN mirror set must be re-seeded with the
+        # full arena before it serves: replication only ships deltas, so a
+        # fresh empty mirror that receives the first post-promotion seq-slot
+        # write would advertise lag 0 while holding none of the data —
+        # replica reads against it would return garbage
+        for m in fresh.mirrors:
+            m.arena[:] = fresh.arena
         return fresh.reboot()
 
 

@@ -27,6 +27,14 @@ item); ``batch(h)`` / ``execute_batch(h, ops)`` suspend the flush cadence so
 a whole group of operations stages its op logs and memory logs together and
 lands with one combined flush at the end of the window.
 
+Read target routing: every remote read resolves an (addr, size) request to
+a *target blade* — the handle's primary, or one of its mirror endpoints
+when a ``ReadPolicy`` is in scope (``replica_reads``).  Mirrors are
+separate physical blades with their own NICs, eligible only within the
+policy's bounded-staleness contract (replica lag measured against the
+mirror's applied ``{name}.seq`` watermark); writes always target the
+primary.
+
 The *write* side mirrors it:
 
   * ``write_wave()`` opens a doorbell write wave: every posted-write round
@@ -98,6 +106,80 @@ def combine_runs(reqs: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
         else:
             runs.append((addr, size))
     return runs
+
+
+@dataclasses.dataclass
+class ReadPolicy:
+    """How a front-end resolves the *target blade* for remote reads.
+
+    ``mode``:
+
+      * ``"primary"`` — always the handle's primary blade (the pre-PR-5
+        behaviour, and the implicit policy when none is set);
+      * ``"mirror"``  — the primary's mirror ``mirror_idx`` whenever its
+        replica lag is within ``max_staleness_ops``, else fall back to the
+        primary (counted in ``Stats.replica_fallbacks``);
+      * ``"auto"``    — the least-utilized link among the primary and every
+        staleness-eligible mirror: read waves spread over all the physical
+        blades that hold the bytes, which is where the replica-read
+        bandwidth win comes from.
+
+    ``max_staleness_ops`` is the advertised bound of the contract: a replica
+    read is only routed to a mirror whose applied watermark is at most that
+    many acked ops behind the reader's committed tail.  Replica routing is
+    for READ-ONLY operations: traversals that feed a write must see the
+    primary (the sharded layer scopes the policy around its get paths via
+    ``FrontEnd.replica_reads``).  Read-your-writes is preserved one level
+    up: ``ShardedStructure._note_write`` pins every written key at its
+    write's op-seq, and its reads stay on the primary until the mirrors'
+    applied watermark passes that seq."""
+
+    mode: str = "auto"
+    max_staleness_ops: int = 0
+    mirror_idx: int = 0
+
+
+class ReadTarget:
+    """A resolved read endpoint: the primary blade or one of its mirrors.
+
+    ``read``/``read_many``/``prefetch_many`` resolve an (addr, size) request
+    to a target once per call/wave and then charge the transfer against the
+    *target's* link — a mirror is a separate physical blade with its own
+    NIC, so replica reads neither queue behind the primary's write traffic
+    nor require the primary to be alive."""
+
+    __slots__ = ("backend", "mirror_idx")
+
+    def __init__(self, backend: NVMBackend, mirror_idx: Optional[int] = None):
+        self.backend = backend
+        self.mirror_idx = mirror_idx
+
+    @property
+    def is_replica(self) -> bool:
+        return self.mirror_idx is not None
+
+    @property
+    def link(self):
+        if self.mirror_idx is None:
+            return self.backend.link
+        return self.backend.mirrors[self.mirror_idx].link
+
+    @property
+    def cache_safe(self) -> bool:
+        """Whether fetched bytes may enter the front-end page cache: the
+        cache outlives the ``replica_reads`` policy scope, so bytes from a
+        *lagging* mirror must not be inserted (a later primary-routed read
+        would hit them and silently extend the staleness contract past its
+        scope).  A synchronous mirror serves byte-identical data — safe."""
+        if self.mirror_idx is None:
+            return True
+        m = self.backend.mirrors[self.mirror_idx]
+        return m.lag_writes <= 0 and not m._pending
+
+    def fetch(self, addr: int, size: int) -> bytes:
+        if self.mirror_idx is None:
+            return self.backend.read(addr, size)
+        return self.backend.read_replica(addr, size, self.mirror_idx)
 
 
 @dataclasses.dataclass
@@ -212,6 +294,9 @@ class FrontEnd:
         self.busy_ns = 0.0  # front-end CPU busy time (utilization bench)
         self.handles: List[StructHandle] = []  # every handle this FE registered
         self.waves = WaveSizer(self)
+        # replica read routing: None = primary-only.  Scoped via the
+        # `replica_reads` context manager around read-only call sequences.
+        self.read_policy: Optional[ReadPolicy] = None
         # open doorbell write wave; posted-write completions are deferred to
         # the wave close fence.  `_wave_linger` marks a wave the adaptive
         # controller keeps open across consecutive vector-op calls (the
@@ -223,20 +308,71 @@ class FrontEnd:
         self._wave_ops = 0
         self._wave_end = 0.0
 
+    # ==================================================== read target routing
+    @contextlib.contextmanager
+    def replica_reads(self, policy: Optional[ReadPolicy]):
+        """Scope a ``ReadPolicy`` over a read-only call sequence: remote
+        reads inside resolve their target blade through the policy (mirror
+        endpoints become eligible); on exit the previous policy is restored.
+        Passing None is a no-op scope (primary-only)."""
+        prev = self.read_policy
+        self.read_policy = policy
+        try:
+            yield
+        finally:
+            self.read_policy = prev
+
+    def _read_target(self, h: StructHandle) -> ReadTarget:
+        """Resolve where the next remote read (wave) for `h` is served.
+
+        Mirrors are eligible only when their replica lag — this front-end's
+        committed tail minus the mirror's applied ``{name}.seq`` watermark,
+        both free local/piggybacked knowledge — is within the policy's
+        staleness bound; an over-lag mirror falls back to the primary
+        (``Stats.replica_fallbacks``).  ``"auto"`` picks the least-utilized
+        link among the eligible endpoints, spreading read waves over every
+        physical blade that holds the bytes."""
+        pol = self.read_policy
+        be = self.backend
+        if pol is None or pol.mode == "primary" or not be.mirrors:
+            return ReadTarget(be)
+        if pol.mode == "mirror":
+            idx = pol.mirror_idx % len(be.mirrors)
+            if be.replica_lag_ops(h.name, h.seq, idx) > pol.max_staleness_ops:
+                self.stats.replica_fallbacks += 1
+                return ReadTarget(be)
+            return ReadTarget(be, idx)
+        # auto: primary + every staleness-eligible mirror, least-utilized
+        candidates: List[Optional[int]] = [None]
+        eligible = False
+        for idx in range(len(be.mirrors)):
+            if be.replica_lag_ops(h.name, h.seq, idx) <= pol.max_staleness_ops:
+                candidates.append(idx)
+                eligible = True
+        if not eligible:
+            self.stats.replica_fallbacks += 1
+        now = self.clock.now
+        best = min(
+            candidates,
+            key=lambda i: (ReadTarget(be, i).link.utilization(now), -1 if i is None else i),
+        )
+        return ReadTarget(be, best)
+
     # ======================================================== network charges
-    def _round(self, nbytes: int, *, nvm_write: bool = False) -> None:
+    def _round(self, nbytes: int, *, nvm_write: bool = False, link=None) -> None:
         """A synchronous one-sided round: post, transfer, completion.
 
         Write-class rounds (``nvm_write=True``: allocation/free RPCs, sync
         op-log group commits) inside an open write wave post into the wave
         instead — their completions are what the wave-close fence waits for.
         Read rounds always complete synchronously (their data is needed
-        now), wave or no wave."""
+        now), wave or no wave.  ``link`` overrides the transfer resource
+        (replica reads charge the mirror blade's NIC)."""
         if nvm_write and self._wave_active():
             self._wave_post(nbytes)
             return
         start = self.clock.now + self.cost.issue_ns
-        end = self.backend.link.transfer(start, nbytes)
+        end = (link or self.backend.link).transfer(start, nbytes)
         extra = self.cost.nvm_write_ns if nvm_write else self.cost.nvm_read_ns
         self.clock.advance_to(end + self.cost.rtt_ns + extra)
 
@@ -388,7 +524,8 @@ class FrontEnd:
 
     # ================================================================= reads
     def read(self, h: StructHandle, addr: int, size: int, *, cacheable: bool = True) -> bytes:
-        """Gather step: write-buffer overlay -> cache -> remote NVM."""
+        """Gather step: write-buffer overlay -> cache -> remote target blade
+        (the handle's primary, or a mirror endpoint under a ReadPolicy)."""
         self._charge_node()
         staged = h.wbuf.get(addr)
         if staged is not None and len(staged) >= size:
@@ -403,15 +540,19 @@ class FrontEnd:
                 self.clock.advance(self.cost.dram_ns)
                 return bytes(page[:size])
             self.stats.cache_misses += 1
-        data = self.backend.read(addr, size)
+        tgt = self._read_target(h)
+        data = tgt.fetch(addr, size)
         self.stats.rdma_reads += 1
         self.stats.bytes_read += size
-        self._round(size)
-        if self.cfg.use_cache and cacheable:
+        if tgt.is_replica:
+            self.stats.replica_reads += 1
+        self._round(size, link=tgt.link)
+        if self.cfg.use_cache and cacheable and tgt.cache_safe:
             self.cache.put(addr, data)
         return data
 
-    def _doorbell_wave(self, remote: List[Tuple[int, int, int]], *, cacheable: bool) -> Dict[int, bytes]:
+    def _doorbell_wave(self, remote: List[Tuple[int, int, int]], *, cacheable: bool,
+                       target: Optional[ReadTarget] = None) -> Dict[int, bytes]:
         """Charge one doorbell-batched read wave and fetch every (i, addr,
         size) request: the first WQE of each doorbell pays the full issue
         cost (ringing it), each further WQE only the cheap post, and the
@@ -420,21 +561,26 @@ class FrontEnd:
         (fresh issue) but still completes with the shared fence.  Requests
         for adjacent addresses combine into one WQE (a single range read —
         bulk-built nodes are carved from contiguous slabs, so sibling scans
-        collapse to a few messages)."""
+        collapse to a few messages).  The whole wave goes to ONE resolved
+        ``target`` endpoint (primary or mirror) and charges that blade's
+        link."""
+        tgt = target or ReadTarget(self.backend)
         runs = combine_runs([(a, s) for _, a, s in remote])
         width = self.waves.width
         start = self.clock.now
         for i, (_, nbytes) in enumerate(runs):
             start += self.cost.issue_ns if i % width == 0 else self.cost.doorbell_wqe_ns
-            start = self.backend.link.transfer(start, nbytes)
+            start = tgt.link.transfer(start, nbytes)
         self.clock.advance_to(start + self.cost.rtt_ns + self.cost.nvm_read_ns)
         out: Dict[int, bytes] = {}
         for i, addr, size in remote:
-            data = self.backend.read(addr, size)
+            data = tgt.fetch(addr, size)
             self.stats.rdma_reads += 1
             self.stats.bytes_read += size
+            if tgt.is_replica:
+                self.stats.replica_reads += 1
             out[i] = data
-            if self.cfg.use_cache and cacheable:
+            if self.cfg.use_cache and cacheable and tgt.cache_safe:
                 self.cache.put(addr, data)
         return out
 
@@ -462,7 +608,8 @@ class FrontEnd:
                 self.stats.cache_misses += 1
             remote.append((i, addr, size))
         if remote:
-            fetched = self._doorbell_wave(remote, cacheable=cacheable)
+            fetched = self._doorbell_wave(remote, cacheable=cacheable,
+                                          target=self._read_target(h))
             for i, data in fetched.items():
                 out[i] = data
         self.waves.observe(len(reqs) - len(remote), len(remote))
@@ -491,7 +638,8 @@ class FrontEnd:
                     continue
             remote.append((i, addr, size))
         if remote:
-            fetched = self._doorbell_wave(remote, cacheable=cacheable)
+            fetched = self._doorbell_wave(remote, cacheable=cacheable,
+                                          target=self._read_target(h))
             for i, data in fetched.items():
                 out[i] = data
         self.waves.observe(len(reqs) - len(remote), len(remote))
@@ -578,16 +726,24 @@ class FrontEnd:
             return
         if not self.cfg.use_oplog:
             # naive: each modified location is its own RDMA_Write; the writes
-            # of one op are posted back-to-back (doorbell) and the op waits
-            # for the last completion before returning (durability).
+            # of one op post back-to-back into ONE rung doorbell (first WQE
+            # pays the full issue, the rest the cheap WQE post — the same
+            # accounting as the RCB write waves, so naive-vs-RCB write
+            # comparisons measure the durability discipline, not a handicap
+            # on how naive posts its WQEs) and the op waits for the last
+            # completion before returning (durability).
             end = self.clock.now
-            for addr, data in h.wbuf.items():
+            width = self.waves.width
+            for i, (addr, data) in enumerate(h.wbuf.items()):
                 self.backend.write(addr, data)
                 self.stats.rdma_writes += 1
                 self.stats.bytes_written += len(data)
-                self.clock.advance(self.cost.issue_ns)
+                self.stats.wqe_posts += 1
+                self.clock.advance(self.cost.issue_ns if i % width == 0
+                                   else self.cost.doorbell_wqe_ns)
                 end = self.backend.link.transfer(self.clock.now, len(data))
             if h.wbuf:
+                self.stats.write_waves += 1
                 self.clock.advance_to(end + self.cost.rtt_ns + self.cost.nvm_write_ns)
             h.wbuf.clear()
             h.pending_ops = 0

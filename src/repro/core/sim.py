@@ -47,6 +47,15 @@ class CostModel:
     atomic_ns: float = 2200.0       # RDMA atomic verb (slightly > RTT)
     backend_apply_ns_per_byte: float = 0.35   # log replay cost on the blade
     nic_msg_ns: float = 150.0       # blade NIC per-message cost (IOPS cap)
+    # ------------------------------------------------ directory lease terms
+    # A front-end holding a valid directory lease validates locally (free);
+    # the costs move to the edges: acquiring/renewing a lease rides the
+    # directory fetch plus a lease-record write, and every reconfiguration
+    # (migration, failover, scale-out) pays one invalidation message per
+    # outstanding lease BEFORE swapping the mapping — the broadcast that
+    # makes it safe for lease holders to skip per-op validation.
+    lease_grant_ns: float = 500.0        # lease-record write on top of a fetch
+    lease_invalidate_ns: float = 2500.0  # one revocation round per lease holder
 
     # ---------------------------------------------- wave-width derivations
     # Floor: below this many WQEs per doorbell the issue amortization cannot
@@ -89,6 +98,9 @@ class Stats:
     writes_combined: int = 0    # adjacent-address writes merged into one WQE
     ops_annulled: int = 0
     reader_retries: int = 0
+    replica_reads: int = 0      # remote reads served by a mirror endpoint
+    replica_fallbacks: int = 0  # replica-eligible reads pinned back to the
+                                # primary (staleness bound exceeded)
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
