@@ -103,6 +103,56 @@ def build_structure(fe: FrontEnd, name: str, structure: str, preload: int,
     return obj, keys
 
 
+# ------------------------------------------------------------- observability
+def add_obs_args(ap) -> None:
+    """--trace/--metrics flags shared by every fig_* entry point."""
+    ap.add_argument("--trace", metavar="OUT_JSON", default=None,
+                    help="export a Chrome/Perfetto trace of the run")
+    ap.add_argument("--metrics", metavar="OUT_PROM", default=None,
+                    help="export metrics (Prometheus text + JSON sibling)")
+
+
+def obs_start(args) -> None:
+    """Open a global ObsSession when --trace/--metrics was requested."""
+    if getattr(args, "trace", None) or getattr(args, "metrics", None):
+        from repro import obs
+        obs.start(trace=bool(args.trace), metrics=bool(args.metrics))
+
+
+def obs_finish(args) -> None:
+    """Export whatever the session collected and close it."""
+    from repro import obs
+    sess = obs.session()
+    if sess is None:
+        return
+    if getattr(args, "trace", None):
+        sess.export_trace(args.trace)
+        print(f"trace -> {args.trace} ({sess.tracer.n_events} events)")
+    if getattr(args, "metrics", None):
+        jpath = sess.export_metrics(args.metrics)
+        print(f"metrics -> {args.metrics} (+ {jpath})")
+    obs.stop()
+
+
+def obs_rebase() -> None:
+    """Benchmarks rewind their virtual clocks between phases; shift the
+    tracer's time base forward so pre/post-rewind spans can't overlap."""
+    from repro import obs
+    sess = obs.session()
+    if sess is not None:
+        sess.rebase()
+
+
+def percentile_fields(hist, prefix: str) -> Dict[str, float]:
+    """p50/p99/p999 (virtual µs) columns for a benchmark row."""
+    if hist is None or not hist.count:
+        return {}
+    p50, p99, p999 = hist.percentiles((50, 99, 99.9))
+    return {f"{prefix}_p50_us": round(p50 / 1e3, 3),
+            f"{prefix}_p99_us": round(p99 / 1e3, 3),
+            f"{prefix}_p999_us": round(p999 / 1e3, 3)}
+
+
 def run_write_workload(fe: FrontEnd, obj, structure: str, n_ops: int,
                        write_frac: float = 1.0, seed: int = 1) -> float:
     """100%-write (insert/push) workload by default; returns virtual ns."""

@@ -59,4 +59,16 @@ def main(counts=(1, 2, 4, 7), preload: int = PRELOAD, ops: int = OPS):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    from .common import add_obs_args, obs_finish, obs_start
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes")
+    add_obs_args(ap)
+    args = ap.parse_args()
+    obs_start(args)
+    if args.smoke:
+        main(counts=(1, 2), preload=1500, ops=300)
+    else:
+        main()
+    obs_finish(args)

@@ -31,9 +31,12 @@ import random
 from typing import Dict, List
 
 from repro.cluster import ClusterFrontEnd, NVMCluster, ReadPolicy, ShardedHashTable
+from repro.cluster.rebalance import rebalance
 from repro.core import FEConfig
+from repro.obs.hist import LatencyHistogram
 
-from .common import kops
+from .common import add_obs_args, kops, obs_finish, obs_rebase, obs_start, \
+    percentile_fields
 
 N_SHARDS = 16
 KEYSPACE = 1 << 22
@@ -57,12 +60,36 @@ def _make_fleet(cluster: NVMCluster, n_frontends: int, n_buckets: int):
 
 
 def _reset_clocks(cluster: NVMCluster, cfes: List[ClusterFrontEnd]) -> None:
+    """Preload/measurement barrier: rewind every clock, reset every link
+    (mirror links included — replica read waves land on them), and start the
+    latency histograms fresh so percentiles cover the measured phase only."""
     for be in cluster.blades.values():
         be.link.reset()
+        for m in be.mirrors:
+            m.link.reset()
     for cfe in cfes:
         cfe.clock.now = 0.0
+        cfe.op_hist.clear()
+        cfe._retired_op_hists.clear()
         for fe in cfe.fes.values():
             fe.clock.now = 0.0
+            fe.op_hist.clear()
+    obs_rebase()  # keep trace spans disjoint across the clock rewind
+
+
+def _merged_hist(cfes: List[ClusterFrontEnd], op: str,
+                 cluster_level: bool = True) -> LatencyHistogram:
+    """One cluster-wide histogram for `op` over the whole fleet: cluster-
+    level client hists (whole sharded batches) or per-blade FE hists."""
+    h = LatencyHistogram()
+    for cfe in cfes:
+        if cluster_level:
+            src = cfe.op_hist.get(op)
+            if src is not None:
+                h.merge(src)
+        else:
+            h.merge(cfe.merged_op_hists().get(op, LatencyHistogram()))
+    return h
 
 
 def run_scaling(n_blades: int, n_frontends: int = 16, preload: int = 400,
@@ -87,10 +114,12 @@ def run_scaling(n_blades: int, n_frontends: int = 16, preload: int = 400,
     for t in tables:
         t.drain()
     per_client = [kops(ops, cfe.clock.now) for cfe in cfes]
-    return {
+    out = {
         "aggregate_kops": sum(per_client),
         "per_client_kops": sum(per_client) / n_frontends,
     }
+    out.update(percentile_fields(_merged_hist(cfes, "put"), "put"))
+    return out
 
 
 def run_replica_reads(n_blades: int = 2, n_frontends: int = 32, preload: int = 400,
@@ -151,6 +180,9 @@ def run_replica_reads(n_blades: int = 2, n_frontends: int = 32, preload: int = 4
         for t in tables:
             t.drain()
         out[f"{mode}_kops"] = sum(kops(ops, cfe.clock.now) for cfe in cfes)
+        for op in ("get_many", "put_many"):
+            out.update(percentile_fields(_merged_hist(cfes, op),
+                                         f"{mode}_{op}"))
         if mode == "replica":
             agg = _agg()
             out["replica_read_frac"] = (
@@ -218,17 +250,43 @@ def run_availability(n_blades: int = 4, n_frontends: int = 16, preload: int = 30
     }
 
 
+def run_migration(preload: int = 200, n_shards: int = 8) -> Dict:
+    """Elastic scale-out panel: preload a 2-blade sharded table, add a third
+    blade, rebalance (live shard migrations with lease revocation + epoch
+    swap), and verify nothing was lost.  With --trace on, this is the panel
+    that puts migration spans in the exported timeline."""
+    cluster = NVMCluster(n_blades=2, capacity_per_blade=1 << 26,
+                         n_shards=n_shards)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(cache_bytes=4096), fe_id=0)
+    t = ShardedHashTable(cfe, "mig", n_buckets=max(256, preload // 2))
+    rng = random.Random(7)
+    pairs = [(k, k) for k in rng.sample(range(KEYSPACE), preload)]
+    t.put_many(pairs)
+    t.drain()
+    cluster.add_blade()
+    moves = rebalance(t)
+    got = dict(zip((k for k, _ in pairs), t.get_many([k for k, _ in pairs])))
+    lost = sum(1 for k, v in pairs if got.get(k) != v)
+    return {"moves": len(moves), "migrations": cluster.migrations,
+            "lost": lost, "epoch": cluster.directory.epoch}
+
+
 def main(blades=(1, 2, 4, 8), n_frontends: int = 16, preload: int = 400,
-         ops: int = 600, availability: bool = True, replica: bool = True):
-    out = {"scaling": {}, "availability": None, "replica_reads": None}
+         ops: int = 600, availability: bool = True, replica: bool = True,
+         migration: bool = True):
+    out = {"scaling": {}, "availability": None, "replica_reads": None,
+           "migration": None}
     prev = 0.0
     for n in blades:
         r = run_scaling(n, n_frontends, preload, ops)
         out["scaling"][n] = r
         arrow = "^" if r["aggregate_kops"] >= prev else "v"
         prev = r["aggregate_kops"]
+        lat = (f" put p50/p99/p999={r['put_p50_us']:.1f}/"
+               f"{r['put_p99_us']:.1f}/{r['put_p999_us']:.1f}us"
+               if "put_p50_us" in r else "")
         print(f"cluster blades={n}: aggregate={r['aggregate_kops']:9.1f} KOPS "
-              f"per-client={r['per_client_kops']:8.1f} KOPS {arrow}")
+              f"per-client={r['per_client_kops']:8.1f} KOPS {arrow}{lat}")
     if replica:
         rr = run_replica_reads(preload=preload, ops=ops)
         out["replica_reads"] = rr
@@ -236,6 +294,18 @@ def main(blades=(1, 2, 4, 8), n_frontends: int = 16, preload: int = 400,
               f"replica={rr['replica_kops']:9.1f} KOPS "
               f"speedup={rr['speedup']:.2f}x "
               f"(replica share {rr['replica_read_frac'] * 100:.0f}%)")
+        for mode in ("primary", "replica"):
+            if f"{mode}_get_many_p50_us" in rr:
+                print(f"  {mode} get_many p50/p99/p999 = "
+                      f"{rr[f'{mode}_get_many_p50_us']:.1f}/"
+                      f"{rr[f'{mode}_get_many_p99_us']:.1f}/"
+                      f"{rr[f'{mode}_get_many_p999_us']:.1f} us")
+    if migration:
+        m = run_migration(preload=max(100, preload // 2))
+        out["migration"] = m
+        print(f"cluster migration: moves={m['moves']} "
+              f"migrations={m['migrations']} lost={m['lost']} "
+              f"epoch={m['epoch']}")
     if availability:
         a = run_availability(n_blades=max(2, min(4, max(blades))),
                              n_frontends=n_frontends,
@@ -255,8 +325,11 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes: full run in seconds")
     ap.add_argument("--frontends", type=int, default=16)
+    add_obs_args(ap)
     args = ap.parse_args()
+    obs_start(args)
     if args.smoke:
         main(blades=(1, 2, 4), n_frontends=args.frontends, preload=150, ops=250)
     else:
         main(n_frontends=args.frontends)
+    obs_finish(args)

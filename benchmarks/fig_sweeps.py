@@ -69,4 +69,17 @@ def main(preload: int = 20000, n_ops: int = 2000, batches=None, fracs=None,
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    from .common import add_obs_args, obs_finish, obs_start
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes")
+    add_obs_args(ap)
+    args = ap.parse_args()
+    obs_start(args)
+    if args.smoke:
+        main(preload=1500, n_ops=300, batches=(1, 1024), fracs=(0.10, 1.0),
+             write_fracs=(1.0, 0.5))
+    else:
+        main()
+    obs_finish(args)

@@ -22,13 +22,15 @@ sub-batch, per-blade fan-out, merge.
 
 from __future__ import annotations
 
+import argparse
 import random
 import time
 from typing import Dict, List, Tuple
 
 from repro.core import FEConfig, FrontEnd, NVMBackend
 
-from .common import build_structure, cache_bytes_for, kops
+from .common import add_obs_args, build_structure, cache_bytes_for, kops, \
+    obs_finish, obs_start, percentile_fields
 
 # deliberately small cache fractions: vector ops earn their keep when the
 # working set does NOT fit in the front-end cache (a cache-resident table
@@ -97,6 +99,11 @@ def bench_structure(structure: str, preload: int, n_ops: int,
             _read_ops(obj, read_keys, batch)
         row[f"{mode}_get_kops"] = kops(len(read_keys), fe.clock.now - t0)
         row[f"{mode}_get_wall_ops"] = len(read_keys) / max(time.perf_counter() - w0, 1e-9)
+        if mode == "batched":
+            # sim-latency distribution of the measured batches (preload runs
+            # serial single-ops, so the histograms hold only these)
+            row.update(percentile_fields(fe.op_hist.get("put_many"), "put"))
+            row.update(percentile_fields(fe.op_hist.get("get_many"), "get"))
     row["put_speedup"] = row["batched_put_kops"] / row["serial_put_kops"]
     row["get_speedup"] = row["batched_get_kops"] / row["serial_get_kops"]
     return row
@@ -159,6 +166,7 @@ def bench_cluster(preload: int, n_ops: int, batch: int = 64,
         ht = ShardedHashTable(cfe, "vkv", n_buckets=max(1024, preload // 4))
         ht.put_many(load)  # preload batched in both modes (state identical)
         ht.drain()
+        cfe.op_hist.clear()  # percentiles cover the measured phase only
         t0, w0 = cfe.clock.now, time.perf_counter()
         if mode == "serial":
             for k, v in fresh:
@@ -169,6 +177,8 @@ def bench_cluster(preload: int, n_ops: int, batch: int = 64,
         ht.drain()
         row[f"{mode}_put_kops"] = kops(n_ops, cfe.clock.now - t0)
         row[f"{mode}_put_wall_ops"] = n_ops / max(time.perf_counter() - w0, 1e-9)
+        if mode == "batched":
+            row.update(percentile_fields(cfe.op_hist.get("put_many"), "put"))
     row["put_speedup"] = row["batched_put_kops"] / row["serial_put_kops"]
     return row
 
@@ -185,6 +195,11 @@ def main(preload: int = 15000, n_ops: int = 2560, batch: int = 64,
               f" {row['put_speedup']:>5.1f}x {row['serial_get_kops']:>9.1f}K"
               f" {row['batched_get_kops']:>10.1f}K {row['get_speedup']:>5.1f}x"
               f"  {row['batched_put_wall_ops']:>10.0f}")
+        if "put_p50_us" in row:
+            print(f"{'':<12} put p50/p99/p999 = {row['put_p50_us']:.1f}/"
+                  f"{row['put_p99_us']:.1f}/{row['put_p999_us']:.1f} us   "
+                  f"get p50/p99/p999 = {row['get_p50_us']:.1f}/"
+                  f"{row['get_p99_us']:.1f}/{row['get_p999_us']:.1f} us")
     row = bench_cross_structure(preload, n_ops, batch)
     out["cross_structure"] = row
     print(f"{'ht+bst':<12} {row['serial_put_kops']:>9.1f}K"
@@ -200,4 +215,14 @@ def main(preload: int = 15000, n_ops: int = 2560, batch: int = 64,
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: full run in seconds")
+    add_obs_args(ap)
+    args = ap.parse_args()
+    obs_start(args)
+    if args.smoke:
+        main(preload=1500, n_ops=512)
+    else:
+        main()
+    obs_finish(args)

@@ -49,7 +49,10 @@ def main(argv=None) -> None:
                     help="where the cluster replica-read perf record is "
                          "written (default BENCH_cluster_reads.json, same "
                          "--smoke guard)")
+    from .common import add_obs_args, obs_finish, obs_start
+    add_obs_args(ap)
     args = ap.parse_args(argv)
+    obs_start(args)
     if args.bench_json is None:
         args.bench_json = ("BENCH_vector_ops.smoke.json" if args.smoke
                            else "BENCH_vector_ops.json")
@@ -154,12 +157,21 @@ def main(argv=None) -> None:
              f"replica_vs_primary={rr['speedup']:.2f}x")
         # replica-read perf record: guarded by scripts/check_bench.py like
         # the vector-ops record (same schema, sibling file)
-        _write_record(args.cluster_json, [{
+        cluster_row = {
             "name": "cluster_replica_get_many",
             "simulated_us_per_op": 1e3 / rr["replica_kops"],
             "replica_read_frac": round(rr["replica_read_frac"], 3),
             "speedup_vs_serial": round(rr["speedup"], 2),
-        }], "cluster", cpreload, cops, wall_s)
+        }
+        # cluster-wide sim-latency percentiles (virtual µs) ride along in
+        # the baseline so regressions in tail latency are visible too
+        for key in ("replica_get_many_p50_us", "replica_get_many_p99_us",
+                    "replica_get_many_p999_us", "replica_put_many_p50_us",
+                    "replica_put_many_p99_us", "replica_put_many_p999_us"):
+            if key in rr:
+                cluster_row[key] = rr[key]
+        _write_record(args.cluster_json, [cluster_row],
+                      "cluster", cpreload, cops, wall_s)
 
     if want("vector"):
         import time
@@ -176,12 +188,16 @@ def main(argv=None) -> None:
             for op in ("put", "get"):
                 if f"batched_{op}_kops" not in r:
                     continue
-                rows.append({
+                vrow = {
                     "name": f"vector_{name}_{op}_many",
                     "simulated_us_per_op": 1e3 / r[f"batched_{op}_kops"],
                     "wall_clock_ops_per_sec": round(r[f"batched_{op}_wall_ops"], 1),
                     "speedup_vs_serial": round(r[f"{op}_speedup"], 2),
-                })
+                }
+                for p in ("p50", "p99", "p999"):
+                    if f"{op}_{p}_us" in r:
+                        vrow[f"sim_{p}_us"] = r[f"{op}_{p}_us"]
+                rows.append(vrow)
         _write_record(args.bench_json, rows, "vector", preload,
                       max(n_ops, 128), wall_s)
 
@@ -207,6 +223,7 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for line in csv:
         print(line)
+    obs_finish(args)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,12 @@ disappeared.  Both files must come from the same ``benchmarks.run``
 invocation sizes — the ``*_bench_meta`` entry records the sizes, and a
 mismatch is an error (a smoke-size run compared against a quick-size
 baseline would guard nothing).
+
+The meta entry also records wall-clock seconds, which guards the
+observability hooks' tracing-off overhead: with ``--max-wall-regress``
+(default 2%) the fresh run may not take more than that fraction longer than
+the baseline.  A 2s absolute grace absorbs scheduler noise on short runs —
+only a regression that is both >2% relative and >2s absolute fails.
 """
 
 from __future__ import annotations
@@ -37,6 +43,9 @@ def main(argv=None) -> int:
     ap.add_argument("fresh")
     ap.add_argument("baseline")
     ap.add_argument("--max-drop", type=float, default=0.10)
+    ap.add_argument("--max-wall-regress", type=float, default=0.02,
+                    help="max fractional wall-clock increase vs baseline "
+                         "(tracing-off overhead guard; 2s absolute grace)")
     args = ap.parse_args(argv)
 
     fresh, fmeta = _load(args.fresh)
@@ -62,8 +71,20 @@ def main(argv=None) -> int:
             status = f"FAIL (<{floor:.2f})"
             failed = True
         print(f"check_bench: {name}: baseline {ref:.2f}x fresh {cur:.2f}x {status}")
-    if fmeta.get("wall_clock_seconds") is not None:
-        print(f"check_bench: fresh run wall-clock {fmeta['wall_clock_seconds']}s")
+    fwall = fmeta.get("wall_clock_seconds")
+    bwall = bmeta.get("wall_clock_seconds")
+    if fwall is not None and bwall is not None:
+        ceiling = bwall * (1.0 + args.max_wall_regress)
+        over = fwall - bwall
+        if fwall > ceiling and over > 2.0:
+            print(f"check_bench: FAIL wall-clock {fwall}s vs baseline {bwall}s "
+                  f"(>{args.max_wall_regress*100:.0f}% and >2s over)",
+                  file=sys.stderr)
+            failed = True
+        else:
+            print(f"check_bench: wall-clock {fwall}s vs baseline {bwall}s ok")
+    elif fwall is not None:
+        print(f"check_bench: fresh run wall-clock {fwall}s")
     return 1 if failed else 0
 
 

@@ -27,6 +27,12 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== benchmark smoke: every figure script, tiny sizes =="
     python -m benchmarks.run --smoke --bench-json "$scratch/bench_smoke.json" \
         --cluster-json "$scratch/cluster_smoke.json"
+    echo "== observability smoke: traced cluster run + trace_report gate =="
+    python -m benchmarks.fig_cluster_scaling --smoke --frontends 4 \
+        --trace "$scratch/trace.json" --metrics "$scratch/metrics.prom"
+    python scripts/trace_report.py "$scratch/trace.json" --selftest \
+        --expect-spans read_wave,wave_fence,flush,lease,migration \
+        --min-blade-tracks 2
     echo "== bench-regression guard: vector ops at --quick sizes =="
     python -m benchmarks.run --quick --only vector --bench-json "$scratch/bench_fresh.json"
     python scripts/check_bench.py "$scratch/bench_fresh.json" BENCH_vector_ops.json

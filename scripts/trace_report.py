@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Summarize a trace exported with --trace (Chrome/Perfetto trace_event JSON).
+
+    python scripts/trace_report.py trace.json
+    python scripts/trace_report.py trace.json --top 15
+    python scripts/trace_report.py trace.json --selftest \
+        --expect-spans read_wave,wave_fence,flush,lease,migration \
+        --min-blade-tracks 2
+
+Exit status is non-zero when the trace fails schema/nesting validation or
+misses an --expect-spans / --min-blade-tracks requirement, so CI can gate
+on it directly.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.obs import report  # noqa: E402
+
+
+def _selftest() -> int:
+    """Validator sanity: a well-nested synthetic trace must pass, an
+    overlapping one must fail."""
+    meta = [{"ph": "M", "name": "thread_name", "pid": 1, "tid": 1,
+             "args": {"name": "fe0.b0"}}]
+    good = {"traceEvents": meta + [
+        {"ph": "X", "name": "op", "pid": 1, "tid": 1, "ts": 0.0, "dur": 10.0},
+        {"ph": "X", "name": "read_wave", "pid": 1, "tid": 1, "ts": 1.0, "dur": 4.0},
+        {"ph": "X", "name": "read_wave", "pid": 1, "tid": 1, "ts": 6.0, "dur": 3.0},
+        {"ph": "X", "name": "op", "pid": 1, "tid": 1, "ts": 11.0, "dur": 2.0},
+    ]}
+    bad = {"traceEvents": meta + [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0.0, "dur": 10.0},
+        {"ph": "X", "name": "b", "pid": 1, "tid": 1, "ts": 5.0, "dur": 10.0},
+    ]}
+    incomplete = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "ts": 0.0, "dur": 1.0},
+    ]}
+    if report.validate(good):
+        print("selftest FAILED: valid trace reported errors", file=sys.stderr)
+        return 1
+    if not report.validate(bad):
+        print("selftest FAILED: overlap not detected", file=sys.stderr)
+        return 1
+    if not report.validate(incomplete):
+        print("selftest FAILED: missing field not detected", file=sys.stderr)
+        return 1
+    # ops: (10-7) + 2 = 5us self; read_wave: 4 + 3 = 7us self -> ranks first
+    ranked = report.top_self_time(good)
+    if [(n, s) for n, s, _ in ranked] != [("read_wave", 7.0), ("op", 5.0)]:
+        print(f"selftest FAILED: self-time ranking wrong: {ranked}",
+              file=sys.stderr)
+        return 1
+    print("selftest OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Summarize a --trace export; optionally assert on it.")
+    ap.add_argument("trace", help="trace_event JSON file")
+    ap.add_argument("--top", type=int, default=10,
+                    help="span types to list by self-time")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the validator's own checks first")
+    ap.add_argument("--expect-spans", default=None,
+                    help="comma list; each token must match a span/instant "
+                         "name exactly or as a prefix (e.g. 'lease' matches "
+                         "lease_refresh)")
+    ap.add_argument("--min-blade-tracks", type=int, default=0,
+                    help="fail unless spans cover at least N distinct blades")
+    args = ap.parse_args(argv)
+
+    rc = 0
+    if args.selftest:
+        rc = _selftest()
+        if rc:
+            return rc
+
+    doc = report.load_trace(args.trace)
+    errors = report.validate(doc)
+    if errors:
+        print(f"INVALID trace ({len(errors)} errors):", file=sys.stderr)
+        for e in errors[:10]:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+
+    print(report.summarize(doc, top=args.top))
+
+    names = report.span_names(doc)
+    if args.expect_spans:
+        missing = []
+        for token in args.expect_spans.split(","):
+            token = token.strip()
+            if not any(n == token or n.startswith(token) for n in names):
+                missing.append(token)
+        if missing:
+            print(f"MISSING expected span types: {missing}", file=sys.stderr)
+            rc = 1
+    if args.min_blade_tracks:
+        blades = report.blade_tracks(doc)
+        if len(blades) < args.min_blade_tracks:
+            print(f"only {len(blades)} blade tracks (need "
+                  f"{args.min_blade_tracks}): {blades}", file=sys.stderr)
+            rc = 1
+    if rc == 0:
+        print("\ntrace OK")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,7 @@ from typing import TYPE_CHECKING, Optional
 
 from ..core.backend import NVMBackend
 from ..core.sim import Clock
+from .. import obs
 
 if TYPE_CHECKING:  # pragma: no cover
     from .router import NVMCluster
@@ -48,6 +49,11 @@ def promote_blade(cluster: "NVMCluster", blade_id: int, mirror_idx: int = 0,
     cluster.failovers += 1
     cluster.directory.bump_epoch()
     cluster.directory.persist(cluster.blades)
+    obs.count("failovers")
+    if cluster.trace is not None:
+        cluster.trace.instant(cluster._track, "promotion",
+                              clock.now if clock is not None else None,
+                              {"blade": blade_id, "mirror": mirror_idx})
     return fresh
 
 

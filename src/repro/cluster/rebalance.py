@@ -32,6 +32,7 @@ from typing import Callable, Dict, Optional
 
 from ..core.backend import CrashError
 from ..core.oplog import committed_tail
+from .. import obs
 from .sharded import ShardedStructure
 
 
@@ -51,6 +52,8 @@ def migrate_shard(
     directory = cluster.directory
     if dst_blade not in cluster.blades or not cluster.blades[dst_blade].alive:
         raise CrashError(f"destination blade {dst_blade} unavailable")
+    tr = cfe.trace
+    t0 = cfe.clock.now
     cfe.ensure_fresh()
     src_blade = directory.blade_of(shard)
     stats = {"shard": shard, "src": src_blade, "dst": dst_blade,
@@ -137,6 +140,14 @@ def migrate_shard(
             stats["reclaimed_blocks"] = len(src_be._free) - free_before
         except CrashError:
             pass  # source blade died mid-reclaim: nothing left to free
+
+    obs.count("migrations")
+    if tr is not None:
+        tr.span(cfe._track, "migration", t0, cfe.clock.now,
+                {"shard": shard, "src": src_blade, "dst": dst_blade,
+                 "copied": stats["copied"], "caught_up": stats["caught_up"]})
+        tr.instant(cluster._track, "migration", cfe.clock.now,
+                   {"shard": shard, "src": src_blade, "dst": dst_blade})
     return stats
 
 
@@ -155,9 +166,12 @@ def rebalance(sharded: ShardedStructure) -> Dict[int, int]:
     terminates).  With uniform weights (no recorded traffic) this
     degenerates to the old count-evening behaviour.  Returns
     {shard: dst_blade} for every move."""
-    cluster = sharded.cfe.cluster
+    cfe = sharded.cfe
+    cluster = cfe.cluster
     directory = cluster.directory
     moves: Dict[int, int] = {}
+    tr = cfe.trace
+    t0 = cfe.clock.now
     while True:
         weights = {
             b: w for b, w in directory.load_weights().items()
@@ -172,6 +186,9 @@ def rebalance(sharded: ShardedStructure) -> Dict[int, int]:
             if directory.shard_weight(s) < gap
         ]
         if not movable:
+            if tr is not None and moves:
+                tr.span(cfe._track, "rebalance", t0, cfe.clock.now,
+                        {"moves": len(moves)})
             return moves
         shard = max(movable)[2]  # heaviest improving shard (ties: lowest id)
         migrate_shard(sharded, shard, lo)

@@ -50,6 +50,8 @@ from typing import Callable, Dict, List, Optional
 from ..core.backend import CrashError, NVMBackend
 from ..core.frontend import FEConfig, FrontEnd
 from ..core.sim import Clock, CostModel
+from .. import obs
+from ..obs.hist import LatencyHistogram
 from .directory import LeaseTable, ShardDirectory
 from .failover import promote_blade
 
@@ -95,6 +97,15 @@ class NVMCluster:
         self.failovers = 0
         self.migrations = 0
         self._frontends: List["weakref.ref[ClusterFrontEnd]"] = []
+        # observability: cluster-level control events land on one trace track
+        self.trace = None
+        self._track = None
+        sess = obs.session()
+        if sess is not None:
+            sess.register_cluster(self)
+            if sess.tracer is not None:
+                self.trace = sess.tracer
+                self._track = self.trace.track("cluster", kind="cluster")
 
     # ------------------------------------------------------------- front-ends
     def register_frontend(self, cfe: "ClusterFrontEnd") -> None:
@@ -131,6 +142,12 @@ class NVMCluster:
         if n and clock is not None:
             clock.advance(n * self.cost.lease_invalidate_ns)
         self.leases.persist(self.blades)
+        if n:
+            obs.count("lease_revocations", n)
+            if self.trace is not None:
+                self.trace.instant(self._track, "lease_revoke",
+                                   clock.now if clock is not None else None,
+                                   {"holders": n})
         return n
 
     # ------------------------------------------------------------- membership
@@ -150,6 +167,9 @@ class NVMCluster:
         self.directory.add_blade(bid)
         self.directory.bump_epoch()
         self.directory.persist(self.blades)
+        obs.count("blades_added")
+        if self.trace is not None:
+            self.trace.instant(self._track, "add_blade", None, {"blade": bid})
         return bid
 
     # --------------------------------------------------------------- failures
@@ -171,6 +191,11 @@ class NVMCluster:
         self.revoke_leases(clock)
         self.directory.bump_epoch()
         self.directory.persist(self.blades)
+        obs.count("blade_reboots")
+        if self.trace is not None:
+            self.trace.instant(self._track, "reboot",
+                               clock.now if clock is not None else None,
+                               {"blade": blade_id})
         return be
 
     # ------------------------------------------------------------------ admin
@@ -232,6 +257,10 @@ class ClusterWaveScheduler:
                 out[bid] = per_blade[bid](fe)
             end = max(end, fe.clock.now)
         cfe.clock.advance_to(end)
+        tr = cfe.trace
+        if tr is not None:
+            tr.span(cfe._track, "cluster_batch", t0, end,
+                    {"blades": len(per_blade)})
         return out
 
 
@@ -252,6 +281,20 @@ class ClusterFrontEnd:
         self.directory_fetches = 0
         self.lease_validations = 0  # ops validated locally under the lease
         self.scheduler = ClusterWaveScheduler(self)
+        # observability: cluster-level op latencies (whole sharded batches /
+        # singles, as seen by this client) + a trace track of its own.
+        # Rebinds (epoch bumps, failovers) replace the per-blade FrontEnd
+        # objects; their counters/histograms are folded into the _retired_*
+        # accumulators first so telemetry survives the rebind.
+        self.op_hist: Dict[str, LatencyHistogram] = {}
+        self._retired_op_hists: Dict[str, LatencyHistogram] = {}
+        self._retired_stats: Dict[str, int] = {}
+        self.trace = cluster.trace
+        self._track = (self.trace.track(f"cfe{fe_id}")
+                       if self.trace is not None else None)
+        sess = obs.session()
+        if sess is not None:
+            sess.register_cluster_frontend(self)
         cluster.register_frontend(self)
         self.ensure_fresh()
 
@@ -270,6 +313,8 @@ class ClusterFrontEnd:
         if self.directory is not None and self.cluster.leases.valid(self.fe_id, self.epoch, now):
             self.lease_validations += 1
             return False
+        tr = self.trace
+        t0 = now
         d = self.cluster.directory
         changed = d.epoch != self.epoch or self.directory is None
         if changed:
@@ -282,6 +327,7 @@ class ClusterFrontEnd:
                     except CrashError:
                         pass  # blade died mid-drain: those staged ops are lost
                     self.clock.advance_to(fe.clock.now)
+                self._retire_fe(fe)
                 del self.fes[bid]
         self.clock.advance(
             self.cost.issue_ns + self.cost.rtt_ns + self.cost.xfer_ns(len(d.encode()))
@@ -295,6 +341,11 @@ class ClusterFrontEnd:
             # durable table changed (new holder / new epoch) — a pure
             # expiry renewal skips the per-blade blob rewrite
             self.cluster.leases.persist(self.cluster.blades)
+        if tr is not None:
+            tr.span(self._track, "lease_refresh", t0, self.clock.now,
+                    {"epoch": self.epoch, "rebound": changed})
+            tr.instant(self._track, "lease_grant", self.clock.now,
+                       {"fe": self.fe_id, "epoch": self.epoch})
         return changed
 
     # --------------------------------------------------------------- binding
@@ -302,6 +353,8 @@ class ClusterFrontEnd:
         fe = self.fes.get(blade_id)
         be = self.cluster.blades[blade_id]
         if fe is None or fe.backend is not be:
+            if fe is not None:
+                self._retire_fe(fe)
             fe = FrontEnd(be, self.cfg, fe_id=self.fe_id)
             fe.clock.advance_to(self.clock.now)
             self.fes[blade_id] = fe
@@ -340,7 +393,9 @@ class ClusterFrontEnd:
         promotion) and force a full rebind via the epoch bump (and lease
         revocation) it caused."""
         self.cluster.handle_blade_failure(blade_id, clock=self.clock)
-        self.fes.pop(blade_id, None)
+        fe = self.fes.pop(blade_id, None)
+        if fe is not None:
+            self._retire_fe(fe)
         self.ensure_fresh()
 
     # ----------------------------------------------------------------- drains
@@ -355,6 +410,65 @@ class ClusterFrontEnd:
             {bid: (lambda fe: fe.drain_all()) for bid in self.fes},
             bind=self.fes.__getitem__,
         )
+
+    # -------------------------------------------------------------- telemetry
+    def _retire_fe(self, fe: FrontEnd) -> None:
+        """Fold a discarded per-blade front-end's counters and latency
+        histograms into this client's accumulators before the object goes
+        away (rebind / failover), so stats()/telemetry() cover the whole
+        session, not just the current binding."""
+        for k, v in fe.stats.snapshot().items():
+            self._retired_stats[k] = self._retired_stats.get(k, 0) + v
+        for op, h in fe.op_hist.items():
+            self._retired_op_hists.setdefault(op, LatencyHistogram()).merge(h)
+
+    def record_op_latency(self, op: str, dur_ns: float, n: int = 1) -> None:
+        """Cluster-level op-latency histogram (whole sharded batches and
+        singles, measured on this client's clock)."""
+        h = self.op_hist.get(op)
+        if h is None:
+            h = self.op_hist[op] = LatencyHistogram()
+        h.record(dur_ns, n)
+
+    def stats(self) -> Dict[str, object]:
+        """Cluster-wide Stats aggregation: summed counters over the bound
+        per-blade front-ends plus the per-blade breakdown."""
+        per_blade = {bid: fe.stats.snapshot()
+                     for bid, fe in sorted(self.fes.items())}
+        total: Dict[str, int] = dict(self._retired_stats)
+        for snap in per_blade.values():
+            for k, v in snap.items():
+                total[k] = total.get(k, 0) + v
+        return {"total": total, "per_blade": per_blade}
+
+    def telemetry(self) -> Dict[str, object]:
+        """Full telemetry snapshot: merged Stats, per-blade breakdown, and
+        the op-latency histograms — per-blade histograms merged cluster-wide
+        by op type (``op_latency``) plus this client's own batch-level
+        histograms (``cluster_op_latency``)."""
+        st = self.stats()
+        merged = self.merged_op_hists()
+        return {
+            "stats": st["total"],
+            "per_blade": st["per_blade"],
+            "op_latency": {op: h.snapshot() for op, h in sorted(merged.items())},
+            "cluster_op_latency": {op: h.snapshot()
+                                   for op, h in sorted(self.op_hist.items())},
+            "lease_validations": self.lease_validations,
+            "directory_fetches": self.directory_fetches,
+            "epoch": self.epoch,
+        }
+
+    def merged_op_hists(self) -> Dict[str, LatencyHistogram]:
+        """Per-blade op-latency histograms merged by op type (live objects,
+        for callers that need percentiles beyond the snapshot)."""
+        merged: Dict[str, LatencyHistogram] = {
+            op: h.copy() for op, h in self._retired_op_hists.items()
+        }
+        for fe in self.fes.values():
+            for op, h in fe.op_hist.items():
+                merged.setdefault(op, LatencyHistogram()).merge(h)
+        return merged
 
     # ------------------------------------------------------------------ stats
     def aggregate_stats(self) -> Dict[str, int]:

@@ -25,6 +25,7 @@ ROADMAP follow-up.
 
 from __future__ import annotations
 
+import contextlib
 import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -70,6 +71,25 @@ class ShardedStructure:
         self.read_policy = read_policy
         self._shards: Dict[int, object] = {}  # shard -> bound structure
         self._pinned: Dict[int, Tuple[int, int]] = {}  # key -> (shard, seq)
+
+    # ---------------------------------------------------------- observability
+    @contextlib.contextmanager
+    def _cluster_op(self, op: str, n: int):
+        """Time a cluster-level op on the CFE clock: sim-time latency lands
+        in ``cfe.op_hist[op]`` (always on) and, when tracing, an ``op:{op}``
+        span on the CFE track."""
+        cfe = self.cfe
+        t0 = cfe.clock.now
+        try:
+            yield
+        finally:
+            t1 = cfe.clock.now
+            if n > 0:
+                cfe.record_op_latency(op, t1 - t0, n)
+            tr = cfe.trace
+            if tr is not None:
+                tr.span(cfe._track, f"op:{op}", t0, t1,
+                        {"n": n, "struct": self.name})
 
     # ------------------------------------------------------- shard resolution
     def _shard_name(self, shard: int) -> str:
@@ -318,8 +338,10 @@ class ShardedStructure:
                         self._pinned[k] = (shard, t.h.seq)
             return run
 
-        self._on_shards({s: mk(s, sub) for s, sub in groups.items()},
-                        ops_per_shard={s: len(sub) for s, sub in groups.items()})
+        with self._cluster_op("put_many", len(pairs)):
+            self._on_shards(
+                {s: mk(s, sub) for s, sub in groups.items()},
+                ops_per_shard={s: len(sub) for s, sub in groups.items()})
 
     def get_many(self, keys: List[int]) -> List[Optional[int]]:
         """Partition a read batch by shard, fan out, merge results back into
@@ -336,12 +358,13 @@ class ShardedStructure:
                 t, sub, lambda obj, ks: obj.get_many(ks)
             )
 
-        res = self._on_shards(
-            {s: mk([keys[i] for i in idxs]) for s, idxs in groups.items()},
-            create_if_missing=False,
-            default=None,
-            ops_per_shard={s: len(idxs) for s, idxs in groups.items()},
-        )
+        with self._cluster_op("get_many", len(keys)):
+            res = self._on_shards(
+                {s: mk([keys[i] for i in idxs]) for s, idxs in groups.items()},
+                create_if_missing=False,
+                default=None,
+                ops_per_shard={s: len(idxs) for s, idxs in groups.items()},
+            )
         out: List[Optional[int]] = [None] * len(keys)
         for s, idxs in groups.items():
             vals = res.get(s)
@@ -399,16 +422,18 @@ class ShardedHashTable(ShardedStructure):
             t.put(key, value)
             self._note_write(key, shard, t)
 
-        self._on_shard(shard, run)
+        with self._cluster_op("put", 1):
+            self._on_shard(shard, run)
 
     def get(self, key: int):
-        return self._on_key(
-            key,
-            lambda t: self._serve_reads(
-                t, [key], lambda obj, ks: obj.get_many(ks)
-            )[0],
-            create_if_missing=False,
-        )
+        with self._cluster_op("get", 1):
+            return self._on_key(
+                key,
+                lambda t: self._serve_reads(
+                    t, [key], lambda obj, ks: obj.get_many(ks)
+                )[0],
+                create_if_missing=False,
+            )
 
     def delete(self, key: int) -> bool:
         shard = self.cfe.directory.shard_of(key)
@@ -451,16 +476,18 @@ class ShardedBPTree(ShardedStructure):
             t.insert(key, value)
             self._note_write(key, shard, t)
 
-        self._on_shard(shard, run)
+        with self._cluster_op("put", 1):
+            self._on_shard(shard, run)
 
     def find(self, key: int):
-        return self._on_key(
-            key,
-            lambda t: self._serve_reads(
-                t, [key], lambda obj, ks: obj.lookup_many(ks)
-            )[0],
-            create_if_missing=False,
-        )
+        with self._cluster_op("get", 1):
+            return self._on_key(
+                key,
+                lambda t: self._serve_reads(
+                    t, [key], lambda obj, ks: obj.lookup_many(ks)
+                )[0],
+                create_if_missing=False,
+            )
 
     def range_scan(self, lo: int, hi: int) -> List[Tuple[int, int]]:
         """All (key, value) with lo <= key <= hi, globally sorted: per-shard

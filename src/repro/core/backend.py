@@ -26,6 +26,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 from .oplog import MemLog, decode_oplogs, decode_txs, encode_oplog, encode_tx
 from .sim import Clock, CostModel, Link, Stats
+from ..obs.profile import profile
 
 NAME_SLOT = 40  # 32B name + 8B value
 NUM_NAME_SLOTS = 512
@@ -431,12 +432,14 @@ class NVMBackend:
         """
         self._check_alive()
         buf = self.arena[area.addr + area.applied : area.addr + area.head]
-        txs, consumed = decode_txs(bytes(buf))
+        with profile("log_decode"):
+            txs, consumed = decode_txs(bytes(buf))
         nbytes = 0
-        for tx in txs:
-            for entry in tx:
-                self._phys_write(entry.addr, entry.data)
-                nbytes += len(entry.data)
+        with profile("apply_phase"):
+            for tx in txs:
+                for entry in tx:
+                    self._phys_write(entry.addr, entry.data)
+                    nbytes += len(entry.data)
         area.applied += consumed
         self.set_name(f"{area.name}.applied", area.applied)
         self.clock.advance(nbytes * self.cost.backend_apply_ns_per_byte)

@@ -116,6 +116,18 @@ class PageCache:
         total = self.hits + self.misses
         return self.misses / total if total else 0.0
 
+    def stats(self) -> dict:
+        """Counter snapshot for telemetry export (fills = cold admissions,
+        i.e. misses that later entered the cache via ``put``)."""
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "pages": len(self.pages),
+            "used_bytes": self.used_bytes,
+            "capacity_bytes": self.capacity,
+        }
+
     # -------------------------------------------------------------- eviction
     def _evict_one(self) -> None:
         if self.policy == "lru":

@@ -92,6 +92,9 @@ from .backend import CrashError, LogArea, NVMBackend
 from .cache import PageCache
 from .oplog import MemLog, OpLog, committed_tail, encode_oplog, encode_tx
 from .sim import Clock, CostModel, Stats
+from .. import obs
+from ..obs.hist import LatencyHistogram
+from ..obs.profile import profile
 
 
 def combine_runs(reqs: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
@@ -233,6 +236,7 @@ class StructHandle:
         self.post_flush = None  # e.g. multi-version root CAS after durability
         self._in_preflush = False
         self._in_batch = False  # inside FrontEnd.batch(): flush cadence off
+        self._op_t0 = None      # op span start, set only while tracing
 
     @property
     def opsn_name(self) -> str:
@@ -307,6 +311,32 @@ class FrontEnd:
         self._wave_posts = 0
         self._wave_ops = 0
         self._wave_end = 0.0
+        # per-op-type sim-latency histograms (always on; see repro.obs.hist)
+        self.op_hist: Dict[str, LatencyHistogram] = {}
+        # sim-time tracing: None unless an obs session with trace=True was
+        # active at construction — every hot-path hook is one attr check
+        self.trace = None
+        self._tk = None
+        sess = obs.session()
+        if sess is not None:
+            sess.register_frontend(self)
+            tr = sess.tracer
+            if tr is not None:
+                self.trace = tr
+                self._tk = tr.track(f"fe{fe_id}.b{backend.blade_id}")
+                tr.attach_link(backend.link, f"blade{backend.blade_id}.link")
+                for mi, m in enumerate(backend.mirrors):
+                    tr.attach_link(m.link, f"blade{backend.blade_id}.m{mi}.link")
+
+    # ========================================================= observability
+    def record_op_latency(self, op: str, dur_ns: float, n: int = 1) -> None:
+        """Fold ``n`` occurrences of a ``dur_ns`` sim-latency into this
+        front-end's per-op-type histogram (batch windows record the window
+        latency once per item)."""
+        h = self.op_hist.get(op)
+        if h is None:
+            h = self.op_hist[op] = LatencyHistogram()
+        h.record(dur_ns, n)
 
     # ==================================================== read target routing
     @contextlib.contextmanager
@@ -408,7 +438,12 @@ class FrontEnd:
         while the front-end computes; it blocks once, here)."""
         if self._wave_posts:
             self.stats.write_waves += 1
+            tr = self.trace
+            t0 = self.clock.now
             self.clock.advance_to(self._wave_end + self.cost.rtt_ns + self.cost.nvm_write_ns)
+            if tr is not None:
+                tr.span(self._tk, "wave_fence", t0, self.clock.now,
+                        {"posts": self._wave_posts, "ops": self._wave_ops})
         self._wave_posts = 0
         self._wave_ops = 0
         self._wave_end = 0.0
@@ -565,13 +600,26 @@ class FrontEnd:
         ``target`` endpoint (primary or mirror) and charges that blade's
         link."""
         tgt = target or ReadTarget(self.backend)
-        runs = combine_runs([(a, s) for _, a, s in remote])
-        width = self.waves.width
-        start = self.clock.now
-        for i, (_, nbytes) in enumerate(runs):
-            start += self.cost.issue_ns if i % width == 0 else self.cost.doorbell_wqe_ns
-            start = tgt.link.transfer(start, nbytes)
+        tr = self.trace
+        t0 = self.clock.now
+        with profile("wave_build"):
+            runs = combine_runs([(a, s) for _, a, s in remote])
+            width = self.waves.width
+            start = self.clock.now
+            for i, (_, nbytes) in enumerate(runs):
+                start += self.cost.issue_ns if i % width == 0 else self.cost.doorbell_wqe_ns
+                start = tgt.link.transfer(start, nbytes)
         self.clock.advance_to(start + self.cost.rtt_ns + self.cost.nvm_read_ns)
+        if tr is not None:
+            tr.span(self._tk, "read_wave", t0, self.clock.now,
+                    {"wqes": len(runs), "items": len(remote),
+                     "bytes": sum(n for _, n in runs), "width": width,
+                     "replica": tgt.is_replica})
+            if self.cfg.use_cache:
+                c = self.cache
+                tr.counter(self._tk, "cache", self.clock.now,
+                           {"hits": c.hits, "misses": c.misses,
+                            "evictions": c.evictions})
         out: Dict[int, bytes] = {}
         for i, addr, size in remote:
             data = tgt.fetch(addr, size)
@@ -692,6 +740,8 @@ class FrontEnd:
             # group commits complete synchronously, so the controller's
             # window must not leak past the vector call sequence
             self.end_wave()
+        if self.trace is not None:
+            h._op_t0 = self.clock.now
         h.seq += 1
         if self.cfg.symmetric:
             return h.seq
@@ -706,6 +756,13 @@ class FrontEnd:
         return h.seq
 
     def op_commit(self, h: StructHandle) -> None:
+        self._op_commit(h)
+        tr = self.trace
+        if tr is not None and h._op_t0 is not None:
+            tr.span(self._tk, "op", h._op_t0, self.clock.now)
+            h._op_t0 = None
+
+    def _op_commit(self, h: StructHandle) -> None:
         # inside a doorbell write wave the batch shares one software
         # dispatch; each item pays only its staging work
         if self._wave_active():
@@ -762,6 +819,8 @@ class FrontEnd:
     def flush_oplog(self, h: StructHandle, sync: bool = True) -> None:
         if not h.oplog_staged:
             return
+        tr = self.trace
+        t0 = self.clock.now
         payload = b"".join(h.oplog_staged)
         self.backend.tx_append(h.oplog_area, payload)
         self.backend.set_name(f"{h.name}.seq", h.seq)
@@ -771,6 +830,10 @@ class FrontEnd:
             self._round(len(payload), nvm_write=True)
         else:
             self._pipelined_write(len(payload))
+        if tr is not None:
+            tr.span(self._tk, "oplog_flush", t0, self.clock.now,
+                    {"ops": h.oplog_staged_ops, "bytes": len(payload),
+                     "sync": sync})
         h.oplog_staged.clear()
         h.oplog_staged_ops = 0
 
@@ -799,6 +862,8 @@ class FrontEnd:
         anywhere inside a handle's segment makes that handle's whole window
         invisible (all-or-none), while handles earlier in the payload —
         whose watermark write already persisted — keep theirs."""
+        tr = self.trace
+        t0 = self.clock.now
         for h in handles:
             if h.pre_flush is not None and not h._in_preflush:
                 h._in_preflush = True
@@ -853,6 +918,9 @@ class FrontEnd:
         for h in flushed:
             if h.post_flush is not None and not h._in_preflush:
                 h.post_flush()
+        if tr is not None:
+            tr.span(self._tk, "flush", t0, self.clock.now,
+                    {"handles": len(dirty), "bytes": total, "sync": sync})
 
     def drain(self, h: StructHandle) -> None:
         """Flush everything (end of benchmark / clean shutdown)."""

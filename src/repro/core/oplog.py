@@ -32,6 +32,8 @@ from typing import Iterable, List, NamedTuple
 
 import numpy as np
 
+from ..obs.profile import profile
+
 FLAG_MEM = 0x01
 FLAG_COMMIT = 0x02
 FLAG_OP = 0x03
@@ -96,7 +98,9 @@ def committed_tail(buf: bytes, lo_seq: int, hi_seq: int) -> List[OpLog]:
     ones with the same seq.  Returned in seq order.
     """
     by_seq: dict = {}
-    for e in decode_oplogs(buf):
+    with profile("log_decode"):
+        entries = decode_oplogs(buf)
+    for e in entries:
         seq = entry_seq(e)
         if lo_seq < seq <= hi_seq:
             by_seq[seq] = OpLog(e.op, e.payload[8:])

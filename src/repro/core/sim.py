@@ -129,6 +129,11 @@ class Link:
         self.msgs_in_epoch: dict = {}
         self.busy_total: float = 0.0
         self._hi_epoch = -1
+        # set by Tracer.attach_link when an obs session is tracing; when
+        # attached, crossing into a new epoch samples the completed epoch's
+        # utilization onto this link's counter track
+        self._trace = None
+        self._trace_track = None
 
     def _prune(self, e: int) -> None:
         """Sliding-horizon eviction: once epoch `e` is seen, buckets older
@@ -144,10 +149,27 @@ class Link:
             for k in stale:
                 del d[k]
 
+    def _advance_horizon(self, e: int) -> None:
+        """Move the sliding horizon up to epoch `e`, first sampling the
+        utilization of the epoch being left behind to the tracer (if one is
+        attached)."""
+        tr = self._trace
+        if tr is not None and self._hi_epoch >= 0:
+            t_prev = self._hi_epoch * self.epoch
+            tr.counter(self._trace_track, "link_util", t_prev,
+                       round(self.utilization(t_prev), 4))
+        self._prune(e)
+
     def utilization(self, t_ns: float) -> float:
         """Fraction of the epoch containing `t_ns` already spoken for (the
         adaptive wave-width controller's congestion signal)."""
         e = int(t_ns // self.epoch)
+        if e > self._hi_epoch:
+            # pruning used to happen only in transfer(): after a reset()
+            # re-use (or a writer lagging below the horizon), a reader
+            # probing an epoch never transferred-in could see stale bucket
+            # data that a transfer would have evicted.  Prune on read too.
+            self._advance_horizon(e)
         cap_bytes = self.cost.bytes_per_ns * self.epoch
         cap_msgs = self.epoch / self.cost.nic_msg_ns
         return max(self.bytes_in_epoch.get(e, 0.0) / cap_bytes,
@@ -156,7 +178,7 @@ class Link:
     def transfer(self, start_ns: float, nbytes: int) -> float:
         e = int(start_ns // self.epoch)
         if e > self._hi_epoch:
-            self._prune(e)
+            self._advance_horizon(e)
         self.bytes_in_epoch[e] = self.bytes_in_epoch.get(e, 0.0) + nbytes
         self.msgs_in_epoch[e] = self.msgs_in_epoch.get(e, 0.0) + 1
         cap_bytes = self.cost.bytes_per_ns * self.epoch

@@ -15,6 +15,7 @@ wave, and fetches them with a single doorbell batch while the per-item
 
 from __future__ import annotations
 
+import contextlib
 import struct
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -91,6 +92,27 @@ class RemoteStructure:
     def write_root(self, value: int) -> None:
         self.fe.write(self.h, self.root_addr, struct.pack("<Q", value))
 
+    # observability ----------------------------------------------------------
+    @contextlib.contextmanager
+    def op_window(self, op: str, n: int):
+        """Measure one vector-op call against the front-end's sim clock:
+        the window's latency lands in ``fe.op_hist[op]`` once per item (a
+        batch of 64 gets records 64 samples of the shared window latency),
+        and — when tracing — the window becomes an ``op:<name>`` span
+        enclosing the waves/fences it issued."""
+        fe = self.fe
+        t0 = fe.clock.now
+        try:
+            yield
+        finally:
+            t1 = fe.clock.now
+            if n > 0:
+                fe.record_op_latency(op, t1 - t0, n)
+            tr = fe.trace
+            if tr is not None:
+                tr.span(fe._tk, f"op:{op}", t0, t1,
+                        {"n": n, "struct": self.name})
+
     # vector ops -------------------------------------------------------------
     # Serial fallbacks; subclasses override with wave-batched traversals.
     # Maps speak get/put, trees and lists speak lookup/insert — the aliases
@@ -102,13 +124,15 @@ class RemoteStructure:
         RPCs and op-log group commits post into shared doorbells with one
         completion fence, and each op charges the vector-op CPU cost."""
         write = getattr(self, "put", None) or self.insert  # type: ignore[attr-defined]
-        with self.fe.write_wave(linger=True):
-            for k, v in pairs:
-                write(k, v)
+        with self.op_window("put_many", len(pairs)):
+            with self.fe.write_wave(linger=True):
+                for k, v in pairs:
+                    write(k, v)
 
     def get_many(self, keys: List[int]) -> List[Optional[int]]:
         read = getattr(self, "get", None) or self.find  # type: ignore[attr-defined]
-        return [read(k) for k in keys]
+        with self.op_window("get_many", len(keys)):
+            return [read(k) for k in keys]
 
     def insert_many(self, pairs: List[tuple]) -> None:
         self.put_many(pairs)

@@ -98,7 +98,12 @@ class RemoteBST(RemoteStructure):
         doorbell-batched read wave per frontier level (the read pattern of
         Algorithm 1's vector insert, applied to lookups)."""
         if not self.fe.cfg.use_batch or len(keys) <= 1 or not self._root:
-            return [self.find(k) for k in keys]
+            with self.op_window("get_many", len(keys)):
+                return [self.find(k) for k in keys]
+        with self.op_window("get_many", len(keys)):
+            return self._get_many_batched(keys)
+
+    def _get_many_batched(self, keys: List[int]) -> List[Optional[int]]:
         out: List[Optional[int]] = [None] * len(keys)
         rem: List[int] = []
         for i, k in enumerate(keys):

@@ -96,9 +96,10 @@ class RemoteHashTable(RemoteStructure):
         return out
 
     def get_many(self, keys: List[int]) -> List[Optional[int]]:
-        if not self.fe.cfg.use_batch or len(keys) <= 1:
-            return [self.get(k) for k in keys]
-        return self._lookup(keys)
+        with self.op_window("get_many", len(keys)):
+            if not self.fe.cfg.use_batch or len(keys) <= 1:
+                return [self.get(k) for k in keys]
+            return self._lookup(keys)
 
     def _prefetch_chains(self, keys: List[int]) -> None:
         """Warm the cache with every bucket head and chain node the batch's
@@ -134,16 +135,17 @@ class RemoteHashTable(RemoteStructure):
         phase's posted writes too: node-slab refill RPCs and op-log group
         commits post into shared doorbells with one completion fence."""
         cfg = self.fe.cfg
-        if not (cfg.use_batch and cfg.use_cache) or len(pairs) <= 1:
-            for k, v in pairs:
-                self.put(k, v)
-            return
-        with self.fe.write_wave(linger=True):
-            self._prefetch_chains([k for k, _ in pairs])
-            for k, v in pairs:
-                self.fe.op_begin(self.h, OP_PUT, self.encode_args(k, v))
-                self._put_base(k, v)
-                self.fe.op_commit(self.h)
+        with self.op_window("put_many", len(pairs)):
+            if not (cfg.use_batch and cfg.use_cache) or len(pairs) <= 1:
+                for k, v in pairs:
+                    self.put(k, v)
+                return
+            with self.fe.write_wave(linger=True):
+                self._prefetch_chains([k for k, _ in pairs])
+                for k, v in pairs:
+                    self.fe.op_begin(self.h, OP_PUT, self.encode_args(k, v))
+                    self._put_base(k, v)
+                    self.fe.op_commit(self.h)
 
     def delete(self, key: int) -> bool:
         self.fe.op_begin(self.h, OP_DEL, self.encode_args(key))

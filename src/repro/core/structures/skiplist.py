@@ -183,29 +183,31 @@ class RemoteSkipList(RemoteStructure):
         served from cache regardless of tower height."""
         cfg = self.fe.cfg
         kvs = sorted(kvs)
-        if not (cfg.use_batch and cfg.use_cache) or len(kvs) <= 1:
-            for k, v in kvs:
-                self.insert(k, v)
-            return
-        thr0, self.cache_level_thr = self.cache_level_thr, 1
-        try:
-            with self.fe.write_wave(linger=True):
-                self._walk_many([k for k, _ in kvs], prefetch=True)
+        with self.op_window("put_many", len(kvs)):
+            if not (cfg.use_batch and cfg.use_cache) or len(kvs) <= 1:
                 for k, v in kvs:
                     self.insert(k, v)
-        finally:
-            self.cache_level_thr = min(thr0, self.cache_level_thr)
+                return
+            thr0, self.cache_level_thr = self.cache_level_thr, 1
+            try:
+                with self.fe.write_wave(linger=True):
+                    self._walk_many([k for k, _ in kvs], prefetch=True)
+                    for k, v in kvs:
+                        self.insert(k, v)
+            finally:
+                self.cache_level_thr = min(thr0, self.cache_level_thr)
 
     def get_many(self, keys: List[int]):
         """Vector lookup: the whole batch's predecessor walks advance in
         doorbell waves; values are taken straight from the walked nodes (no
         second pass, so the result does not depend on cache retention)."""
-        if not self.fe.cfg.use_batch or len(keys) <= 1:
-            return [self.find(k) for k in keys]
-        vals = self._walk_many(keys, prefetch=False)
-        for _ in keys:
-            self._adapt()
-        return vals
+        with self.op_window("get_many", len(keys)):
+            if not self.fe.cfg.use_batch or len(keys) <= 1:
+                return [self.find(k) for k in keys]
+            vals = self._walk_many(keys, prefetch=False)
+            for _ in keys:
+                self._adapt()
+            return vals
 
     # ------------------------------------------------------------ primitives
     def _insert_base(self, key: int, value: int) -> None:

@@ -1,0 +1,271 @@
+"""Observability tests: histogram accuracy/merge laws, the Link stale-bucket
+regression, cluster stats/telemetry aggregation, trace schema + nesting, and
+the metrics export."""
+
+import json
+import math
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the seeded-random shim
+    from _hypothesis_shim import given, settings, st
+
+from repro import obs
+from repro.cluster.rebalance import rebalance
+from repro.cluster.router import ClusterFrontEnd, NVMCluster
+from repro.cluster.sharded import ShardedHashTable
+from repro.core import FEConfig, FrontEnd, NVMBackend
+from repro.core.sim import CostModel, Link
+from repro.core.structures import RemoteHashTable
+from repro.obs import GROWTH, LatencyHistogram, report
+
+# ---------------------------------------------------------------- histograms
+
+values = st.lists(st.integers(min_value=1, max_value=1 << 40),
+                  min_size=1, max_size=300)
+
+
+def _exact_rank(sorted_vals, p):
+    rank = max(1, min(len(sorted_vals), math.ceil(p / 100.0 * len(sorted_vals))))
+    return sorted_vals[rank - 1]
+
+
+@settings(max_examples=80, deadline=None)
+@given(values)
+def test_histogram_percentiles_within_one_bucket(vals):
+    h = LatencyHistogram()
+    for v in vals:
+        h.record(v)
+    s = sorted(vals)
+    for p in (50.0, 99.0, 99.9):
+        exact = _exact_rank(s, p)
+        est = h.percentile(p)
+        assert exact / GROWTH * (1 - 1e-9) <= est <= exact * GROWTH * (1 + 1e-9), (
+            f"p{p}: est {est} vs exact {exact} on {len(vals)} values"
+        )
+    assert h.count == len(vals)
+    assert h.vmin == s[0] and h.vmax == s[-1]
+
+
+@settings(max_examples=60, deadline=None)
+@given(values, values)
+def test_histogram_merge_commutes_and_matches_bulk(a_vals, b_vals):
+    a = LatencyHistogram()
+    b = LatencyHistogram()
+    bulk = LatencyHistogram()
+    for v in a_vals:
+        a.record(v)
+        bulk.record(v)
+    for v in b_vals:
+        b.record(v)
+        bulk.record(v)
+    ab = a.copy().merge(b)
+    ba = b.copy().merge(a)
+    assert ab == ba == bulk
+    assert ab.percentiles((50, 99, 99.9)) == bulk.percentiles((50, 99, 99.9))
+
+
+@settings(max_examples=40, deadline=None)
+@given(values, values, values)
+def test_histogram_merge_associative(a_vals, b_vals, c_vals):
+    hs = []
+    for vals in (a_vals, b_vals, c_vals):
+        h = LatencyHistogram()
+        for v in vals:
+            h.record(v)
+        hs.append(h)
+    a, b, c = hs
+    left = a.copy().merge(b).merge(c)
+    right = a.copy().merge(b.copy().merge(c))
+    assert left == right == LatencyHistogram.merged([a, b, c])
+
+
+@settings(max_examples=40, deadline=None)
+@given(values)
+def test_histogram_dict_roundtrip(vals):
+    h = LatencyHistogram()
+    for v in vals:
+        h.record(v)
+    assert LatencyHistogram.from_dict(h.to_dict()) == h
+
+
+def test_histogram_zeros_and_weighted():
+    h = LatencyHistogram()
+    h.record(0.0, 3)
+    h.record(100.0, 7)
+    assert h.count == 10
+    assert h.percentile(10) == 0.0
+    assert h.percentile(90) > 0.0
+    h.record(50.0, 0)  # n <= 0 is a no-op
+    assert h.count == 10
+
+
+# --------------------------------------------------- Link stale-bucket prune
+
+def test_link_stale_bucket_pruned_on_read():
+    """Regression: a transfer from a front-end lagging below the prune
+    horizon used to leave a bucket that only another transfer() would evict;
+    a pure utilization() reader could see dead-epoch contention forever."""
+    link = Link(CostModel())
+    ep = link.epoch
+    link.transfer(100 * ep, 4096)       # horizon at epoch 100
+    link.transfer(5 * ep, 1 << 20)      # laggard writes below the prune floor
+    assert 5 in link.bytes_in_epoch     # stale bucket is present...
+    assert link.utilization(1000 * ep) == 0.0   # ...read advances the horizon
+    assert 5 not in link.bytes_in_epoch  # ...and evicts it
+    assert link.utilization(5 * ep + 1) == 0.0  # reader sees no ghost traffic
+
+
+def test_link_reset_clears_horizon():
+    link = Link(CostModel())
+    link.transfer(100 * link.epoch, 4096)
+    link.reset()
+    assert link._hi_epoch == -1 and not link.bytes_in_epoch
+    assert link.utilization(0.0) == 0.0
+
+
+# ----------------------------------------------------- cluster stats/telemetry
+
+def _tiny_cluster(n_blades=2):
+    cluster = NVMCluster(n_blades=n_blades, n_shards=8)
+    # rcb: the batched config drives doorbell read waves and write fences,
+    # so traces cover every span type
+    cfe = ClusterFrontEnd(cluster, FEConfig.rcb(cache_bytes=4096), fe_id=0)
+    t = ShardedHashTable(cfe, "t", n_buckets=256)
+    return cluster, cfe, t
+
+
+def test_cluster_stats_and_telemetry():
+    cluster, cfe, t = _tiny_cluster()
+    pairs = [(i, i * 3) for i in range(120)]
+    t.put_many(pairs)
+    got = t.get_many([k for k, _ in pairs])
+    assert got == [v for _, v in pairs]
+
+    st_ = cfe.stats()
+    assert set(st_["per_blade"]) == set(cluster.blades)
+    # totals really are the per-blade sum (no rebind happened yet)
+    some_key = "rdma_reads"
+    assert st_["total"][some_key] == sum(
+        snap[some_key] for snap in st_["per_blade"].values())
+
+    tel = cfe.telemetry()
+    assert tel["cluster_op_latency"]["put_many"]["count"] == len(pairs)
+    assert tel["cluster_op_latency"]["get_many"]["count"] == len(pairs)
+    assert tel["op_latency"]["get_many"]["count"] == len(pairs)
+    for snap in tel["cluster_op_latency"].values():
+        assert 0 < snap["p50"] <= snap["p99"] <= snap["p999"]
+    assert tel["epoch"] == cluster.directory.epoch
+
+
+def test_cluster_telemetry_survives_rebind():
+    """Epoch bumps replace the per-blade FrontEnds; their histograms and
+    counters must fold into the CFE accumulators, not vanish."""
+    cluster, cfe, t = _tiny_cluster()
+    t.put_many([(i, i) for i in range(100)])
+    before = cfe.telemetry()["op_latency"]["put_many"]["count"]
+    assert before == 100
+    cluster.add_blade()
+    rebalance(t)                     # migrations: revoke + epoch swap + rebind
+    t.get_many(list(range(100)))
+    tel = cfe.telemetry()
+    assert tel["op_latency"]["put_many"]["count"] == 100   # retained
+    assert tel["op_latency"]["get_many"]["count"] >= 100
+    assert cfe.stats()["total"]["rdma_reads"] > 0
+
+
+# ------------------------------------------------------------- trace schema
+
+def test_trace_schema_and_nesting():
+    try:
+        with obs.observe(trace=True) as sess:
+            cluster, cfe, t = _tiny_cluster()
+            t.put_many([(i, i) for i in range(80)])
+            cluster.add_blade()
+            rebalance(t)
+            assert t.get_many(list(range(80))) == list(range(80))
+            doc = sess.tracer.to_chrome()
+    finally:
+        obs.stop()
+    spans = report.spans(doc)
+    assert spans, "trace has no spans"
+    for e in spans:
+        assert all(k in e for k in ("name", "ts", "dur", "pid", "tid"))
+        assert e["dur"] >= 0
+    assert report.validate(doc) == []       # spans nest / are disjoint per track
+    names = report.span_names(doc)
+    for required in ("read_wave", "flush", "lease_refresh", "lease_grant",
+                     "migration", "op:put_many", "op:get_many"):
+        assert names[required] > 0, f"missing {required} spans"
+    assert len(report.blade_tracks(doc)) >= 2
+    # a second session must start from a clean slate
+    assert obs.session() is None
+
+
+def test_tracing_off_costs_no_sim_time():
+    """The same workload must land on the identical virtual clock with and
+    without an active trace session (observability never perturbs the sim)."""
+    def run():
+        cluster, cfe, t = _tiny_cluster()
+        t.put_many([(i, i) for i in range(150)])
+        t.get_many(list(range(150)))
+        return cfe.clock.now
+
+    bare = run()
+    try:
+        with obs.observe(trace=True, metrics=True):
+            traced = run()
+    finally:
+        obs.stop()
+    assert traced == bare
+
+
+# ------------------------------------------------------------ metrics export
+
+def test_metrics_export(tmp_path):
+    try:
+        with obs.observe(trace=True, metrics=True) as sess:
+            be = NVMBackend(capacity=1 << 22)
+            fe = FrontEnd(be, FEConfig.rcb(cache_bytes=1 << 16))
+            ht = RemoteHashTable(fe, "m", n_buckets=256)
+            ht.put_many([(i, i) for i in range(200)])
+            ht.get_many(list(range(200)))
+            fe.drain(ht.h)
+            obs.count("migrations", 2)
+            prom = tmp_path / "m.prom"
+            jpath = sess.export_metrics(str(prom))
+    finally:
+        obs.stop()
+    text = prom.read_text()
+    assert "# TYPE rnvm_fe_rdma_reads counter" in text
+    assert "rnvm_migrations 2" in text
+    assert 'rnvm_op_latency_ns{op="put_many",quantile="0.99"}' in text
+    assert "rnvm_op_latency_ns_count" in text
+    assert "rnvm_profile_seconds" in text   # wall-clock profile hooks fired
+    data = json.loads(open(jpath).read())
+    rows = data["histograms"]["op_latency_ns"]
+    hist_ops = {r["labels"]["op"] for r in rows}
+    assert {"put_many", "get_many"} <= hist_ops
+    # the histogram buckets round-trip
+    h0 = [r for r in rows if r["labels"].get("op") == "put_many"][0]
+    assert LatencyHistogram.from_dict(h0["buckets"]).count == h0["count"]
+
+
+def test_dead_frontends_fold_into_session(tmp_path):
+    """Front-ends GC'd before export still contribute (weakref.finalize)."""
+    import gc
+    try:
+        with obs.observe(metrics=True) as sess:
+            def scoped():
+                be = NVMBackend(capacity=1 << 22)
+                fe = FrontEnd(be, FEConfig.rcb(cache_bytes=1 << 16))
+                ht = RemoteHashTable(fe, "d", n_buckets=64)
+                ht.put_many([(i, i) for i in range(50)])
+                fe.drain(ht.h)
+            scoped()
+            gc.collect()
+            totals, hists = sess.fe_totals()
+    finally:
+        obs.stop()
+    assert totals.get("rdma_writes", 0) > 0
+    assert hists["put_many"].count == 50
