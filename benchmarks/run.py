@@ -18,16 +18,23 @@ import sys
 
 
 def _write_record(path: str, rows: list, prefix: str, preload: int,
-                  n_ops: int, wall_s: float) -> None:
+                  n_ops: int, wall_s: float, phases: dict = None) -> None:
     """Emit a perf record in the schema scripts/check_bench.py guards: the
     measurement rows plus a ``{prefix}_bench_meta`` provenance entry (run
-    sizes + wall clock) so the guard compares like-for-like."""
-    record = rows + [{
+    sizes + wall clock; under ``--profile`` also the obs.profile per-phase
+    seconds/call-counts) so the guard compares like-for-like."""
+    meta = {
         "name": f"{prefix}_bench_meta",
         "preload": preload,
         "n_ops": n_ops,
         "wall_clock_seconds": round(wall_s, 1),
-    }]
+    }
+    if phases:
+        meta["profile_phase_seconds"] = {
+            k: round(v["seconds"], 3) for k, v in phases.items()
+        }
+        meta["profile_phase_calls"] = {k: v["calls"] for k, v in phases.items()}
+    record = rows + [meta]
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
     print(f"[{prefix}] perf record -> {path} ({wall_s:.0f}s wall)")
@@ -49,10 +56,25 @@ def main(argv=None) -> None:
                     help="where the cluster replica-read perf record is "
                          "written (default BENCH_cluster_reads.json, same "
                          "--smoke guard)")
+    ap.add_argument("--profile", action="store_true",
+                    help="enable obs.profile around the perf-record runs and "
+                         "write per-phase wall seconds into *_bench_meta")
     from .common import add_obs_args, obs_finish, obs_start
     add_obs_args(ap)
     args = ap.parse_args(argv)
     obs_start(args)
+    if args.profile:
+        from repro.obs import profile as _prof
+        _prof.enable()
+
+    def _phase_snapshot():
+        """Per-record obs.profile totals (reset between records so each
+        perf record carries only its own phases); None without --profile."""
+        if not args.profile:
+            return None
+        snap = _prof.snapshot()
+        _prof.reset()
+        return snap
     if args.bench_json is None:
         args.bench_json = ("BENCH_vector_ops.smoke.json" if args.smoke
                            else "BENCH_vector_ops.json")
@@ -132,6 +154,7 @@ def main(argv=None) -> None:
         import time
 
         from .fig_cluster_scaling import main as fcluster
+        _phase_snapshot()  # drop phases accumulated by earlier sections
         wall0 = time.perf_counter()
         if args.smoke:
             cpreload, cops = 80, 150
@@ -171,12 +194,14 @@ def main(argv=None) -> None:
             if key in rr:
                 cluster_row[key] = rr[key]
         _write_record(args.cluster_json, [cluster_row],
-                      "cluster", cpreload, cops, wall_s)
+                      "cluster", cpreload, cops, wall_s,
+                      phases=_phase_snapshot())
 
     if want("vector"):
         import time
 
         from .fig_vector_ops import main as fvec
+        _phase_snapshot()  # drop phases accumulated by earlier sections
         wall0 = time.perf_counter()
         out = fvec(preload=preload, n_ops=max(n_ops, 128))
         wall_s = time.perf_counter() - wall0
@@ -199,7 +224,7 @@ def main(argv=None) -> None:
                         vrow[f"sim_{p}_us"] = r[f"{op}_{p}_us"]
                 rows.append(vrow)
         _write_record(args.bench_json, rows, "vector", preload,
-                      max(n_ops, 128), wall_s)
+                      max(n_ops, 128), wall_s, phases=_phase_snapshot())
 
     if want("apps"):
         from .common import kops, make_fe

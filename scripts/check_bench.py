@@ -18,6 +18,14 @@ observability hooks' tracing-off overhead: with ``--max-wall-regress``
 (default 2%) the fresh run may not take more than that fraction longer than
 the baseline.  A 2s absolute grace absorbs scheduler noise on short runs —
 only a regression that is both >2% relative and >2s absolute fails.
+
+Rows carrying ``wall_clock_ops_per_sec`` additionally guard an ABSOLUTE
+throughput floor: the fresh row must reach the baseline value times
+``1 - --max-wall-ops-drop`` (default 50%).  Wall throughput is real seconds,
+not simulated time, so the tolerance is deliberately loose — shared CI boxes
+jitter ±30% run to run; the floor exists to catch the order-of-magnitude
+regressions (a vectorized path silently falling back to the serial loop),
+not scheduler noise.
 """
 
 from __future__ import annotations
@@ -27,15 +35,17 @@ import json
 import sys
 
 
-def _load(path: str) -> tuple[dict, dict]:
+def _load(path: str) -> tuple[dict, dict, dict]:
     with open(path) as f:
         entries = json.load(f)
     speedups = {e["name"]: e["speedup_vs_serial"]
                 for e in entries if "speedup_vs_serial" in e}
+    wall_ops = {e["name"]: e["wall_clock_ops_per_sec"]
+                for e in entries if "wall_clock_ops_per_sec" in e}
     meta = next(
         (e for e in entries if str(e.get("name", "")).endswith("_bench_meta")), {}
     )
-    return speedups, meta
+    return speedups, wall_ops, meta
 
 
 def main(argv=None) -> int:
@@ -46,10 +56,14 @@ def main(argv=None) -> int:
     ap.add_argument("--max-wall-regress", type=float, default=0.02,
                     help="max fractional wall-clock increase vs baseline "
                          "(tracing-off overhead guard; 2s absolute grace)")
+    ap.add_argument("--max-wall-ops-drop", type=float, default=0.50,
+                    help="max fractional drop of a row's absolute "
+                         "wall_clock_ops_per_sec vs baseline (loose: real "
+                         "wall throughput jitters with the host)")
     args = ap.parse_args(argv)
 
-    fresh, fmeta = _load(args.fresh)
-    base, bmeta = _load(args.baseline)
+    fresh, fwall_ops, fmeta = _load(args.fresh)
+    base, bwall_ops, bmeta = _load(args.baseline)
 
     fsz = (fmeta.get("preload"), fmeta.get("n_ops"))
     bsz = (bmeta.get("preload"), bmeta.get("n_ops"))
@@ -71,6 +85,20 @@ def main(argv=None) -> int:
             status = f"FAIL (<{floor:.2f})"
             failed = True
         print(f"check_bench: {name}: baseline {ref:.2f}x fresh {cur:.2f}x {status}")
+    for name, ref in sorted(bwall_ops.items()):
+        cur = fwall_ops.get(name)
+        if cur is None:
+            print(f"check_bench: FAIL {name}: wall ops/sec missing from fresh "
+                  "record", file=sys.stderr)
+            failed = True
+            continue
+        floor = ref * (1.0 - args.max_wall_ops_drop)
+        status = "ok"
+        if cur < floor:
+            status = f"FAIL (<{floor:.0f})"
+            failed = True
+        print(f"check_bench: {name}: wall ops/sec baseline {ref:.0f} "
+              f"fresh {cur:.0f} {status}")
     fwall = fmeta.get("wall_clock_seconds")
     bwall = bmeta.get("wall_clock_seconds")
     if fwall is not None and bwall is not None:

@@ -202,6 +202,29 @@ class ShardedStructure:
                 vals[k] = v
         return [vals[k] for k in keys]
 
+    def _serve_scan(self, shard: int, obj, scanner: Callable):
+        """Serve a whole-structure scan (``items`` / ``range_items``) under
+        the read policy: the shard's entire leaf fan-out routes to a mirror
+        endpoint — one read wave against replica arenas instead of the
+        primary, so scans stop competing with primary write traffic.  A scan
+        touches every key, so it can only leave the primary when NO key of
+        this shard is still pinned (a pinned key is a local write not yet
+        provably applied on every mirror); releasable pins are dropped on
+        the way through, exactly as in ``_serve_reads``."""
+        pol = self.read_policy
+        if pol is None:
+            return scanner(obj)
+        floor = self._replica_floor(obj)
+        for k, entry in list(self._pinned.items()):
+            if entry[0] != shard:
+                continue
+            if entry[1] <= floor:
+                del self._pinned[k]  # mirrors caught up: release the pin
+            else:
+                return scanner(obj)  # fresh local write: primary only
+        with obj.fe.replica_reads(pol):
+            return scanner(obj)
+
     # ------------------------------------------------------------ op dispatch
     def _on_shard(self, shard: int, fn: Callable, *, create_if_missing: bool = True,
                   default=None):
@@ -449,7 +472,10 @@ class ShardedHashTable(ShardedStructure):
         out: List[Tuple[int, int]] = []
         for shard in range(self.cfe.directory.n_shards):
             part = self._on_shard(
-                shard, lambda t: t.items(), create_if_missing=False, default=[]
+                shard,
+                lambda t, s=shard: self._serve_scan(s, t, lambda o: o.items()),
+                create_if_missing=False,
+                default=[],
             )
             out.extend(part)
         return out
@@ -496,7 +522,9 @@ class ShardedBPTree(ShardedStructure):
         for shard in range(self.cfe.directory.n_shards):
             part = self._on_shard(
                 shard,
-                lambda t: t.range_items(lo, hi),
+                lambda t, s=shard: self._serve_scan(
+                    s, t, lambda o: o.range_items(lo, hi)
+                ),
                 create_if_missing=False,
                 default=[],
             )
@@ -508,7 +536,10 @@ class ShardedBPTree(ShardedStructure):
         streams: List[List[Tuple[int, int]]] = []
         for shard in range(self.cfe.directory.n_shards):
             part = self._on_shard(
-                shard, lambda t: t.items(), create_if_missing=False, default=[]
+                shard,
+                lambda t, s=shard: self._serve_scan(s, t, lambda o: o.items()),
+                create_if_missing=False,
+                default=[],
             )
             if part:
                 streams.append(part)

@@ -87,6 +87,8 @@ import dataclasses
 import struct
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .allocator import FrontEndAllocator
 from .backend import CrashError, LogArea, NVMBackend
 from .cache import PageCache
@@ -602,14 +604,29 @@ class FrontEnd:
         tgt = target or ReadTarget(self.backend)
         tr = self.trace
         t0 = self.clock.now
+        cost = self.cost
         with profile("wave_build"):
             runs = combine_runs([(a, s) for _, a, s in remote])
             width = self.waves.width
-            start = self.clock.now
-            for i, (_, nbytes) in enumerate(runs):
-                start += self.cost.issue_ns if i % width == 0 else self.cost.doorbell_wqe_ns
-                start = tgt.link.transfer(start, nbytes)
-        self.clock.advance_to(start + self.cost.rtt_ns + self.cost.nvm_read_ns)
+            if len(runs) > 1:
+                # vectorized WQE stream: every run's post gap + link transfer
+                # in one epoch-chunked pass (see Link.transfer_many)
+                wqe_ns = cost.doorbell_wqe_ns
+                issue_ns = cost.issue_ns
+                gaps = [
+                    issue_ns if i % width == 0 else wqe_ns
+                    for i in range(len(runs))
+                ]
+                ends = tgt.link.transfer_many(
+                    self.clock.now, gaps, [nb for _, nb in runs]
+                )
+                start = float(ends[-1])
+            else:
+                start = self.clock.now
+                for i, (_, nbytes) in enumerate(runs):
+                    start += cost.issue_ns if i % width == 0 else cost.doorbell_wqe_ns
+                    start = tgt.link.transfer(start, nbytes)
+        self.clock.advance_to(start + cost.rtt_ns + cost.nvm_read_ns)
         if tr is not None:
             tr.span(self._tk, "read_wave", t0, self.clock.now,
                     {"wqes": len(runs), "items": len(remote),
@@ -621,15 +638,32 @@ class FrontEnd:
                            {"hits": c.hits, "misses": c.misses,
                             "evictions": c.evictions})
         out: Dict[int, bytes] = {}
-        for i, addr, size in remote:
-            data = tgt.fetch(addr, size)
-            self.stats.rdma_reads += 1
-            self.stats.bytes_read += size
-            if tgt.is_replica:
-                self.stats.replica_reads += 1
-            out[i] = data
-            if self.cfg.use_cache and cacheable and tgt.cache_safe:
-                self.cache.put(addr, data)
+        st = self.stats
+        st.rdma_reads += len(remote)
+        if tgt.is_replica:
+            st.replica_reads += len(remote)
+        # hot fetch loop: read straight off the resolved arena (primary or
+        # synchronous mirror) — one aliveness check covers the whole wave,
+        # and the byte accounting rides the same pass
+        if tgt.mirror_idx is None:
+            tgt.backend._check_alive()
+            arena = tgt.backend.arena
+        else:
+            arena = tgt.backend.mirrors[tgt.mirror_idx].arena
+        nbytes = 0
+        if self.cfg.use_cache and cacheable and tgt.cache_safe:
+            items = []
+            for i, addr, size in remote:
+                data = bytes(arena[addr : addr + size])
+                out[i] = data
+                items.append((addr, data))
+                nbytes += size
+            self.cache.admit_many(items)
+        else:
+            for i, addr, size in remote:
+                out[i] = bytes(arena[addr : addr + size])
+                nbytes += size
+        st.bytes_read += nbytes
         return out
 
     def read_many(self, h: StructHandle, reqs: List[Tuple[int, int]], *, cacheable: bool = True) -> List[bytes]:
@@ -638,23 +672,66 @@ class FrontEnd:
         serial reads when batching is off."""
         if not self.cfg.use_batch or len(reqs) <= 1:
             return [self.read(h, a, s, cacheable=cacheable) for a, s in reqs]
-        out: List[Optional[bytes]] = [None] * len(reqs)
+        n = len(reqs)
+        # aggregated charges: the per-item CPU visit cost and per-hit DRAM
+        # cost are pure clock adds, so summing them once is time-identical
+        # to interleaving them with the probes
+        cpu = self.cfg.cpu_node_ns * n
+        self.clock.advance(cpu)
+        self.busy_ns += cpu
+        out: List[Optional[bytes]] = [None] * n
         remote: List[Tuple[int, int, int]] = []
-        for i, (addr, size) in enumerate(reqs):
-            self._charge_node()
-            staged = h.wbuf.get(addr)
-            if staged is not None and len(staged) >= size:
-                out[i] = bytes(staged[:size])
-                continue
-            if self.cfg.use_cache and cacheable:
-                page = self.cache.get(addr)
-                if page is not None and len(page) >= size:
-                    self.stats.cache_hits += 1
-                    self.clock.advance(self.cost.dram_ns)
-                    out[i] = bytes(page[:size])
+        append = remote.append
+        wbuf_get = h.wbuf.get
+        use_cache = self.cfg.use_cache and cacheable
+        hits = 0
+        staged_hits = 0
+        if use_cache:
+            # inlined PageCache.get: same probe/recency/counter semantics,
+            # without a method call per request (this loop runs once per
+            # key per tree level on the batched read path)
+            cache = self.cache
+            pages_get = cache.pages.get
+            cpos = cache._addr_pos
+            cticks = cache._ticks
+            ctick = cache.tick
+            c_hits = 0
+            c_miss = 0
+            wbuf_get = wbuf_get if h.wbuf else None  # skip probe when empty
+            for i, (addr, size) in enumerate(reqs):
+                if wbuf_get is not None:
+                    staged = wbuf_get(addr)
+                    if staged is not None and len(staged) >= size:
+                        out[i] = bytes(staged[:size])
+                        staged_hits += 1
+                        continue
+                ctick += 1
+                page = pages_get(addr)
+                if page is None:
+                    c_miss += 1
+                else:
+                    c_hits += 1
+                    cticks[cpos[addr]] = ctick
+                    if len(page) >= size:
+                        hits += 1
+                        out[i] = bytes(page[:size])
+                        continue
+                append((i, addr, size))
+            cache.tick = ctick
+            cache.hits += c_hits
+            cache.misses += c_miss
+            self.stats.cache_hits += hits
+            self.stats.cache_misses += n - staged_hits - hits
+            if hits:
+                self.clock.advance(self.cost.dram_ns * hits)
+        else:
+            for i, (addr, size) in enumerate(reqs):
+                staged = wbuf_get(addr)
+                if staged is not None and len(staged) >= size:
+                    out[i] = bytes(staged[:size])
+                    staged_hits += 1
                     continue
-                self.stats.cache_misses += 1
-            remote.append((i, addr, size))
+                append((i, addr, size))
         if remote:
             fetched = self._doorbell_wave(remote, cacheable=cacheable,
                                           target=self._read_target(h))
@@ -674,17 +751,20 @@ class FrontEnd:
             return [self.read(h, a, s, cacheable=cacheable) for a, s in reqs]
         out: List[Optional[bytes]] = [None] * len(reqs)
         remote: List[Tuple[int, int, int]] = []
+        append = remote.append
+        wbuf_get = h.wbuf.get
+        peek = self.cache.pages.get if self.cfg.use_cache else None
         for i, (addr, size) in enumerate(reqs):
-            staged = h.wbuf.get(addr)
+            staged = wbuf_get(addr)
             if staged is not None and len(staged) >= size:
                 out[i] = bytes(staged[:size])
                 continue
-            if self.cfg.use_cache:
-                page = self.cache.peek(addr)
+            if peek is not None:
+                page = peek(addr)
                 if page is not None and len(page) >= size:
                     out[i] = bytes(page[:size])
                     continue
-            remote.append((i, addr, size))
+            append((i, addr, size))
         if remote:
             fetched = self._doorbell_wave(remote, cacheable=cacheable,
                                           target=self._read_target(h))
@@ -1036,7 +1116,7 @@ def _update_or_put(self: PageCache, addr: int, data: bytes) -> None:
     page = self.pages.get(addr)
     if page is not None and len(page) == len(data):
         self.pages[addr] = bytearray(data)
-        self.last_used[addr] = self.tick
+        self.touch(addr)
     else:
         self.put(addr, data)
 

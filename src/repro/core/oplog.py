@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import struct
 from collections import OrderedDict
-from typing import Iterable, List, NamedTuple
+from typing import Iterable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -67,6 +67,73 @@ def fletcher64(data: bytes) -> int:
         s2 = (s2 + np.sum(c1, dtype=np.uint64)) % _MOD
         s1 = c1[-1] % _MOD if len(c1) else s1
     return int((s2 << np.uint64(32)) | s1)
+
+
+def fletcher64_segments(bodies: List[bytes]) -> List[int]:
+    """Fletcher-64 of many byte strings in ONE vectorized pass.
+
+    Each body is zero-padded to whole 32-bit words and concatenated; two
+    mod-M prefix sums over the shared word stream then yield every
+    segment's sums by gather-subtract:
+
+        s1[a:b) = (C1[b] - C1[a]) mod M
+        s2[a:b) = (b * s1[a:b) - (Ciw[b] - Ciw[a])) mod M
+
+    with Ciw = cumsum(i * w_i mod M) over *global* word indices i — the
+    Fletcher weight of word i inside segment [a, b) is b - i, so the
+    weighted sum telescopes to b * sum(w) - sum(i * w).  All intermediates
+    stay exact in uint64 (words < 2**32, each i*w term reduced mod M before
+    the cumsum).  Bit-identical to :func:`fletcher64` per body; this is the
+    wave-batched checksum path of ``decode_txs`` — one pass per log scan
+    instead of one Python-level checksum per transaction.
+    """
+    if not bodies:
+        return []
+    padded = [b + b"\x00" * ((-len(b)) % 4) for b in bodies]
+    lens = np.array([len(p) >> 2 for p in padded], dtype=np.int64)
+    words = np.frombuffer(b"".join(padded), dtype="<u4").astype(np.uint64)
+    ends = np.cumsum(lens)
+    starts = ends - lens
+    c1 = np.zeros(len(words) + 1, dtype=np.uint64)
+    np.cumsum(words, out=c1[1:])
+    idx = np.arange(len(words), dtype=np.uint64)
+    ciw = np.zeros(len(words) + 1, dtype=np.uint64)
+    np.cumsum((idx % _MOD) * (words % _MOD) % _MOD, out=ciw[1:])
+    s1 = (c1[ends] - c1[starts]) % _MOD
+    t2 = (ciw[ends] - ciw[starts]) % _MOD
+    s2 = ((ends.astype(np.uint64) % _MOD) * s1 + _MOD - t2) % _MOD
+    return ((s2 << np.uint64(32)) | s1).tolist()
+
+
+def _good_tx_prefix(buf, marks) -> int:
+    """How many leading transactions of a scanned log verify?
+
+    ``marks`` holds one ``(body_start, commit_off, csum)`` per commit record
+    in log order.  Bodies this process just encoded resolve by dict probe
+    (``_CSUM_CACHE``); the rest are checksummed together in one
+    :func:`fletcher64_segments` pass — the scan never checksums
+    transaction-by-transaction.
+    """
+    sums: List[Optional[int]] = [None] * len(marks)
+    need_j: List[int] = []
+    need_b: List[bytes] = []
+    for j, (a, b, _) in enumerate(marks):
+        body = bytes(buf[a:b])
+        got = _CSUM_CACHE.get(body)
+        if got is None:
+            need_j.append(j)
+            need_b.append(body)
+        else:
+            sums[j] = got
+    if need_b:
+        for j, s in zip(need_j, fletcher64_segments(need_b)):
+            sums[j] = s
+    good = 0
+    for (_, _, csum), got in zip(marks, sums):
+        if got != csum:
+            break  # torn / corrupt tail: discard from here on
+        good += 1
+    return good
 
 
 class MemLog(NamedTuple):
@@ -167,6 +234,43 @@ def _uniform_run(arr: "np.ndarray", n: int, i: int, stride: int,
     return max(1, int(np.argmin(ok)))
 
 
+def _pattern_run2(arr: "np.ndarray", n: int, i: int, flag: int,
+                  hdr: int, len_off: int, lA: int) -> Tuple[int, int]:
+    """How many consecutive (lenA, lenB) record *pairs* start at `i`?
+
+    The uniform-run detector stalls on the hash/tree write streams, which
+    strictly alternate node writes with 8-byte head/pointer writes (run
+    length ~1).  A period-2 pattern covers those: probe record B right
+    after A, then validate whole pairs with strided compares at period
+    sA + sB.  Returns ``(pairs, lenB)`` — 0 pairs when no alternating
+    pattern is present or the vector setup wouldn't pay for itself.
+    """
+    sA = hdr + lA
+    j = i + sA
+    if j + hdr > n or arr[j] != flag:
+        return 0, 0
+    lB = (
+        int(arr[j + len_off])
+        | (int(arr[j + len_off + 1]) << 8)
+        | (int(arr[j + len_off + 2]) << 16)
+        | (int(arr[j + len_off + 3]) << 24)
+    )
+    p = sA + hdr + lB
+    kmax = (n - i) // p
+    if kmax < 8:
+        return 0, 0
+    kmax = min(kmax, 1 << 14)
+    offs = i + p * np.arange(kmax, dtype=np.intp)
+    ok = (arr[offs] == flag) & (arr[offs + sA] == flag)
+    for b, byte in enumerate(lA.to_bytes(4, "little")):
+        ok &= arr[offs + len_off + b] == byte
+    for b, byte in enumerate(lB.to_bytes(4, "little")):
+        ok &= arr[offs + sA + len_off + b] == byte
+    if ok.all():
+        return kmax, lB
+    return int(np.argmin(ok)), lB
+
+
 def decode_txs(buf: bytes) -> tuple[List[List[MemLog]], int]:
     """Decode a log area into committed transactions.
 
@@ -175,8 +279,9 @@ def decode_txs(buf: bytes) -> tuple[List[List[MemLog]], int]:
     as the paper's recovery protocol validates the last transaction's
     checksum after restart.
     """
-    txs: List[List[MemLog]] = []
-    consumed = 0
+    pend: List[List[MemLog]] = []
+    marks: List[Tuple[int, int, int]] = []
+    ends: List[int] = []
     i = 0
     cur: List[MemLog] = []
     tx_start = 0
@@ -209,18 +314,126 @@ def decode_txs(buf: bytes) -> tuple[List[List[MemLog]], int]:
             if i + 9 > n:
                 break
             (csum,) = struct.unpack_from("<Q", buf, i + 1)
-            body = bytes(buf[tx_start:i])
-            cached = _CSUM_CACHE.get(body)
-            if (fletcher64(body) if cached is None else cached) != csum:
-                break  # torn / corrupt tail: discard
             i += 9
-            txs.append(cur)
+            pend.append(cur)
+            marks.append((tx_start, i - 9, csum))
+            ends.append(i)
             cur = []
             tx_start = i
-            consumed = i
         else:
             break  # unwritten region (zeros) — end of log
-    return txs, consumed
+    # checksums are validated after the scan, in one batched pass — a bad
+    # commit truncates the result exactly where the per-tx check would have
+    good = _good_tx_prefix(buf, marks)
+    return pend[:good], (ends[good - 1] if good else 0)
+
+
+def decode_txs_columnar(
+    buf: bytes,
+) -> tuple["np.ndarray", "np.ndarray", "np.ndarray", int, int]:
+    """Columnar ``decode_txs`` for the backend apply path.
+
+    Returns ``(addrs, offs, lens, n_txs, consumed)``: one int64 column each
+    of entry address, data offset *into buf*, and data length — no per-entry
+    ``MemLog`` objects, so a flush of thousands of same-sized node writes
+    decodes as a handful of reshapes.  Checksums are validated in one
+    batched :func:`fletcher64_segments` pass; entries past the first bad
+    commit are dropped, matching :func:`decode_txs` exactly.
+    """
+    n = len(buf)
+    arr = np.frombuffer(buf, dtype=np.uint8)
+    parts: List[Tuple["np.ndarray", "np.ndarray", "np.ndarray"]] = []
+    sa: List[int] = []  # pending scalar records, flushed around vector runs
+    so: List[int] = []
+    sl: List[int] = []
+
+    def flush_scalars() -> None:
+        if sa:
+            parts.append((np.array(sa, dtype=np.int64),
+                          np.array(so, dtype=np.int64),
+                          np.array(sl, dtype=np.int64)))
+            sa.clear()
+            so.clear()
+            sl.clear()
+
+    marks: List[Tuple[int, int, int]] = []
+    counts: List[int] = []  # entries decoded up to each commit
+    ends: List[int] = []
+    total = 0
+    i = 0
+    tx_start = 0
+    while i < n:
+        flag = buf[i]
+        if flag == FLAG_MEM:
+            if i + 13 > n:
+                break
+            _, addr, length = struct.unpack_from("<BQI", buf, i)
+            if i + 13 + length > n:
+                break
+            stride = 13 + length
+            run = 1
+            if n >= 64:
+                run = _uniform_run(arr, n, i, stride, FLAG_MEM, 9, length)
+            if run > 1:
+                flush_scalars()
+                rec = arr[i : i + run * stride].reshape(run, stride)
+                parts.append((
+                    rec[:, 1:9].copy().view("<u8")[:, 0].astype(np.int64),
+                    i + 13 + stride * np.arange(run, dtype=np.int64),
+                    np.full(run, length, dtype=np.int64),
+                ))
+                total += run
+                i += run * stride
+                continue
+            pairs, len_b = (_pattern_run2(arr, n, i, FLAG_MEM, 13, 9, length)
+                            if n >= 64 else (0, 0))
+            if pairs > 1:
+                flush_scalars()
+                stride_b = 13 + len_b
+                period = stride + stride_b
+                offs = i + period * np.arange(pairs, dtype=np.int64)
+                byte8 = np.arange(1, 9, dtype=np.int64)
+                addr_a = arr[offs[:, None] + byte8].view("<u8")[:, 0]
+                addr_b = arr[(offs + stride)[:, None] + byte8].view("<u8")[:, 0]
+                addrs2 = np.empty(2 * pairs, dtype=np.int64)
+                addrs2[0::2] = addr_a
+                addrs2[1::2] = addr_b
+                offs2 = np.empty(2 * pairs, dtype=np.int64)
+                offs2[0::2] = offs + 13
+                offs2[1::2] = offs + stride + 13
+                lens2 = np.empty(2 * pairs, dtype=np.int64)
+                lens2[0::2] = length
+                lens2[1::2] = len_b
+                parts.append((addrs2, offs2, lens2))
+                total += 2 * pairs
+                i += pairs * period
+            else:
+                sa.append(addr)
+                so.append(i + 13)
+                sl.append(length)
+                total += 1
+                i += stride
+        elif flag == FLAG_COMMIT:
+            if i + 9 > n:
+                break
+            (csum,) = struct.unpack_from("<Q", buf, i + 1)
+            i += 9
+            marks.append((tx_start, i - 9, csum))
+            counts.append(total)
+            ends.append(i)
+            tx_start = i
+        else:
+            break  # unwritten region (zeros) — end of log
+    flush_scalars()
+    good = _good_tx_prefix(buf, marks)
+    keep = counts[good - 1] if good else 0
+    if parts:
+        addrs = np.concatenate([p[0] for p in parts])[:keep]
+        offs = np.concatenate([p[1] for p in parts])[:keep]
+        lens = np.concatenate([p[2] for p in parts])[:keep]
+    else:
+        addrs = offs = lens = np.empty(0, dtype=np.int64)
+    return addrs, offs, lens, good, (ends[good - 1] if good else 0)
 
 
 def encode_oplog(entry: OpLog) -> bytes:

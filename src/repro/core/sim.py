@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class CostModel:
@@ -193,6 +195,107 @@ class Link:
         over_m = max(0.0, self.msgs_in_epoch[e] - cap_msgs) * self.cost.nic_msg_ns
         self.busy_total += service
         return start_ns + service + queue_delay + max(over_b, over_m)
+
+    def transfer_many(self, start_ns: float, gaps, sizes):
+        """Sequential dependent transfers, vectorized per epoch.
+
+        Item ``i`` begins ``gaps[i]`` ns after item ``i-1`` completes (item 0
+        after ``start_ns``); returns the array of completion times.  This is
+        the doorbell-wave inner loop: all the capacity accounting of calling
+        :meth:`transfer` in a Python loop, but the common case — a whole wave
+        landing inside one 50µs epoch — is a handful of numpy ops (cumsum of
+        bucket fill, vectorized queue/overflow delay, cumsum of completion
+        increments).  Chunks that cross an epoch boundary fall back to the
+        scalar path for the boundary item, then re-vectorize.
+        """
+        n = len(sizes)
+        if n <= 48:
+            # small wave: a fully inlined scalar walk of the same math is
+            # ~2x cheaper than the vector path's array temporaries (the
+            # numpy setup only pays off once a wave has O(100) chunks)
+            cost = self.cost
+            bpns = cost.bytes_per_ns
+            nic = cost.nic_msg_ns
+            epoch = self.epoch
+            cap_b = bpns * epoch
+            cap_m = epoch / nic
+            b_in = self.bytes_in_epoch
+            m_in = self.msgs_in_epoch
+            if hasattr(gaps, "tolist"):
+                gaps = gaps.tolist()
+            out = np.empty(n, dtype=np.float64)
+            busy = 0.0
+            cur = start_ns
+            for i in range(n):
+                s0 = cur + gaps[i]
+                e = int(s0 // epoch)
+                if e > self._hi_epoch:
+                    self._advance_horizon(e)
+                b = b_in.get(e, 0.0) + sizes[i]
+                m = m_in.get(e, 0.0) + 1.0
+                b_in[e] = b
+                m_in[e] = m
+                util = b / cap_b
+                um = m / cap_m
+                if um > util:
+                    util = um
+                if util > 0.95:
+                    util = 0.95
+                service = sizes[i] / bpns + nic
+                busy += service
+                over_b = (b - cap_b) / bpns
+                over_m = (m - cap_m) * nic
+                over = over_b if over_b > over_m else over_m
+                if over < 0.0:
+                    over = 0.0
+                cur = s0 + service + service * util / (1.0 - util) + over
+                out[i] = cur
+            self.busy_total += busy
+            return out
+        gaps = np.asarray(gaps, dtype=np.float64)
+        sizes_f = np.asarray(sizes, dtype=np.float64)
+        out = np.empty(n, dtype=np.float64)
+        cost = self.cost
+        bpns = cost.bytes_per_ns
+        cap_b = bpns * self.epoch
+        cap_m = self.epoch / cost.nic_msg_ns
+        cur = start_ns
+        i = 0
+        while i < n:
+            s0 = cur + gaps[i]
+            e = int(s0 // self.epoch)
+            if e > self._hi_epoch:
+                self._advance_horizon(e)
+            bs = sizes_f[i:]
+            gs = gaps[i:]
+            b0 = self.bytes_in_epoch.get(e, 0.0)
+            m0 = self.msgs_in_epoch.get(e, 0.0)
+            bytes_cum = b0 + np.cumsum(bs)
+            msgs_cum = m0 + np.arange(1.0, len(bs) + 1.0)
+            util = np.minimum(
+                0.95, np.maximum(bytes_cum / cap_b, msgs_cum / cap_m)
+            )
+            service = bs / bpns + cost.nic_msg_ns
+            delay = service * util / (1.0 - util)
+            over = np.maximum(
+                np.maximum(0.0, bytes_cum - cap_b) / bpns,
+                np.maximum(0.0, msgs_cum - cap_m) * cost.nic_msg_ns,
+            )
+            ends = cur + np.cumsum(gs + service + delay + over)
+            starts = ends - (service + delay + over)
+            lim = (e + 1) * self.epoch
+            if starts[-1] < lim:
+                take = len(bs)
+            else:
+                # starts[0] == s0 < lim by construction of `e`, so take >= 1
+                take = max(1, int(np.searchsorted(starts, lim)))
+            self.bytes_in_epoch[e] = float(bytes_cum[take - 1])
+            self.msgs_in_epoch[e] = m0 + take
+            self.busy_total += float(np.sum(service[:take]))
+            out[i : i + take] = ends[:take]
+            cur = float(ends[take - 1])
+            i += take
+        return out
 
     def reset(self) -> None:
         self.bytes_in_epoch.clear()

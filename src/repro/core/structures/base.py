@@ -19,6 +19,8 @@ import contextlib
 import struct
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from ..frontend import FrontEnd, StructHandle
 from ..oplog import OpLog
 
@@ -61,6 +63,16 @@ def mix64(x: int) -> int:
     x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
     x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
     return x ^ (x >> 31)
+
+
+def mix64_np(x: "np.ndarray") -> "np.ndarray":
+    """Vectorized splitmix64 over a uint64 column — bit-identical to
+    :func:`mix64` per element (numpy uint64 arithmetic wraps mod 2**64
+    exactly like the Python version's masking)."""
+    x = x + np.uint64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
 
 
 class RemoteStructure:

@@ -16,6 +16,8 @@ import struct
 from bisect import bisect_left, insort
 from typing import List, Optional, Tuple
 
+import numpy as np
+
 from ..frontend import FrontEnd
 from .base import RemoteStructure
 
@@ -124,9 +126,17 @@ class RemoteBST(RemoteStructure):
                 [(addr, NODE_SIZE) for _, _, addr, _ in frontier],
                 cacheable=depth <= self.cache_level_thr,
             )
+            # one columnar decode for the whole level: every node is the
+            # same 4x int64 record, so a single frombuffer view replaces a
+            # struct.unpack per node (addresses fit in int64)
+            cols = np.frombuffer(b"".join(reads), dtype="<i8").reshape(-1, 4)
+            ks = cols[:, 0].tolist()
+            vs = cols[:, 1].tolist()
+            ls = cols[:, 2].tolist()
+            rs = cols[:, 3].tolist()
             nxt: List[Tuple[int, int, int, int]] = []
-            for (b, e, _, depth), raw in zip(frontier, reads):
-                k, v, l, r = NODE.unpack(raw)
+            for j, (b, e, _, depth) in enumerate(frontier):
+                k, v, l, r = ks[j], vs[j], ls[j], rs[j]
                 mid_lo = bisect_left(skeys, k, b, e)
                 mid_hi = mid_lo
                 while mid_hi < e and skeys[mid_hi] == k:

@@ -14,14 +14,22 @@ from __future__ import annotations
 import struct
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from ..frontend import FrontEnd
-from .base import RemoteStructure, mix64, wave_prefetch
+from .base import RemoteStructure, mix64, mix64_np
 
 OP_PUT = 1
 OP_DEL = 2
 
 NODE = struct.Struct("<qqQ")  # key, value, next
 NODE_SIZE = NODE.size
+
+#: columnar view of a wave of chain nodes (one np.frombuffer over the
+#: concatenated node bytes instead of one struct.unpack per node)
+NODE_DT = np.dtype([("k", "<i8"), ("v", "<i8"), ("n", "<u8")])
+
+_PTR = struct.Struct("<Q")
 
 WAVE = 2048  # max independent reads rung with one doorbell
 
@@ -43,6 +51,12 @@ class RemoteHashTable(RemoteStructure):
 
     def _bucket_addr(self, key: int) -> int:
         return self.base + (mix64(key & 0xFFFFFFFFFFFFFFFF) % self.n_buckets) * 8
+
+    def _bucket_addrs(self, keys: List[int]) -> List[int]:
+        """Vectorized ``_bucket_addr`` for a whole batch (one numpy pass)."""
+        ks = np.array([k & 0xFFFFFFFFFFFFFFFF for k in keys], dtype=np.uint64)
+        addrs = self.base + (mix64_np(ks) % np.uint64(self.n_buckets)) * np.uint64(8)
+        return addrs.tolist()
 
     def _read_ptr(self, addr: int) -> int:
         return struct.unpack("<Q", self.fe.read(self.h, addr, 8))[0]
@@ -71,23 +85,25 @@ class RemoteHashTable(RemoteStructure):
         (``read_many`` deduplicates shared buckets/nodes).  A single key
         degrades to the exact serial pointer chase."""
         out: List[Optional[int]] = [None] * len(keys)
-        baddrs = sorted({self._bucket_addr(k) for k in keys})
-        heads = dict(
-            zip(baddrs, self.fe.read_many(self.h, [(a, 8) for a in baddrs]))
-        )
+        key_baddrs = self._bucket_addrs(keys)
+        baddrs = sorted(set(key_baddrs))
+        raws = self.fe.read_many(self.h, [(a, 8) for a in baddrs])
+        ptrs = np.frombuffer(b"".join(raws), dtype="<u8").tolist()
+        heads = dict(zip(baddrs, ptrs))
         cursors: Dict[int, int] = {}
-        for i, k in enumerate(keys):
-            (ptr,) = struct.unpack("<Q", heads[self._bucket_addr(k)])
+        for i, a in enumerate(key_baddrs):
+            ptr = heads[a]
             if ptr:
                 cursors[i] = ptr
         while cursors:
             addrs = sorted(set(cursors.values()))
-            raws = dict(
-                zip(addrs, self.fe.read_many(self.h, [(a, NODE_SIZE) for a in addrs]))
-            )
+            raws = self.fe.read_many(self.h, [(a, NODE_SIZE) for a in addrs])
+            rec = np.frombuffer(b"".join(raws), dtype=NODE_DT)
+            nodes = dict(zip(addrs, zip(rec["k"].tolist(), rec["v"].tolist(),
+                                        rec["n"].tolist())))
             nxt_cursors: Dict[int, int] = {}
             for i, addr in cursors.items():
-                k, v, nxt = NODE.unpack(raws[addr])
+                k, v, nxt = nodes[addr]
                 if k == keys[i]:
                     out[i] = v
                 elif nxt:
@@ -101,39 +117,158 @@ class RemoteHashTable(RemoteStructure):
                 return [self.get(k) for k in keys]
             return self._lookup(keys)
 
-    def _prefetch_chains(self, keys: List[int]) -> None:
+    def _stage_chains(self, keys: List[int], key_baddrs: List[int]):
         """Warm the cache with every bucket head and chain node the batch's
-        serial apply phase will read — stopping each chain as soon as all of
-        its interested keys are resolved (so no more bytes are prefetched
-        than the serial loop would have read)."""
+        apply phase will read — stopping each chain as soon as all of its
+        interested keys are resolved (so no more bytes are prefetched than
+        the serial loop would have read) — and materialize the fetched
+        nodes as a local decoded view (addr -> (key, value, next), one
+        ``np.frombuffer`` per wave) for the vectorized apply pass."""
         fe, h = self.fe, self.h
         pending: Dict[int, set] = {}
-        for k in keys:
-            pending.setdefault(self._bucket_addr(k), set()).add(k)
+        for k, a in zip(keys, key_baddrs):
+            pending.setdefault(a, set()).add(k)
         baddrs = sorted(pending)
-        heads = fe.prefetch_many(h, [(a, 8) for a in baddrs])
-        cursors: Dict[int, Tuple[int, int]] = {}
-        for a, raw in zip(baddrs, heads):
-            (ptr,) = struct.unpack("<Q", raw)
-            if ptr:
-                cursors[a] = (ptr, NODE_SIZE)
+        raws = fe.prefetch_many(h, [(a, 8) for a in baddrs])
+        ptrs = np.frombuffer(b"".join(raws), dtype="<u8").tolist()
+        heads: Dict[int, int] = dict(zip(baddrs, ptrs))
+        cursors: Dict[int, int] = {a: p for a, p in heads.items() if p}
+        view: Dict[int, Tuple[int, int, int]] = {}
+        while cursors:
+            addrs = sorted(set(cursors.values()))
+            raws = fe.prefetch_many(h, [(a, NODE_SIZE) for a in addrs])
+            rec = np.frombuffer(b"".join(raws), dtype=NODE_DT)
+            view.update(zip(addrs, zip(rec["k"].tolist(), rec["v"].tolist(),
+                                       rec["n"].tolist())))
+            nxt: Dict[int, int] = {}
+            for bucket, cur in cursors.items():
+                want = pending[bucket]
+                while cur and want:
+                    node = view.get(cur)
+                    if node is None:
+                        nxt[bucket] = cur  # next wave fetches it
+                        break
+                    want.discard(node[0])
+                    cur = node[2]
+            cursors = nxt
+        return heads, view
 
-        def advance(bucket: int, raw: bytes) -> Optional[Tuple[int, int]]:
-            k, _, nxt = NODE.unpack(raw)
-            pending[bucket].discard(k)
-            if nxt and pending[bucket]:
-                return (nxt, NODE_SIZE)
-            return None
+    def _apply_puts(self, pairs, key_baddrs, heads, view) -> None:
+        """Apply a put batch against the staged local view: the chain walk
+        reads decoded columns instead of calling ``fe.read`` per node, while
+        every simulated charge, cache/recency mutation, stat, op-log entry,
+        and staged write byte matches the serial ``_put_base`` loop exactly
+        (the arena stays byte-identical; see tests/test_vectorized_apply)."""
+        fe, h = self.fe, self.h
+        cfg, cost, st = fe.cfg, fe.cost, fe.stats
+        cache = fe.cache
+        cache_get = cache.get
+        upd = cache.update_or_put
+        wbuf = h.wbuf
+        clock = fe.clock
+        cpu_node = cfg.cpu_node_ns
+        dram = cost.dram_ns
+        pack = NODE.pack
+        pack_ptr = _PTR.pack
+        enc = self.encode_args
+        op_begin, op_commit = fe.op_begin, fe.op_commit
+        # deferred clock charges: pure adds, flushed before any call that
+        # posts a transfer (alloc RPC, cache-miss round, op cadence flush)
+        acc = 0.0
+        busy = 0.0
 
-        wave_prefetch(fe, h, cursors, advance)
+        def charge_read(addr: int, size: int) -> None:
+            # the charge-side mirror of fe.read: write buffer -> cache ->
+            # remote round; the *value* comes from the local view
+            nonlocal acc, busy
+            busy += cpu_node
+            if addr in wbuf:
+                acc += cpu_node
+                return
+            page = cache_get(addr)
+            if page is not None and len(page) >= size:
+                st.cache_hits += 1
+                acc += cpu_node + dram
+                return
+            st.cache_misses += 1
+            clock.advance(acc + cpu_node)
+            fe.busy_ns += busy
+            acc = 0.0
+            busy = 0.0
+            tgt = fe._read_target(h)
+            data = tgt.fetch(addr, size)
+            st.rdma_reads += 1
+            st.bytes_read += size
+            if tgt.is_replica:
+                st.replica_reads += 1
+            fe._round(size, link=tgt.link)
+            if tgt.cache_safe:
+                cache.put(addr, data)
+
+        for i, (key, value) in enumerate(pairs):
+            op_begin(h, OP_PUT, enc(key, value))
+            baddr = key_baddrs[i]
+            charge_read(baddr, 8)
+            head = heads[baddr]
+            cur = head
+            found = False
+            while cur:
+                charge_read(cur, NODE_SIZE)
+                node = view.get(cur)
+                if node is None:
+                    # defensive: resolve from the live overlay (charges for
+                    # this visit are already accounted above)
+                    raw = wbuf.get(cur) or cache.peek(cur)
+                    if raw is None:
+                        raw = fe.backend.read(cur, NODE_SIZE)
+                    node = NODE.unpack(bytes(raw[:NODE_SIZE]))
+                    view[cur] = node
+                nk, _, nn = node
+                if nk == key:
+                    data = pack(key, value, nn)
+                    if cur in wbuf:
+                        st.memlogs_coalesced += 1
+                    wbuf[cur] = data
+                    upd(cur, data)
+                    acc += dram
+                    view[cur] = (key, value, nn)
+                    found = True
+                    break
+                cur = nn
+            if not found:
+                clock.advance(acc)
+                fe.busy_ns += busy
+                acc = 0.0
+                busy = 0.0
+                addr = fe.alloc(NODE_SIZE)
+                data = pack(key, value, head)
+                if addr in wbuf:
+                    st.memlogs_coalesced += 1
+                wbuf[addr] = data
+                upd(addr, data)
+                hb = pack_ptr(addr)
+                if baddr in wbuf:
+                    st.memlogs_coalesced += 1
+                wbuf[baddr] = hb
+                upd(baddr, hb)
+                acc += dram + dram
+                view[addr] = (key, value, head)
+                heads[baddr] = addr
+            if acc:
+                clock.advance(acc)
+                fe.busy_ns += busy
+                acc = 0.0
+                busy = 0.0
+            op_commit(h)
 
     def put_many(self, pairs: List[Tuple[int, int]]) -> None:
-        """Vector put: one doorbell wave per chain level to warm the cache,
-        then the exact serial apply per pair — so the structure state (and
-        the whole back-end arena) is byte-identical to the serial loop while
-        the network charges are batched.  The write wave batches the apply
-        phase's posted writes too: node-slab refill RPCs and op-log group
-        commits post into shared doorbells with one completion fence."""
+        """Vector put: one doorbell wave per chain level stages the touched
+        chains as a local decoded view, then the apply pass walks/updates
+        that view in one pass — the structure state (and the whole back-end
+        arena) is byte-identical to the serial loop while the network
+        charges are batched.  The write wave batches the apply phase's
+        posted writes too: node-slab refill RPCs and op-log group commits
+        post into shared doorbells with one completion fence."""
         cfg = self.fe.cfg
         with self.op_window("put_many", len(pairs)):
             if not (cfg.use_batch and cfg.use_cache) or len(pairs) <= 1:
@@ -141,11 +276,10 @@ class RemoteHashTable(RemoteStructure):
                     self.put(k, v)
                 return
             with self.fe.write_wave(linger=True):
-                self._prefetch_chains([k for k, _ in pairs])
-                for k, v in pairs:
-                    self.fe.op_begin(self.h, OP_PUT, self.encode_args(k, v))
-                    self._put_base(k, v)
-                    self.fe.op_commit(self.h)
+                keys = [k for k, _ in pairs]
+                key_baddrs = self._bucket_addrs(keys)
+                heads, view = self._stage_chains(keys, key_baddrs)
+                self._apply_puts(pairs, key_baddrs, heads, view)
 
     def delete(self, key: int) -> bool:
         self.fe.op_begin(self.h, OP_DEL, self.encode_args(key))

@@ -18,6 +18,8 @@ import random
 import struct
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from ..frontend import FrontEnd
 from .base import RemoteStructure
 
@@ -130,18 +132,25 @@ class RemoteSkipList(RemoteStructure):
         Returns the found values (all-None in prefetch mode)."""
         fe, h = self.fe, self.h
         reader = fe.prefetch_many if prefetch else fe.read_many
-        head = _Node.decode(reader(h, [(self.head_addr, NODE_SIZE)])[0])
+        # columnar node rows: [key, value, height, next_0 .. next_13] — one
+        # np.frombuffer per wave replaces a struct.unpack per node visit
+        # (each fetched node is decoded once, however many keys hop it)
+        _row_w = 3 + MAX_LEVEL
+        head_row = np.frombuffer(
+            reader(h, [(self.head_addr, NODE_SIZE)])[0], dtype="<i8"
+        ).tolist()
         out: List[Optional[int]] = [None] * len(keys)
-        # per-key walk state: current node's next-pointer array + level
+        # per-key walk state: current node's decoded row + level
         state: Dict[int, List] = {
-            i: [head.nexts, MAX_LEVEL - 1] for i in range(len(keys))
+            i: [head_row, MAX_LEVEL - 1] for i in range(len(keys))
         }
 
         def next_req(i: int) -> Optional[int]:
-            nexts, lvl = state[i]
+            row, lvl = state[i]
             while lvl >= 0:
-                if nexts[lvl]:
-                    return nexts[lvl]
+                nxt = row[3 + lvl]
+                if nxt:
+                    return nxt
                 lvl -= 1
                 state[i][1] = lvl
             return None
@@ -153,19 +162,25 @@ class RemoteSkipList(RemoteStructure):
                 cursors[i] = req
         while cursors:
             addrs = sorted(set(cursors.values()))
-            raws = dict(zip(addrs, reader(h, [(a, NODE_SIZE) for a in addrs])))
+            raws = reader(h, [(a, NODE_SIZE) for a in addrs])
+            rows = np.frombuffer(b"".join(raws), dtype="<i8").reshape(
+                -1, _row_w
+            ).tolist()
+            fetched = dict(zip(addrs, rows))
             nxt_cursors: Dict[int, int] = {}
             for i, addr in cursors.items():
                 req: Optional[int] = addr
+                ki = keys[i]
                 # hop through every node this wave already fetched
-                while req is not None and req in raws:
-                    node = _Node.decode(raws[req])
-                    if not prefetch and node.key == keys[i]:
-                        out[i] = node.value
+                while req is not None and req in fetched:
+                    row = fetched[req]
+                    rk = row[0]
+                    if not prefetch and rk == ki:
+                        out[i] = row[1]
                         req = None
                         break
-                    if node.key < keys[i]:
-                        state[i][0] = node.nexts       # move right
+                    if rk < ki:
+                        state[i][0] = row              # move right
                     else:
                         state[i][1] -= 1               # descend
                     req = next_req(i)

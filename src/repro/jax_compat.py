@@ -1,0 +1,65 @@
+"""Version-compat shims for the top-level jax mesh/shard_map API surface.
+
+Newer jax exposes ``jax.set_mesh`` and ``jax.shard_map``; the pinned jax
+here (0.4.x) only has the ``jax.experimental.shard_map`` spelling and the
+ambient-mesh context manager.  The sharding code and the dry-run tests use
+the new spellings, so — mirroring ``kernels.pallas_compat`` — the gap is
+closed in exactly one place: importing this module (a side effect of
+importing ``repro.models`` / ``repro.training`` / ``repro.launch``) installs
+equivalents onto the jax module when they are missing.
+
+Installed shims:
+
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+    delegates to ``jax.experimental.shard_map.shard_map``, translating the
+    renamed ``check_vma`` kwarg to the old ``check_rep``.
+  * ``jax.set_mesh(mesh)`` returns a context manager entering the mesh as
+    the ambient physical mesh (the 0.4.x ``with mesh:`` semantics; call
+    sites pass explicit NamedShardings, so the ambient mesh only needs to
+    be present, not consulted for placement).
+  * ``jax.lax.axis_size(name)`` falls back to the classic ``psum(1, name)``
+    idiom, which constant-folds to a static int for scalar operands — safe
+    for the shape arithmetic the shard_map bodies do with it.
+
+Both are no-ops when the real APIs exist, so upgrading jax sheds the shims
+automatically.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, **kwargs):
+            if check_vma is not None and "check_rep" not in kwargs:
+                kwargs["check_rep"] = check_vma
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax, "set_mesh"):
+
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax.lax, "axis_size"):
+
+        def axis_size(axis_name):
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+
+_install()

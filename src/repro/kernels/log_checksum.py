@@ -92,6 +92,96 @@ def fletcher32(words: jax.Array, *, interpret: bool = False) -> jax.Array:
     return (s2 << 16) | s1
 
 
+def _wave_kernel(meta_ref, w_ref, out_ref, carry_ref):
+    """Segmented Fletcher-32: one grid walks a whole wave of log streams.
+
+    ``meta[b, 0] == 1`` marks block ``b`` as the first block of a segment
+    (carry resets); ``meta[b, 1] >= 0`` marks the last block, holding the
+    segment's output row.  Between marks the (s1, s2) carry threads through
+    SMEM exactly as in the single-stream kernel.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(meta_ref[step, 0] == 1)
+    def _init():
+        carry_ref[0] = 0
+        carry_ref[1] = 0
+
+    w = w_ref[0]  # [ROWS, LANES] int32, values < 2^16
+    weights = LANES - jax.lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 1)
+
+    def row(rr, carry):
+        s1, s2 = carry
+        wrow = w[rr]
+        rs1 = jnp.sum(wrow)
+        rs2 = jnp.sum(weights[rr] * wrow)
+        s2 = (s2 + LANES * s1 + rs2) % MOD
+        s1 = (s1 + rs1) % MOD
+        return (s1, s2)
+
+    s1, s2 = jax.lax.fori_loop(0, ROWS, row, (carry_ref[0], carry_ref[1]))
+    carry_ref[0] = s1
+    carry_ref[1] = s2
+
+    @pl.when(meta_ref[step, 1] >= 0)
+    def _emit():
+        seg = meta_ref[step, 1]
+        out_ref[seg, 0] = s1
+        out_ref[seg, 1] = s2
+
+
+def fletcher32_wave(chunks, *, interpret: bool = False) -> "np.ndarray":
+    """Checksum a wave of byte strings with ONE ``pallas_call``.
+
+    Each chunk keeps the per-stream padding contract of :func:`fletcher32`
+    (16-bit words, zero-padded to whole 1024-word blocks), so every output
+    equals a standalone ``fletcher32`` of that chunk; the padded streams are
+    concatenated and the kernel resets/emits its SMEM carry at the segment
+    boundaries.  This is the TPU-side analogue of the simulator's batched
+    ``oplog.fletcher64_segments`` decode path — validate a whole wave of
+    transactions per launch instead of one kernel per log entry.  Runs under
+    Pallas interpret mode on CPU; returns a uint32 array, one checksum per
+    chunk.
+    """
+    if not chunks:
+        return np.empty(0, dtype=np.uint32)
+    streams = []
+    blocks = []
+    for c in chunks:
+        if len(c) % 2:
+            c = c + b"\x00"
+        w = np.frombuffer(c, dtype="<u2").astype(np.int32)
+        nb = max(1, -(-len(w) // BLOCK))
+        wp = np.zeros(nb * BLOCK, np.int32)
+        wp[: len(w)] = w
+        streams.append(wp)
+        blocks.append(nb)
+    w = np.concatenate(streams).reshape(-1, ROWS, LANES)
+    meta = np.full((w.shape[0], 2), -1, dtype=np.int32)
+    b0 = 0
+    for seg, nb in enumerate(blocks):
+        meta[b0, 0] = 1
+        meta[b0 + nb - 1, 1] = seg
+        b0 += nb
+    out = pl.pallas_call(
+        _wave_kernel,
+        grid=(w.shape[0],),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, ROWS, LANES), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((len(chunks), 2), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(meta, w)
+    out = np.asarray(out).astype(np.uint32)
+    return (out[:, 1] << 16) | out[:, 0]
+
+
 def fletcher32_padded_np(data: bytes) -> int:
     """Exact numpy mirror of the kernel contract (pad to 1024 words)."""
     pad = (-len(data)) % 2

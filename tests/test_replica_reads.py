@@ -108,8 +108,7 @@ def test_lagging_replica_bytes_never_enter_the_cache():
     for k in range(30):
         ht.put(k, k + 1000)  # stale values now live only on the mirror
     fe.drain(ht.h)
-    fe.cache.pages.clear()  # drop write-through entries: force remote reads
-    fe.cache.last_used.clear()
+    fe.cache.clear()  # drop write-through entries: force remote reads
     with fe.replica_reads(ReadPolicy(mode="mirror", max_staleness_ops=1 << 40)):
         stale = [ht.get(k) for k in range(30)]
     assert stale == list(range(30))  # bounded-stale values, as contracted
@@ -462,3 +461,67 @@ def test_naive_multi_location_op_posts_one_write_wave():
     assert fe.stats.write_waves == 60
     assert fe.stats.wqe_posts == fe.stats.rdma_writes
     assert fe.stats.wqe_posts > fe.stats.write_waves  # real batching happened
+
+
+# ------------------------------------------------------- mirror-routed scans
+def test_items_scan_routes_to_mirrors_under_policy():
+    """A whole-structure scan fans out its leaf reads to mirror endpoints
+    under the read policy — the scan's read wave hits replica arenas, not
+    the primary — and still returns exactly the written contents."""
+    cluster = _mk_cluster(n_blades=2, num_mirrors=1)
+    policy = ReadPolicy(mode="auto", max_staleness_ops=1 << 40)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(cache_bytes=4096), fe_id=0)
+    ht = ShardedHashTable(cfe, "ht", read_policy=policy)
+    model = {k: k * 3 + 1 for k in range(400)}
+    ht.put_many(sorted(model.items()))
+    ht.drain()  # synchronous mirrors: watermarks cover every write
+    before = cfe.aggregate_stats()["replica_reads"]
+    assert sorted(ht.items()) == sorted(model.items())
+    assert cfe.aggregate_stats()["replica_reads"] > before
+    assert not ht._pinned  # the scan released every covered pin
+
+
+def test_scan_with_fresh_pins_stays_on_primary():
+    """A scan touches every key, so one unreleased pin (a local write not
+    yet provably applied on any mirror) keeps that shard's whole scan on
+    the primary — no replica read may serve a scan that could miss this
+    front-end's own writes."""
+    cluster = _mk_cluster(n_blades=2, num_mirrors=1)
+    for be in cluster.blades.values():
+        for m in be.mirrors:
+            m.lag_writes = 1 << 30  # mirrors frozen: pins never release
+    policy = ReadPolicy(mode="auto", max_staleness_ops=1 << 40)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(cache_bytes=4096), fe_id=0)
+    ht = ShardedHashTable(cfe, "ht", read_policy=policy)
+    model = {k: k + 7 for k in range(300)}
+    ht.put_many(sorted(model.items()))
+    assert sorted(ht.items()) == sorted(model.items())  # RYW via primary
+    assert cfe.aggregate_stats()["replica_reads"] == 0
+    # once mirrors catch up, the same scan is free to leave the primary
+    for be in cluster.blades.values():
+        for m in be.mirrors:
+            m.lag_writes = 0
+            m.sync()
+    ht.drain()
+    assert sorted(ht.items()) == sorted(model.items())
+    assert cfe.aggregate_stats()["replica_reads"] > 0
+
+
+def test_range_scan_routes_to_mirrors_under_policy():
+    """range_scan's per-shard leaf-chain walks route through the same
+    mirror read waves and merge to a globally sorted, correct result."""
+    from repro.cluster import ShardedBPTree
+
+    cluster = _mk_cluster(n_blades=2, num_mirrors=1)
+    policy = ReadPolicy(mode="auto", max_staleness_ops=1 << 40)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(cache_bytes=4096), fe_id=0)
+    bt = ShardedBPTree(cfe, "bt", read_policy=policy)
+    model = {k: k * 5 for k in range(0, 900, 3)}
+    for k, v in model.items():
+        bt.insert(k, v)
+    bt.drain()
+    before = cfe.aggregate_stats()["replica_reads"]
+    want = sorted((k, v) for k, v in model.items() if 100 <= k <= 700)
+    assert bt.range_scan(100, 700) == want
+    assert cfe.aggregate_stats()["replica_reads"] > before
+    assert bt.items() == sorted(model.items())
