@@ -1,0 +1,218 @@
+"""Availability under chaos: the fault-injection headline figure.
+
+Panel A (chaos sweep): N seeded random fault schedules (every class in
+``repro.faults.ALL_FAULT_KINDS``, one class guaranteed per schedule in
+round-robin) against random op streams, each checked by the durability
+oracle in :func:`repro.faults.run_chaos_schedule` — acked ops survive
+recovery, unacked ops land whole or not at all, healed state matches a
+fault-free replay of the acked prefix.  The committed record pins
+``durability_violations`` to zero and the auto-promotion count to its
+deterministic baseline (scripts/check_bench.py).
+
+Panel B (recovery): a single durable-config front-end under steady put
+load; mid-run the primary blade's NIC dies silently (completions lost,
+blade alive).  Nothing orchestrates the failover: bounded retries exhaust,
+the per-link breaker opens, the probe fails, and the front-end fences the
+blade and promotes its mirror from the data path.  Reported:
+
+  * ``recovery_ms``  — sim time from fault injection to the promotion
+    completing (breaker threshold x op deadline + backoff + log-tail
+    replay + epoch bump + rebind);
+  * ``throughput_dip_frac`` — 1 - (acked KOPS across the outage window /
+    steady-state KOPS), the availability cost of the self-healing path.
+
+Both are deterministic virtual-time numbers, guarded against the committed
+``BENCH_availability.json`` by scripts/check_bench.py (recovery-time and
+dip ceilings).  Exit status is nonzero on any durability violation, any
+lost committed op, or a sweep that produced no front-end-initiated
+promotion at all.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import sys
+import time
+from typing import Dict, List
+
+from repro.cluster import ClusterFrontEnd, NVMCluster, ShardedHashTable
+from repro.core import FEConfig
+from repro.faults import ALL_FAULT_KINDS, run_chaos_schedule
+
+from .common import add_obs_args, kops, obs_finish, obs_start
+
+KEYSPACE = 1 << 20
+
+
+def run_sweep(n_schedules: int = 200, seed0: int = 0, n_ops: int = 120,
+              n_blades: int = 3, n_faults: int = 6) -> Dict:
+    """Panel A: seeded chaos schedules vs the durability oracle."""
+    out: Dict = {"schedules": n_schedules, "durability_violations": 0,
+                 "auto_promotions": 0, "failovers_initiated": 0,
+                 "acked_ops": 0, "unacked_ops": 0, "op_retries": 0,
+                 "breaker_trips": 0, "degraded_reads": 0}
+    kinds_seen: Dict[str, int] = {}
+    bad: List[str] = []
+    for s in range(n_schedules):
+        # round-robin a guaranteed class so the sweep provably covers the
+        # whole fault surface (pure random draws can miss rare kinds)
+        ensure = (ALL_FAULT_KINDS[s % len(ALL_FAULT_KINDS)],)
+        r = run_chaos_schedule(seed0 + s, n_ops=n_ops, n_blades=n_blades,
+                               n_faults=n_faults, ensure=ensure)
+        out["durability_violations"] += len(r.violations)
+        out["auto_promotions"] += r.promotions
+        out["failovers_initiated"] += r.failovers_initiated
+        out["acked_ops"] += r.acked
+        out["unacked_ops"] += r.failed
+        out["op_retries"] += r.stats.get("op_retries", 0)
+        out["breaker_trips"] += r.stats.get("breaker_trips", 0)
+        out["degraded_reads"] += r.stats.get("degraded_reads", 0)
+        for k, n in r.injected.items():
+            kinds_seen[k] = kinds_seen.get(k, 0) + n
+        if r.violations:
+            bad.append(f"seed {seed0 + s}: {r.violations[0]}")
+    out["fault_kinds_injected"] = len(kinds_seen)
+    out["injected_by_kind"] = dict(sorted(kinds_seen.items()))
+    out["first_violations"] = bad[:5]
+    return out
+
+
+def run_recovery(n_ops: int = 600, preload: int = 150,
+                 kill_at_frac: float = 0.4) -> Dict:
+    """Panel B: silent NIC death mid-load; the data path fences + promotes."""
+    cluster = NVMCluster(n_blades=3, capacity_per_blade=1 << 24,
+                         n_shards=8, num_mirrors=1)
+    cfe = ClusterFrontEnd(
+        cluster, FEConfig.rc(cache_bytes=4096, oplog_pipeline=1), fe_id=0)
+    t = ShardedHashTable(cfe, "av", n_buckets=max(256, preload // 2))
+    rng = random.Random(13)
+    model: Dict[int, int] = {}
+    for k in rng.sample(range(KEYSPACE), preload):
+        t.put(k, k)
+        model[k] = k
+    t.drain()
+
+    t0 = cfe.clock.now
+    kill_at = int(n_ops * kill_at_frac)
+    victim = 1
+    fault_time = healed_time = None
+    for i in range(n_ops):
+        if i == kill_at:
+            # NIC dies: blade stays alive but every completion is lost
+            cluster.blades[victim].link.inject().drop_pending = 1 << 30
+            fault_time = cfe.clock.now
+        k = rng.randrange(KEYSPACE)
+        t.put(k, k + 1)
+        model[k] = k + 1
+        if healed_time is None and cluster.failovers > 0:
+            healed_time = cfe.clock.now
+    t.drain()
+
+    keys = sorted(model)
+    got = dict(zip(keys, t.get_many(keys)))
+    lost = sum(1 for k in keys if got.get(k) != model[k])
+
+    end = cfe.clock.now
+    steady_kops = kops(kill_at, fault_time - t0)
+    if healed_time is None:  # promotion never happened — report the hole
+        return {"recovery_ms": float("inf"), "throughput_dip_frac": 1.0,
+                "steady_kops": steady_kops, "auto_promotions": 0,
+                "failovers_initiated": cfe.failovers_initiated,
+                "lost_committed": lost, "epoch": cluster.directory.epoch}
+    # ops acked inside the outage window (fault -> promotion complete): the
+    # single stalled op pays retries + breaker + probe + fence + promote
+    outage_ns = healed_time - fault_time
+    post_kops = kops(n_ops - kill_at, end - fault_time)
+    dip = max(0.0, 1.0 - post_kops / steady_kops)
+    return {"recovery_ms": outage_ns / 1e6,
+            "throughput_dip_frac": round(dip, 4),
+            "steady_kops": round(steady_kops, 1),
+            "post_fault_kops": round(post_kops, 1),
+            "auto_promotions": cluster.failovers,
+            "failovers_initiated": cfe.failovers_initiated,
+            "lost_committed": lost,
+            "epoch": cluster.directory.epoch}
+
+
+def main(n_schedules: int = 200, n_ops: int = 120, recovery_ops: int = 600,
+         preload: int = 150, seed0: int = 0) -> Dict:
+    wall0 = time.time()
+    sweep = run_sweep(n_schedules=n_schedules, seed0=seed0, n_ops=n_ops)
+    print(f"chaos sweep: {sweep['schedules']} schedules, "
+          f"violations={sweep['durability_violations']} "
+          f"promotions={sweep['auto_promotions']} "
+          f"retries={sweep['op_retries']} "
+          f"breaker_trips={sweep['breaker_trips']} "
+          f"kinds={sweep['fault_kinds_injected']}/{len(ALL_FAULT_KINDS)}")
+    for line in sweep["first_violations"]:
+        print(f"  VIOLATION {line}")
+    rec = run_recovery(n_ops=recovery_ops, preload=preload)
+    print(f"recovery: fence+promote in {rec['recovery_ms']:.2f}ms sim-time, "
+          f"dip={rec['throughput_dip_frac'] * 100:.1f}% "
+          f"(steady {rec['steady_kops']} KOPS), "
+          f"lost_committed={rec['lost_committed']}, "
+          f"promotions={rec['auto_promotions']} "
+          f"(front-end initiated: {rec['failovers_initiated']})")
+    return {"sweep": sweep, "recovery": rec,
+            "wall_clock_seconds": round(time.time() - wall0, 1)}
+
+
+def to_bench_entries(out: Dict, n_schedules: int, n_ops: int,
+                     preload: int) -> List[Dict]:
+    sweep, rec = out["sweep"], out["recovery"]
+    return [
+        {"name": "chaos_sweep",
+         "schedules": sweep["schedules"],
+         "durability_violations": sweep["durability_violations"],
+         "auto_promotions": sweep["auto_promotions"],
+         "failovers_initiated": sweep["failovers_initiated"],
+         "fault_kinds_injected": sweep["fault_kinds_injected"],
+         "op_retries": sweep["op_retries"],
+         "breaker_trips": sweep["breaker_trips"]},
+        {"name": "availability_recovery",
+         "recovery_ms": round(rec["recovery_ms"], 3),
+         "throughput_dip_frac": rec["throughput_dip_frac"],
+         "steady_kops": rec["steady_kops"],
+         "auto_promotions": rec["auto_promotions"],
+         "lost_committed": rec["lost_committed"]},
+        {"name": "availability_bench_meta",
+         "preload": preload,
+         "n_ops": n_ops,
+         "n_schedules": n_schedules,
+         "wall_clock_seconds": out["wall_clock_seconds"]},
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: 40 schedules, full run in seconds")
+    ap.add_argument("--schedules", type=int, default=None,
+                    help="override the schedule count")
+    ap.add_argument("--seed0", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="write the BENCH_availability-format record here")
+    add_obs_args(ap)
+    args = ap.parse_args()
+    obs_start(args)
+    if args.smoke:
+        n_schedules = args.schedules or 40
+        n_ops, recovery_ops, preload = 80, 300, 80
+    else:
+        n_schedules = args.schedules or 200
+        n_ops, recovery_ops, preload = 120, 600, 150
+    out = main(n_schedules=n_schedules, n_ops=n_ops,
+               recovery_ops=recovery_ops, preload=preload, seed0=args.seed0)
+    obs_finish(args)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(to_bench_entries(out, n_schedules, n_ops, preload),
+                      f, indent=2)
+        print(f"wrote {args.json}")
+    sweep, rec = out["sweep"], out["recovery"]
+    if sweep["durability_violations"] or rec["lost_committed"]:
+        sys.exit(1)
+    if not (sweep["auto_promotions"] and rec["auto_promotions"]):
+        sys.exit(1)  # the self-healing path never fired — that's a failure

@@ -26,6 +26,17 @@ not simulated time, so the tolerance is deliberately loose — shared CI boxes
 jitter ±30% run to run; the floor exists to catch the order-of-magnitude
 regressions (a vectorized path silently falling back to the serial loop),
 not scheduler noise.
+
+``BENCH_availability.json`` rows (benchmarks/fig_availability.py) carry
+their own guards: ``durability_violations`` must be ZERO in the fresh run
+(hard invariant, no tolerance), ``auto_promotions`` and
+``fault_kinds_injected`` must not collapse below half the baseline (the
+self-healing path and the fault surface both stayed exercised),
+``recovery_ms`` may not exceed baseline x ``--max-recovery-regress``
+(default 1.25), and ``throughput_dip_frac`` may not exceed baseline +
+``--max-dip-increase`` (default 0.10).  All four are deterministic
+virtual-time numbers, so the tolerances absorb intentional cost-model
+retuning, not noise.
 """
 
 from __future__ import annotations
@@ -35,7 +46,7 @@ import json
 import sys
 
 
-def _load(path: str) -> tuple[dict, dict, dict]:
+def _load(path: str) -> tuple[dict, dict, dict, dict]:
     with open(path) as f:
         entries = json.load(f)
     speedups = {e["name"]: e["speedup_vs_serial"]
@@ -45,7 +56,63 @@ def _load(path: str) -> tuple[dict, dict, dict]:
     meta = next(
         (e for e in entries if str(e.get("name", "")).endswith("_bench_meta")), {}
     )
-    return speedups, wall_ops, meta
+    by_name = {e["name"]: e for e in entries if "name" in e}
+    return speedups, wall_ops, meta, by_name
+
+
+def _check_availability(fresh: dict, base: dict, max_recovery_regress: float,
+                        max_dip_increase: float) -> bool:
+    """Guards for the fig_availability record; returns True on failure."""
+    failed = False
+    fs, bs = fresh.get("chaos_sweep"), base.get("chaos_sweep")
+    if bs is not None:
+        if fs is None:
+            print("check_bench: FAIL chaos_sweep missing from fresh record",
+                  file=sys.stderr)
+            return True
+        v = fs.get("durability_violations", 0)
+        if v:
+            print(f"check_bench: FAIL chaos_sweep: {v} durability violations "
+                  "(must be 0)", file=sys.stderr)
+            failed = True
+        else:
+            print(f"check_bench: chaos_sweep: {fs.get('schedules')} schedules, "
+                  "0 durability violations ok")
+        for key in ("auto_promotions", "fault_kinds_injected"):
+            ref, cur = bs.get(key, 0), fs.get(key, 0)
+            floor = ref * 0.5
+            status = "ok"
+            if cur < floor or (ref > 0 and cur == 0):
+                status = f"FAIL (<{floor:.0f})"
+                failed = True
+            print(f"check_bench: chaos_sweep {key}: baseline {ref} "
+                  f"fresh {cur} {status}")
+    fr, br = fresh.get("availability_recovery"), base.get("availability_recovery")
+    if br is not None:
+        if fr is None:
+            print("check_bench: FAIL availability_recovery missing from fresh "
+                  "record", file=sys.stderr)
+            return True
+        if fr.get("lost_committed", 0):
+            print(f"check_bench: FAIL recovery lost "
+                  f"{fr['lost_committed']} committed ops", file=sys.stderr)
+            failed = True
+        ceil = br["recovery_ms"] * max_recovery_regress
+        status = "ok"
+        if fr["recovery_ms"] > ceil:
+            status = f"FAIL (>{ceil:.2f}ms)"
+            failed = True
+        print(f"check_bench: recovery_ms baseline {br['recovery_ms']:.2f} "
+              f"fresh {fr['recovery_ms']:.2f} {status}")
+        ceil = br["throughput_dip_frac"] + max_dip_increase
+        status = "ok"
+        if fr["throughput_dip_frac"] > ceil:
+            status = f"FAIL (>{ceil:.2f})"
+            failed = True
+        print(f"check_bench: throughput_dip_frac baseline "
+              f"{br['throughput_dip_frac']:.3f} fresh "
+              f"{fr['throughput_dip_frac']:.3f} {status}")
+    return failed
 
 
 def main(argv=None) -> int:
@@ -60,19 +127,29 @@ def main(argv=None) -> int:
                     help="max fractional drop of a row's absolute "
                          "wall_clock_ops_per_sec vs baseline (loose: real "
                          "wall throughput jitters with the host)")
+    ap.add_argument("--max-recovery-regress", type=float, default=1.25,
+                    help="availability guard: max recovery_ms as a multiple "
+                         "of the baseline (deterministic sim-time)")
+    ap.add_argument("--max-dip-increase", type=float, default=0.10,
+                    help="availability guard: max absolute increase of "
+                         "throughput_dip_frac over the baseline")
     args = ap.parse_args(argv)
 
-    fresh, fwall_ops, fmeta = _load(args.fresh)
-    base, bwall_ops, bmeta = _load(args.baseline)
+    fresh, fwall_ops, fmeta, fall = _load(args.fresh)
+    base, bwall_ops, bmeta, ball = _load(args.baseline)
 
-    fsz = (fmeta.get("preload"), fmeta.get("n_ops"))
-    bsz = (bmeta.get("preload"), bmeta.get("n_ops"))
-    if None not in fsz and None not in bsz and fsz != bsz:
+    _SIZE_KEYS = ("preload", "n_ops", "n_schedules")
+    fsz = {k: fmeta[k] for k in _SIZE_KEYS if fmeta.get(k) is not None}
+    bsz = {k: bmeta[k] for k in _SIZE_KEYS if bmeta.get(k) is not None}
+    if fsz and bsz and fsz != bsz:
         print(f"check_bench: size mismatch fresh={fsz} baseline={bsz} — "
               "regenerate the baseline with the same run sizes", file=sys.stderr)
         return 1
 
     failed = False
+    if _check_availability(fall, ball, args.max_recovery_regress,
+                           args.max_dip_increase):
+        failed = True
     for name, ref in sorted(base.items()):
         cur = fresh.get(name)
         if cur is None:

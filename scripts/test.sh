@@ -4,7 +4,10 @@
 #   scripts/test.sh            tier-1 suite, every figure script end to end at
 #                              --smoke sizes (< ~1 min), then the vector-ops
 #                              and cluster replica-read bench-regression
-#                              guards at --quick sizes
+#                              guards at --quick sizes, then the fixed-seed
+#                              chaos smoke (fig_availability) against the
+#                              BENCH_availability.json durability/recovery
+#                              guards
 #   scripts/test.sh --no-bench tier-1 suite only
 #
 # The committed BENCH_vector_ops.json / BENCH_cluster_reads.json baselines
@@ -39,4 +42,9 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench-regression guard: cluster replica reads at --quick sizes =="
     python -m benchmarks.run --quick --only cluster --cluster-json "$scratch/cluster_fresh.json"
     python scripts/check_bench.py "$scratch/cluster_fresh.json" BENCH_cluster_reads.json
+    echo "== chaos smoke: seeded fault schedules vs the durability oracle =="
+    # exits nonzero itself on any durability violation or if the
+    # front-end-initiated fence+promote path never fired
+    python -m benchmarks.fig_availability --smoke --json "$scratch/avail_fresh.json"
+    python scripts/check_bench.py "$scratch/avail_fresh.json" BENCH_availability.json
 fi

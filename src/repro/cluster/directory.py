@@ -31,7 +31,7 @@ from __future__ import annotations
 import struct
 from typing import Dict, List, Optional, Tuple
 
-from ..core.backend import NVMBackend
+from ..core.backend import CrashError, NVMBackend
 from ..core.oplog import fletcher64
 from ..core.structures.base import mix64
 
@@ -159,7 +159,13 @@ class ShardDirectory:
         for be in blades.values():
             if not be.alive:
                 continue
-            be.put_blob(DIRECTORY_NAME, raw)
+            try:
+                be.put_blob(DIRECTORY_NAME, raw)
+            except CrashError:
+                # the blade died mid-write (e.g. a power loss tearing the
+                # blob): its partial copy fails the checksum at bootstrap,
+                # and any one surviving whole copy is enough
+                continue
             landed += 1
         return landed
 
@@ -260,7 +266,10 @@ class LeaseTable:
         for be in blades.values():
             if not be.alive:
                 continue
-            be.put_blob(LEASES_NAME, raw)
+            try:
+                be.put_blob(LEASES_NAME, raw)
+            except CrashError:
+                continue  # died mid-write; torn copy fails the checksum
             landed += 1
         return landed
 

@@ -280,6 +280,7 @@ class ClusterFrontEnd:
         self.epoch = -1  # force a fetch (and its cost) on first use
         self.directory_fetches = 0
         self.lease_validations = 0  # ops validated locally under the lease
+        self.failovers_initiated = 0  # data-path-triggered fence+promote
         self.scheduler = ClusterWaveScheduler(self)
         # observability: cluster-level op latencies (whole sharded batches /
         # singles, as seen by this client) + a trace track of its own.
@@ -388,11 +389,62 @@ class ClusterFrontEnd:
         self.ensure_fresh()
         return self.scheduler.run(per_blade, combined=combined)
 
+    def _probe_blade(self, be: NVMBackend) -> bool:
+        """One un-retried liveness round against a suspect blade's link: the
+        probe honors armed faults (a stall delays it, a pending drop eats it
+        and costs the deadline) but never backs off — its whole job is to
+        decide quickly whether the breaker opened on a transient blip or a
+        genuinely unreachable endpoint."""
+        lk = be.link
+        f = lk.fault
+        now = self.clock.now
+        if f is not None and f.stall_until > now:
+            self.clock.advance_to(f.stall_until)
+            now = self.clock.now
+        if f is not None and f.drop_pending > 0:
+            f.drop_pending -= 1
+            f.drops += 1
+            self.clock.advance(self.cost.op_timeout_ns)
+            return False
+        end = lk.transfer(now + self.cost.issue_ns, 16)
+        self.clock.advance_to(end + self.cost.rtt_ns)
+        return True
+
     def recover_blade(self, blade_id: int) -> None:
         """Data-path failure handler: recover the blade (reboot / mirror
         promotion) and force a full rebind via the epoch bump (and lease
-        revocation) it caused."""
+        revocation) it caused.
+
+        Self-healing path: when the blade is still *alive* but its link
+        breaker is open (consecutive WQE timeouts), probe it once.  A probe
+        answer means the fault was transient — reset the breaker and rebind.
+        No answer means the endpoint is unreachable for real: fence the
+        blade (``fail_permanently``, so a zombie primary can't resurface
+        mid-promotion) and let ``handle_blade_failure`` promote its mirror —
+        the same revoke-before-swap promotion the tests drive by hand, now
+        triggered from the data path."""
+        be = self.cluster.blades[blade_id]
+        tr = self.trace
+        if be.alive:
+            br = be.link.breaker
+            if br is not None and br.is_open(self.clock.now):
+                if self._probe_blade(be):
+                    br.record_success()
+                    obs.count("breaker_resets")
+                    if tr is not None:
+                        tr.instant(self._track, "breaker_reset", self.clock.now,
+                                   {"blade": blade_id})
+                else:
+                    be.fail_permanently()
+                    obs.count("unreachable_fenced")
+                    if tr is not None:
+                        tr.instant(self._track, "fenced", self.clock.now,
+                                   {"blade": blade_id})
+        acted = not be.alive
         self.cluster.handle_blade_failure(blade_id, clock=self.clock)
+        if acted:
+            self.failovers_initiated += 1
+            obs.count("failovers_initiated")
         fe = self.fes.pop(blade_id, None)
         if fe is not None:
             self._retire_fe(fe)
@@ -456,6 +508,7 @@ class ClusterFrontEnd:
                                    for op, h in sorted(self.op_hist.items())},
             "lease_validations": self.lease_validations,
             "directory_fetches": self.directory_fetches,
+            "failovers_initiated": self.failovers_initiated,
             "epoch": self.epoch,
         }
 

@@ -117,7 +117,14 @@ class ShardedStructure:
         try:
             name = self._shard_name(shard)
             if fe.backend.has_name(f"{name}.seq"):
-                if obj is None:
+                be = fe.backend
+                # committed watermark ahead of the applied watermark means the
+                # blade carries an op-log tail whose effects never reached the
+                # data area (e.g. it crashed and rebooted since the last
+                # writer) — even a FIRST touch must replay it, or this client
+                # reads pre-crash state that a later recover would overwrite.
+                dirty = be.get_name(f"{name}.seq") > be.get_name(f"{name}.opsn")
+                if obj is None and not dirty:
                     obj = self._attach(fe, name)       # first touch: plain attach
                 else:
                     obj = self._recover(fe, name)      # rebound: replay the tail

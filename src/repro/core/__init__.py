@@ -8,7 +8,8 @@ operation-log Reproducing (R), Caching (C) and Batching (B).
 from .allocator import FrontEndAllocator
 from .backend import CrashError, LogArea, Mirror, NVMBackend
 from .cache import PageCache
-from .frontend import FEConfig, FrontEnd, ReadPolicy, ReadTarget, StructHandle
+from .frontend import (CircuitBreaker, EndpointUnreachable, FEConfig, FrontEnd,
+                       LinkTimeout, ReadPolicy, ReadTarget, StructHandle)
 from .locks import WriterPreferredLock
 from .oplog import MemLog, OpLog, decode_oplogs, decode_txs, encode_oplog, encode_tx, fletcher64
 from .sim import Clock, CostModel, Link, Stats
@@ -20,6 +21,9 @@ __all__ = [
     "CrashError",
     "FrontEnd",
     "FEConfig",
+    "CircuitBreaker",
+    "LinkTimeout",
+    "EndpointUnreachable",
     "ReadPolicy",
     "ReadTarget",
     "StructHandle",

@@ -42,6 +42,7 @@ class FrontEndAllocator:
         self.allocs = 0
         self.frees = 0
         self.slab_fetches = 0
+        self.foreign_leaks = 0  # unknown sub-slab chunks left unreclaimed
 
     # ------------------------------------------------------------------- api
     def alloc(self, size: int) -> int:
@@ -74,7 +75,19 @@ class FrontEndAllocator:
         self.frees += 1
         slab = self.chunk_of.get(addr)
         if slab is None:
-            nblocks = -(-max(size, 1) // self.slab_bytes)
+            if size <= self.slab_bytes:
+                # a sub-slab chunk this allocator never carved: some other
+                # (pre-rebind / pre-failover) front-end's slab owns it, and
+                # that slab may hold live chunks of unrelated structures.
+                # Freeing the containing block would hand those bytes back
+                # to the blade for reallocation — the double-alloc corrupts
+                # whoever wrote there first.  Leak the chunk instead; the
+                # slab is reclaimed only when a bulk destroy frees its
+                # whole block explicitly.
+                self.foreign_leaks += 1
+                self.fe._charge_local_alloc()
+                return
+            nblocks = -(-size // self.slab_bytes)
             self.fe._backend_free(addr, nblocks)
             return
         was_full = not slab.free

@@ -78,6 +78,15 @@ class Mirror:
         self.lag_writes = 0  # replication-channel depth (0 = synchronous)
         self._pending: Deque[Tuple[int, bytes]] = collections.deque()
 
+    def set_lag(self, n: int) -> None:
+        """Re-depth the replication channel mid-run (lag-spike / stall
+        injection): lowering the depth drains the excess immediately;
+        raising it lets the queue deepen as subsequent writes arrive."""
+        self.lag_writes = max(0, n)
+        while len(self._pending) > self.lag_writes:
+            a, d = self._pending.popleft()
+            self._apply_now(a, d)
+
     def apply(self, addr: int, data: bytes) -> None:
         if self.lag_writes <= 0 and not self._pending:
             self._apply_now(addr, data)
@@ -132,9 +141,12 @@ class NVMBackend:
         self.mirrors: List[Mirror] = [Mirror(capacity, self.cost) for _ in range(num_mirrors)]
         self.alive = True
         self.permanent_failure = False
-        # fail the next physical write after `fail_after` bytes (test hook)
+        # fail the next physical write after `fail_after` bytes (test hook);
+        # when _torn_write_addr is set the tear waits for the write that
+        # lands exactly on that arena address (watermark-slot targeting)
         self._torn_write_at: Optional[int] = None
         self._torn_write_after = 0
+        self._torn_write_addr: Optional[int] = None
         # per-(address, window) atomic-op counts (same-address serialization);
         # windows older than _atomic_window are evicted as time advances
         self._atomic_contention: Dict = {}
@@ -165,7 +177,31 @@ class NVMBackend:
         if not self.alive:
             raise CrashError("back-end blade is down")
         if self._torn_write_at is not None:
-            if self._torn_write_after > 0:
+            targeted = self._torn_write_addr
+            if targeted is not None:
+                if addr == targeted:
+                    cut = self._torn_write_at
+                    self._torn_write_at = None
+                    self._torn_write_addr = None
+                    # Targeted tears are aimed at a specific slot — usually a
+                    # seq-watermark commit point — so both sides of the commit
+                    # are expressible: word writes are persist-atomic on PM
+                    # hardware, meaning the word lands whole (keep covers it)
+                    # or not at all (the power loss preceded the persist);
+                    # it is never torn mid-word.  Larger targeted writes tear
+                    # at `cut` like the untargeted hook.  Either way the
+                    # mirror is NOT updated: replication of this last write
+                    # never left the dying blade.
+                    if len(data) <= 8:
+                        if cut >= len(data):
+                            self.arena[addr : addr + len(data)] = data
+                        self.alive = False
+                        return
+                    self.arena[addr : addr + cut] = data[:cut]
+                    self.alive = False
+                    return
+                # not the targeted slot: this write goes through untouched
+            elif self._torn_write_after > 0:
                 self._torn_write_after -= 1
             else:
                 cut = self._torn_write_at
@@ -490,12 +526,36 @@ class NVMBackend:
         self.alive = False
         self.permanent_failure = True
 
-    def schedule_torn_write(self, keep_bytes: int, after_writes: int = 0) -> None:
-        """Test hook: after letting `after_writes` further physical writes
-        through, the next one persists only its first `keep_bytes` bytes and
-        the blade loses power (paper §4.2)."""
+    def schedule_torn_write(self, keep_bytes: int, after_writes: int = 0,
+                            *, at_name: Optional[str] = None) -> None:
+        """Fault hook: arm a torn write + power loss (paper §4.2).
+
+        Counter form (default): after letting `after_writes` further physical
+        writes through, the next one persists only its first `keep_bytes`
+        bytes and the blade dies.  Landing on an 8-byte write it lands whole
+        (word persist-atomicity), which makes the commit point itself
+        untargetable — the write count to reach it depends on flush layout.
+
+        Targeted form (``at_name``): the tear waits for the write that lands
+        on `at_name`'s naming-slot value — e.g. ``"{s}.seq"``, the watermark
+        slot a flush writes *after* its entry bytes — however many writes
+        precede it.  For the 8-byte watermark, ``keep_bytes >= 8`` means the
+        commit record persists before the power loss (group committed),
+        ``keep_bytes < 8`` means it never lands (group must disappear on
+        recovery); there is no torn middle ground.
+        """
+        if at_name is not None:
+            self._torn_write_addr = self.name_slot_addr(at_name)
+        else:
+            self._torn_write_addr = None
         self._torn_write_at = keep_bytes
         self._torn_write_after = after_writes
+
+    def cancel_torn_write(self) -> None:
+        """Disarm a scheduled tear that never fired (end of a chaos window)."""
+        self._torn_write_at = None
+        self._torn_write_after = 0
+        self._torn_write_addr = None
 
     def reboot(self) -> "NVMBackend":
         """Restart after a transient failure.
@@ -508,6 +568,7 @@ class NVMBackend:
         self.alive = True
         self._torn_write_at = None
         self._torn_write_after = 0
+        self._torn_write_addr = None
         # naming cache
         self._names.clear()
         names: Dict[str, int] = {}

@@ -99,6 +99,68 @@ from ..obs.hist import LatencyHistogram
 from ..obs.profile import profile
 
 
+class LinkTimeout(CrashError):
+    """A posted round's completion never arrived within the operation
+    deadline (dropped WQE / unresponsive NIC).  Internal to the front-end's
+    retry loop; subclasses CrashError so an escape still heals upstream."""
+
+
+class EndpointUnreachable(CrashError):
+    """Retries exhausted or circuit breaker open for a blade's link: the
+    endpoint is declared unreachable.  The cluster layer reacts by probing
+    the blade and rebinding, rebooting, or fencing + promoting its mirror."""
+
+
+def _jitter01(x: int) -> float:
+    """Deterministic hash of `x` to [0, 1) — backoff jitter must decorrelate
+    retry storms across front-ends without breaking replayability."""
+    x = (x * 0x9E3779B97F4A7C15 + 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x ^= x >> 29
+    return (x >> 11) / float(1 << 53)
+
+
+class CircuitBreaker:
+    """Per-link failure accounting: consecutive timeouts open the breaker,
+    making further rounds fail fast (``EndpointUnreachable``) until the
+    cooldown elapses; one success closes it.  The breaker object lives ON
+    the ``Link`` (see ``Link.breaker``) so its state survives a front-end
+    rebind — the endpoint is sick, not the client object.  After the
+    cooldown the breaker is implicitly half-open: attempts flow again, a
+    failure re-stamps the open window, a success resets everything."""
+
+    __slots__ = ("cost", "failures", "opened_at", "trips")
+
+    def __init__(self, cost: CostModel):
+        self.cost = cost
+        self.failures = 0
+        self.opened_at: Optional[float] = None
+        self.trips = 0
+
+    def is_open(self, now: float) -> bool:
+        return (self.opened_at is not None
+                and now - self.opened_at < self.cost.breaker_cooldown_ns)
+
+    def record_failure(self, now: float) -> bool:
+        """Count one timeout; returns True when this failure newly opened
+        the breaker (the caller counts the trip and stops retrying)."""
+        self.failures += 1
+        if self.failures >= self.cost.breaker_threshold:
+            newly = self.opened_at is None
+            self.opened_at = now
+            if newly:
+                self.trips += 1
+            return newly
+        return False
+
+    def record_success(self) -> None:
+        self.failures = 0
+        self.opened_at = None
+
+    @property
+    def state(self) -> str:
+        return "closed" if self.opened_at is None else "open"
+
+
 def combine_runs(reqs: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
     """Merge (addr, size) requests into contiguous (addr, nbytes) runs —
     the adjacent-address WQE combining shared by read waves and
@@ -201,6 +263,8 @@ class FEConfig:
     symmetric: bool = False         # paper's symmetric baseline
     sym_batch: bool = False         # Symmetric-B row
     fixed_wave: Optional[int] = None  # pin the doorbell wave width (tests)
+    max_retries: int = 3            # resends after a timed-out round before
+                                    # the endpoint is declared unreachable
 
     @classmethod
     def naive(cls, **kw) -> "FEConfig":
@@ -366,29 +430,130 @@ class FrontEnd:
         physical blade that holds the bytes."""
         pol = self.read_policy
         be = self.backend
+        now = self.clock.now
+
+        def _tripped(lk) -> bool:
+            br = lk.breaker
+            return br is not None and br.is_open(now)
+
         if pol is None or pol.mode == "primary" or not be.mirrors:
             return ReadTarget(be)
         if pol.mode == "mirror":
             idx = pol.mirror_idx % len(be.mirrors)
-            if be.replica_lag_ops(h.name, h.seq, idx) > pol.max_staleness_ops:
+            if (be.replica_lag_ops(h.name, h.seq, idx) > pol.max_staleness_ops
+                    or _tripped(be.mirrors[idx].link)):
                 self.stats.replica_fallbacks += 1
                 return ReadTarget(be)
             return ReadTarget(be, idx)
-        # auto: primary + every staleness-eligible mirror, least-utilized
-        candidates: List[Optional[int]] = [None]
+        # auto: primary + every staleness-eligible mirror, least-utilized.
+        # Endpoints whose circuit breaker is open are excluded: an open
+        # primary breaker degrades reads to the replicas (still within the
+        # staleness bound — graceful degradation while no writable primary
+        # exists); if every endpoint is tripped, the primary is attempted
+        # anyway so the failure surfaces and recovery runs.
+        candidates: List[Optional[int]] = []
+        if not _tripped(be.link):
+            candidates.append(None)
         eligible = False
         for idx in range(len(be.mirrors)):
             if be.replica_lag_ops(h.name, h.seq, idx) <= pol.max_staleness_ops:
-                candidates.append(idx)
                 eligible = True
+                if not _tripped(be.mirrors[idx].link):
+                    candidates.append(idx)
         if not eligible:
             self.stats.replica_fallbacks += 1
-        now = self.clock.now
+        if not candidates:
+            return ReadTarget(be)
+        if candidates[0] is not None:
+            self.stats.degraded_reads += 1
+            obs.count("degraded_reads")
         best = min(
             candidates,
             key=lambda i: (ReadTarget(be, i).link.utilization(now), -1 if i is None else i),
         )
         return ReadTarget(be, best)
+
+    # ==================================================== deadlines & retries
+    def _link_breaker(self, link) -> CircuitBreaker:
+        br = link.breaker
+        if br is None:
+            br = link.breaker = CircuitBreaker(self.cost)
+        return br
+
+    def _fault_gate(self, link, br: CircuitBreaker) -> None:
+        """Consume armed link faults before a round charges: a stall window
+        is pure delay, a duplicated WQE burns capacity + issue time, a
+        dropped completion costs one operation deadline and raises
+        ``LinkTimeout`` (the blade-side write, if any, already happened —
+        the loss is the ACK, so resends are idempotent)."""
+        f = link.fault
+        if f is None:
+            return
+        now = self.clock.now
+        if f.stall_until > now:
+            f.stalls += 1
+            if self.trace is not None:
+                self.trace.span(self._tk, "nic_stall", now, f.stall_until)
+            self.clock.advance_to(f.stall_until)
+        if f.dup_pending > 0:
+            f.dup_pending -= 1
+            f.dups += 1
+            link.transfer(self.clock.now, 64)
+            self.clock.advance(self.cost.issue_ns)
+        if f.drop_pending > 0:
+            f.drop_pending -= 1
+            f.drops += 1
+            self.stats.op_timeouts += 1
+            self.clock.advance(self.cost.op_timeout_ns)
+            opened = br.record_failure(self.clock.now)
+            tr = self.trace
+            if tr is not None:
+                tr.instant(self._tk, "wqe_timeout", self.clock.now)
+                if opened:
+                    tr.instant(self._tk, "breaker_open", self.clock.now)
+            if opened:
+                self.stats.breaker_trips += 1
+                obs.count("breaker_trips")
+            raise LinkTimeout("posted round timed out (completion dropped)")
+
+    def _with_deadline(self, link, fn):
+        """Run a remote round under the operation-deadline discipline:
+        bounded resends with exponential backoff + deterministic jitter
+        charged to the clock, a per-link circuit breaker fed by consecutive
+        timeouts, fail-fast (``EndpointUnreachable``) while the breaker is
+        open.  On a healthy link (no armed fault, no breaker object) this
+        is a single attribute check around ``fn()`` — the fault-free path
+        stays sim-time identical."""
+        if link.fault is None and link.breaker is None:
+            return fn()
+        br = self._link_breaker(link)
+        attempt = 0
+        while True:
+            if br.is_open(self.clock.now):
+                raise EndpointUnreachable(
+                    f"circuit breaker open for blade {self.backend.blade_id}")
+            try:
+                self._fault_gate(link, br)
+                out = fn()
+                br.record_success()
+                return out
+            except LinkTimeout:
+                attempt += 1
+                if attempt > self.cfg.max_retries or br.is_open(self.clock.now):
+                    raise EndpointUnreachable(
+                        f"blade {self.backend.blade_id} unreachable after "
+                        f"{attempt - 1} retries") from None
+                back = self.cost.retry_backoff_ns * (2 ** (attempt - 1))
+                back *= 1.0 + self.cost.retry_jitter * _jitter01(
+                    ((self.fe_id + 1) << 20) ^ (attempt << 12)
+                    ^ (int(self.clock.now) & 0xFFFFF))
+                t0 = self.clock.now
+                self.clock.advance(back)
+                self.stats.op_retries += 1
+                obs.count("retries_total")
+                if self.trace is not None:
+                    self.trace.span(self._tk, "retry_backoff", t0,
+                                    self.clock.now, {"attempt": attempt})
 
     # ======================================================== network charges
     def _round(self, nbytes: int, *, nvm_write: bool = False, link=None) -> None:
@@ -403,10 +568,24 @@ class FrontEnd:
         if nvm_write and self._wave_active():
             self._wave_post(nbytes)
             return
+        lk = link or self.backend.link
+        if lk.fault is not None or lk.breaker is not None:
+            self._guarded_round(lk, nbytes, nvm_write)
+            return
         start = self.clock.now + self.cost.issue_ns
-        end = (link or self.backend.link).transfer(start, nbytes)
+        end = lk.transfer(start, nbytes)
         extra = self.cost.nvm_write_ns if nvm_write else self.cost.nvm_read_ns
         self.clock.advance_to(end + self.cost.rtt_ns + extra)
+
+    def _guarded_round(self, lk, nbytes: int, nvm_write: bool) -> None:
+        """The ``_round`` charge under the deadline/retry discipline (split
+        out so the hot fault-free path allocates no closure)."""
+        def once():
+            start = self.clock.now + self.cost.issue_ns
+            end = lk.transfer(start, nbytes)
+            extra = self.cost.nvm_write_ns if nvm_write else self.cost.nvm_read_ns
+            self.clock.advance_to(end + self.cost.rtt_ns + extra)
+        self._with_deadline(lk, once)
 
     def _pipelined_write(self, nbytes: int) -> None:
         """Posted write without waiting for the completion (durability comes
@@ -442,13 +621,33 @@ class FrontEnd:
             self.stats.write_waves += 1
             tr = self.trace
             t0 = self.clock.now
-            self.clock.advance_to(self._wave_end + self.cost.rtt_ns + self.cost.nvm_write_ns)
+            posts, ops = self._wave_posts, self._wave_ops
+            lk = self.backend.link
+            try:
+                if lk.fault is None and lk.breaker is None:
+                    self.clock.advance_to(
+                        self._wave_end + self.cost.rtt_ns + self.cost.nvm_write_ns)
+                else:
+                    # the fence is the posted writes' deadline point: a lost
+                    # fence completion times out and is re-waited; exhausted
+                    # retries surface EndpointUnreachable with the wave state
+                    # reset (the posts are lost/uncertain — recovery re-runs)
+                    self._with_deadline(
+                        lk,
+                        lambda: self.clock.advance_to(
+                            self._wave_end + self.cost.rtt_ns
+                            + self.cost.nvm_write_ns))
+            finally:
+                self._wave_posts = 0
+                self._wave_ops = 0
+                self._wave_end = 0.0
             if tr is not None:
                 tr.span(self._tk, "wave_fence", t0, self.clock.now,
-                        {"posts": self._wave_posts, "ops": self._wave_ops})
-        self._wave_posts = 0
-        self._wave_ops = 0
-        self._wave_end = 0.0
+                        {"posts": posts, "ops": ops})
+        else:
+            self._wave_posts = 0
+            self._wave_ops = 0
+            self._wave_end = 0.0
 
     @contextlib.contextmanager
     def write_wave(self, linger: bool = False):
@@ -608,25 +807,34 @@ class FrontEnd:
         with profile("wave_build"):
             runs = combine_runs([(a, s) for _, a, s in remote])
             width = self.waves.width
-            if len(runs) > 1:
-                # vectorized WQE stream: every run's post gap + link transfer
-                # in one epoch-chunked pass (see Link.transfer_many)
-                wqe_ns = cost.doorbell_wqe_ns
-                issue_ns = cost.issue_ns
-                gaps = [
-                    issue_ns if i % width == 0 else wqe_ns
-                    for i in range(len(runs))
-                ]
-                ends = tgt.link.transfer_many(
-                    self.clock.now, gaps, [nb for _, nb in runs]
-                )
-                start = float(ends[-1])
+
+            def charge():
+                if len(runs) > 1:
+                    # vectorized WQE stream: every run's post gap + link
+                    # transfer in one epoch-chunked pass (transfer_many)
+                    wqe_ns = cost.doorbell_wqe_ns
+                    issue_ns = cost.issue_ns
+                    gaps = [
+                        issue_ns if i % width == 0 else wqe_ns
+                        for i in range(len(runs))
+                    ]
+                    ends = tgt.link.transfer_many(
+                        self.clock.now, gaps, [nb for _, nb in runs]
+                    )
+                    start = float(ends[-1])
+                else:
+                    start = self.clock.now
+                    for i, (_, nbytes) in enumerate(runs):
+                        start += cost.issue_ns if i % width == 0 else cost.doorbell_wqe_ns
+                        start = tgt.link.transfer(start, nbytes)
+                self.clock.advance_to(start + cost.rtt_ns + cost.nvm_read_ns)
+
+            if tgt.link.fault is None and tgt.link.breaker is None:
+                charge()
             else:
-                start = self.clock.now
-                for i, (_, nbytes) in enumerate(runs):
-                    start += cost.issue_ns if i % width == 0 else cost.doorbell_wqe_ns
-                    start = tgt.link.transfer(start, nbytes)
-        self.clock.advance_to(start + cost.rtt_ns + cost.nvm_read_ns)
+                # read-wave deadline: a timed-out wave re-charges whole (the
+                # doorbell is re-rung; data is fetched only after success)
+                self._with_deadline(tgt.link, charge)
         if tr is not None:
             tr.span(self._tk, "read_wave", t0, self.clock.now,
                     {"wqes": len(runs), "items": len(remote),

@@ -58,6 +58,18 @@ class CostModel:
     # makes it safe for lease holders to skip per-op validation.
     lease_grant_ns: float = 500.0        # lease-record write on top of a fetch
     lease_invalidate_ns: float = 2500.0  # one revocation round per lease holder
+    # ------------------------------------------------ fault-handling terms
+    # A posted round whose completion never arrives costs the front-end one
+    # operation deadline before it declares the WQE lost; each resend backs
+    # off exponentially (with deterministic jitter) from the base below.  A
+    # link whose consecutive timeouts reach the breaker threshold is treated
+    # as unreachable until the cooldown elapses — the front-end fails fast
+    # and lets the cluster layer probe/promote instead of burning deadlines.
+    op_timeout_ns: float = 25_000.0      # deadline on a posted round (~12 RTT)
+    retry_backoff_ns: float = 10_000.0   # base of the exponential backoff
+    retry_jitter: float = 0.25           # +-fraction of backoff randomized
+    breaker_threshold: int = 3           # consecutive timeouts to trip
+    breaker_cooldown_ns: float = 400_000.0  # open-state fail-fast window
 
     # ---------------------------------------------- wave-width derivations
     # Floor: below this many WQEs per doorbell the issue amortization cannot
@@ -103,9 +115,46 @@ class Stats:
     replica_reads: int = 0      # remote reads served by a mirror endpoint
     replica_fallbacks: int = 0  # replica-eligible reads pinned back to the
                                 # primary (staleness bound exceeded)
+    op_timeouts: int = 0        # posted rounds whose completion never arrived
+    op_retries: int = 0         # resends after a timeout (backoff charged)
+    breaker_trips: int = 0      # circuit breakers opened by this front-end
+    degraded_reads: int = 0     # reads routed to a replica because the
+                                # primary's circuit breaker was open
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
+
+
+class LinkFaults:
+    """Armed fault state for one NIC link (``Link.fault``).
+
+    Normally a link has no fault object at all (``Link.fault is None``), so
+    the fault-free hot path pays exactly one attribute check.  The fault
+    injector arms faults by mutating these fields; the front-end's fault
+    gate consumes them and charges the consequences to its own clock:
+
+      * ``drop_pending``  — the next N posted rounds lose their completion
+        (the blade-side effect of the WQE still happens; this is a lost ACK,
+        not a lost write — retries are idempotent resends);
+      * ``dup_pending``   — the next N rounds are posted twice (the dup
+        burns link capacity + issue time but is harmless, one-sided verbs
+        being idempotent);
+      * ``stall_until``   — NIC stall window: WQEs sit in the send queue
+        until this virtual timestamp (pure delay, nothing lost).
+
+    The ``drops``/``dups``/``stalls`` counters record what actually fired.
+    """
+
+    __slots__ = ("drop_pending", "dup_pending", "stall_until",
+                 "drops", "dups", "stalls")
+
+    def __init__(self) -> None:
+        self.drop_pending = 0
+        self.dup_pending = 0
+        self.stall_until = 0.0
+        self.drops = 0
+        self.dups = 0
+        self.stalls = 0
 
 
 class Link:
@@ -136,6 +185,18 @@ class Link:
         # utilization onto this link's counter track
         self._trace = None
         self._trace_track = None
+        # fault-injection state, both None on a healthy link: `fault` is the
+        # armed LinkFaults (set by repro.faults), `breaker` the shared
+        # CircuitBreaker front-ends hang here so open/closed state survives
+        # a front-end rebind (the endpoint is sick, not the client object)
+        self.fault = None
+        self.breaker = None
+
+    def inject(self) -> LinkFaults:
+        """Return this link's fault carrier, arming an empty one on first use."""
+        if self.fault is None:
+            self.fault = LinkFaults()
+        return self.fault
 
     def _prune(self, e: int) -> None:
         """Sliding-horizon eviction: once epoch `e` is seen, buckets older

@@ -153,6 +153,12 @@ class ObsSession:
                 reg.gauge("link_busy_ns", be.link.busy_total,
                           help="cumulative service time on the blade NIC",
                           cluster=c, blade=str(bid))
+                br = be.link.breaker
+                reg.gauge("breaker_state",
+                          0 if br is None or br.opened_at is None else 1,
+                          help="per-blade link circuit breaker "
+                               "(0 closed, 1 open)",
+                          cluster=c, blade=str(bid))
         for site, d in _profile.snapshot().items():
             reg.counter("profile_seconds", d["seconds"],
                         help="wall-clock seconds inside obs.profile regions",

@@ -95,6 +95,25 @@ def span_names(doc: dict) -> Counter:
     return c
 
 
+#: reaction-side events the self-healing front-end path lands on the trace,
+#: in cause -> effect order (injection instants are the ``fault:*`` names)
+_HEALING_EVENTS = ("nic_stall", "wqe_timeout", "retry_backoff", "breaker_open",
+                   "breaker_reset", "fenced", "promotion")
+
+
+def fault_summary(doc: dict) -> Dict[str, int]:
+    """Counts of injected faults (``fault:<kind>`` instants) and of the
+    healing events they provoked, so a chaos-run trace can be read as
+    cause -> reaction without opening Perfetto."""
+    names = span_names(doc)
+    out: Dict[str, int] = {n: c for n, c in sorted(names.items())
+                           if n.startswith("fault:")}
+    for n in _HEALING_EVENTS:
+        if n in names:
+            out[n] = names[n]
+    return out
+
+
 def blade_tracks(doc: dict) -> List[int]:
     """Blade ids that have at least one span on a front-end track bound to
     them (``feN.bM`` thread names, ``~K`` rebind suffixes included)."""
@@ -218,4 +237,10 @@ def summarize(doc: dict, top: int = 10) -> str:
         for name, row in util.items():
             lines.append(f"  {name:<18} mean={row['mean']:.2f} "
                          f"max={row['max']:.2f} |{row['heatline']}|")
+    faults = fault_summary(doc)
+    if faults:
+        lines.append("")
+        lines.append("chaos: injected faults and the healing they provoked:")
+        for name, count in faults.items():
+            lines.append(f"  {name:<24} x{count}")
     return "\n".join(lines)
