@@ -144,13 +144,19 @@ def obs_rebase() -> None:
 
 
 def percentile_fields(hist, prefix: str) -> Dict[str, float]:
-    """p50/p99/p999 (virtual µs) columns for a benchmark row."""
+    """p50/p99/p999 (virtual µs) columns for a benchmark row.
+
+    Keys carry a ``service`` marker: closed-loop figures measure pure
+    service time (the next op is issued only when the last returns, so no
+    queueing delay is ever observed).  Open-loop rows (fig_open_loop) use
+    ``latency_p*`` for true arrival-to-completion times instead — the two
+    must not be compared under one name."""
     if hist is None or not hist.count:
         return {}
     p50, p99, p999 = hist.percentiles((50, 99, 99.9))
-    return {f"{prefix}_p50_us": round(p50 / 1e3, 3),
-            f"{prefix}_p99_us": round(p99 / 1e3, 3),
-            f"{prefix}_p999_us": round(p999 / 1e3, 3)}
+    return {f"{prefix}_service_p50_us": round(p50 / 1e3, 3),
+            f"{prefix}_service_p99_us": round(p99 / 1e3, 3),
+            f"{prefix}_service_p999_us": round(p999 / 1e3, 3)}
 
 
 def run_write_workload(fe: FrontEnd, obj, structure: str, n_ops: int,

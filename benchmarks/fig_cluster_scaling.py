@@ -282,9 +282,9 @@ def main(blades=(1, 2, 4, 8), n_frontends: int = 16, preload: int = 400,
         out["scaling"][n] = r
         arrow = "^" if r["aggregate_kops"] >= prev else "v"
         prev = r["aggregate_kops"]
-        lat = (f" put p50/p99/p999={r['put_p50_us']:.1f}/"
-               f"{r['put_p99_us']:.1f}/{r['put_p999_us']:.1f}us"
-               if "put_p50_us" in r else "")
+        lat = (f" put service p50/p99/p999={r['put_service_p50_us']:.1f}/"
+               f"{r['put_service_p99_us']:.1f}/{r['put_service_p999_us']:.1f}us"
+               if "put_service_p50_us" in r else "")
         print(f"cluster blades={n}: aggregate={r['aggregate_kops']:9.1f} KOPS "
               f"per-client={r['per_client_kops']:8.1f} KOPS {arrow}{lat}")
     if replica:
@@ -295,11 +295,11 @@ def main(blades=(1, 2, 4, 8), n_frontends: int = 16, preload: int = 400,
               f"speedup={rr['speedup']:.2f}x "
               f"(replica share {rr['replica_read_frac'] * 100:.0f}%)")
         for mode in ("primary", "replica"):
-            if f"{mode}_get_many_p50_us" in rr:
-                print(f"  {mode} get_many p50/p99/p999 = "
-                      f"{rr[f'{mode}_get_many_p50_us']:.1f}/"
-                      f"{rr[f'{mode}_get_many_p99_us']:.1f}/"
-                      f"{rr[f'{mode}_get_many_p999_us']:.1f} us")
+            if f"{mode}_get_many_service_p50_us" in rr:
+                print(f"  {mode} get_many service p50/p99/p999 = "
+                      f"{rr[f'{mode}_get_many_service_p50_us']:.1f}/"
+                      f"{rr[f'{mode}_get_many_service_p99_us']:.1f}/"
+                      f"{rr[f'{mode}_get_many_service_p999_us']:.1f} us")
     if migration:
         m = run_migration(preload=max(100, preload // 2))
         out["migration"] = m

@@ -1,0 +1,308 @@
+"""Open-loop load sweep: the latency-vs-throughput knee + result-cache panel.
+
+Every other figure in this repo is closed-loop — each bench thread issues
+the next op when the last returns, so offered load always equals capacity
+and "latency" is pure service time.  This figure drives the cluster with
+the open-loop engine (``repro.core.sim.OpenLoopEngine``): ops arrive on a
+seeded Poisson timeline (two merged per-tenant streams per front-end),
+queue at their front-end, and are dispatched in arrival order, so the
+recorded ``latency_p*`` numbers are true **arrival-to-completion** times
+(queueing + service) and offered load is an independent knob.
+
+The sweep probes the closed-loop service capacity once, then offers fixed
+multiples of it and plots p50/p99/p999 against achieved throughput — the
+classic knee: latency flat while the queue stays subcritical, exploding
+past saturation.  Each load point runs twice, with the front-end result
+cache off and on (same seeds, same arrival timelines), on a read-heavy
+zipfian mix (``benchmarks.keydist``): the cache-on run serves hot keys
+locally at DRAM cost, pushing the knee right.  The headline number is
+``cache_speedup_at_p99``: the ratio of the best throughput each mode
+sustains under a common p99 ceiling.
+
+Every read is checked against a per-station model dict (reads here are
+primary-routed, and result-cache admission only accepts provably-fresh
+values, so ANY mismatch is a bug): ``staleness_violations`` must be zero,
+and scripts/check_bench.py pins that, the p99 ceiling at the reference
+load, the hit-rate floor, and the >= 1.5x speedup against the committed
+``BENCH_open_loop.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster import ClusterFrontEnd, NVMCluster, ShardedHashTable
+from repro.core import FEConfig
+from repro.core.sim import OpenLoopEngine, OpenLoopOp, OpenLoopStation, merge_streams, poisson_arrivals
+
+from .common import add_obs_args, kops, obs_finish, obs_rebase, obs_start
+from .keydist import op_mix, uniform_keys, zipf_keys
+
+N_SHARDS = 8
+READ_FRAC = 0.95
+ZIPF_THETA = 0.99
+MAX_BATCH = 64
+LOADS = (0.5, 1.0, 2.0, 3.0)  # multiples of the probed closed-loop capacity
+REF_LOAD = 1.0                # the "reference offered load" the CI guards
+P99_CEILING_MULT = 4.0        # ceiling = mult x cache-off p99 at the lowest load
+
+
+def _fe_config(rc_entries: int) -> FEConfig:
+    # page cache off so the cache-off mode is genuinely remote-bound; the
+    # result cache is the variable under test
+    return FEConfig(use_oplog=True, use_cache=False, use_batch=True,
+                    result_cache_entries=rc_entries)
+
+
+class _Station:
+    """One front-end + its own sharded table (single-writer model), with a
+    model dict as the exact-match oracle for every read result."""
+
+    def __init__(self, cluster: NVMCluster, idx: int, pool: int,
+                 rc_entries: int):
+        self.cfe = ClusterFrontEnd(cluster, _fe_config(rc_entries), fe_id=idx)
+        self.table = ShardedHashTable(self.cfe, f"t{idx}",
+                                      n_buckets=max(256, pool))
+        self.model: Dict[int, int] = {}
+        self.violations = 0
+        self._next_val = 1
+
+    def preload(self, pool: int) -> None:
+        pairs = [(k, k) for k in range(pool)]
+        self.table.put_many(pairs)
+        self.model.update(pairs)
+        self.table.drain()
+
+    def execute(self, batch: List[OpenLoopOp]) -> None:
+        writes = [(op.key, 0) for op in batch if op.kind == "put"]
+        if writes:
+            writes = [(k, self._next_val + i) for i, (k, _) in enumerate(writes)]
+            self._next_val += len(writes)
+            self.table.put_many(writes)
+            self.model.update(writes)
+        reads = [op.key for op in batch if op.kind == "get"]
+        if reads:
+            vals = self.table.get_many(reads)
+            for k, v in zip(reads, vals):
+                if v != self.model.get(k):
+                    self.violations += 1
+
+
+def _build_fleet(n_stations: int, pool: int, rc_entries: int) -> List[_Station]:
+    cluster = NVMCluster(n_blades=2, capacity_per_blade=1 << 24,
+                         n_shards=N_SHARDS, num_mirrors=0)
+    fleet = [_Station(cluster, i, pool, rc_entries) for i in range(n_stations)]
+    for st in fleet:
+        st.preload(pool)
+        if rc_entries:
+            # steady-state cache study: warm the result cache over the
+            # whole pool so the measured window prices recurrence and
+            # invalidation churn, not first-touch compulsory misses
+            st.table.get_many(list(range(pool)))
+            for k in st.table._result_cache.counters:
+                st.table._result_cache.counters[k] = 0
+    # preload/measurement barrier: rewind every clock and link so both
+    # cache modes (and the capacity probe) measure from the same epoch
+    for be in cluster.blades.values():
+        be.link.reset()
+        for m in be.mirrors:
+            m.link.reset()
+    for st in fleet:
+        st.cfe.clock.now = 0.0
+        for fe in st.cfe.fes.values():
+            fe.clock.now = 0.0
+    obs_rebase()  # keep trace spans disjoint across the clock rewind
+    # keep the cluster alive as long as its stations
+    fleet[0].cluster = cluster  # type: ignore[attr-defined]
+    return fleet
+
+
+def _ops_for(station_idx: int, point_idx: int, n_ops: int, pool: int,
+             rate_ops_per_s: float) -> List[OpenLoopOp]:
+    """The station's arrival stream for one load point: two per-tenant
+    Poisson streams merged, zipfian keys, seeded read/write mix.  Seeds
+    depend only on (station, point) so cache-off and cache-on runs replay
+    the identical workload."""
+    seed = 7919 * point_idx + station_idx
+    half = n_ops // 2
+    ts, tenants = merge_streams({
+        0: poisson_arrivals(rate_ops_per_s / 2.0, half, seed=seed * 2),
+        1: poisson_arrivals(rate_ops_per_s / 2.0, n_ops - half,
+                            seed=seed * 2 + 1),
+    })
+    # reads skew zipfian (popularity), writes spread uniformly — the usual
+    # read-heavy cache-study shape: a hot read set that is not also the
+    # hottest write target
+    rkeys = zipf_keys(n_ops, pool, theta=ZIPF_THETA, seed=seed + 17)
+    wkeys = uniform_keys(n_ops, pool, seed=seed + 23)
+    reads = op_mix(n_ops, READ_FRAC, seed=seed + 29)
+    return [
+        OpenLoopOp(float(t), "get" if r else "put",
+                   key=int(rk if r else wk), tenant=int(tid))
+        for t, tid, rk, wk, r in zip(ts, tenants, rkeys, wkeys, reads)
+    ]
+
+
+def probe_capacity(n_stations: int, pool: int, ops_per_station: int = 512) -> float:
+    """Closed-loop AGGREGATE service capacity of the cache-off fleet at
+    full batch amortization (ops per second per station, virtual time):
+    every station issues back-to-back max-width batches of the read-heavy
+    mix, interleaved by the min-clock rule so blade/link contention between
+    stations is priced exactly like the open-loop runs price it."""
+    fleet = _build_fleet(n_stations, pool, rc_entries=0)
+    streams = []
+    for i in range(n_stations):
+        rkeys = zipf_keys(ops_per_station, pool, theta=ZIPF_THETA, seed=101 + i)
+        wkeys = uniform_keys(ops_per_station, pool, seed=301 + i)
+        reads = op_mix(ops_per_station, READ_FRAC, seed=103 + i)
+        streams.append([OpenLoopOp(0.0, "get" if r else "put",
+                                   key=int(rk if r else wk))
+                        for rk, wk, r in zip(rkeys, wkeys, reads)])
+    heads = [0] * n_stations
+    while True:
+        cand = [i for i in range(n_stations) if heads[i] < ops_per_station]
+        if not cand:
+            break
+        i = min(cand, key=lambda j: (fleet[j].cfe.clock.now, j))
+        fleet[i].execute(streams[i][heads[i]:heads[i] + MAX_BATCH])
+        heads[i] += MAX_BATCH
+    makespan = max(st.cfe.clock.now for st in fleet)
+    bad = sum(st.violations for st in fleet)
+    if bad:
+        raise AssertionError(f"probe saw {bad} oracle mismatches")
+    return n_stations * ops_per_station / (makespan / 1e9) / n_stations
+
+
+def run_point(point_idx: int, load_mult: float, base_rate: float,
+              n_stations: int, pool: int, ops_per_station: int,
+              rc_entries: int) -> Dict:
+    """One (load, cache-mode) cell: fresh fleet, Poisson arrivals at
+    ``load_mult x base_rate`` per station, full drain, arrival latency."""
+    fleet = _build_fleet(n_stations, pool, rc_entries)
+    rate = load_mult * base_rate
+    stations = []
+    for i, st in enumerate(fleet):
+        sim_st = OpenLoopStation(st.cfe.clock, st.execute, station_id=i,
+                                 max_batch=MAX_BATCH)
+        sim_st.offer(_ops_for(i, point_idx, ops_per_station, pool, rate))
+        stations.append(sim_st)
+    eng = OpenLoopEngine(stations)
+    summary = eng.run()
+    lat = eng.arrival_hist.get("get")
+    p50, p99, p999 = (lat.percentiles((50, 99, 99.9)) if lat is not None
+                      else (0.0, 0.0, 0.0))
+    violations = sum(st.violations for st in fleet)
+    hit_rate = 0.0
+    if rc_entries:
+        stats = [st.table._result_cache.stats() for st in fleet]
+        looks = sum(s["hits"] + s["misses"] for s in stats)
+        hit_rate = sum(s["hits"] for s in stats) / looks if looks else 0.0
+    return {
+        "load_mult": load_mult,
+        "offered_kops": round(rate * n_stations / 1e3, 2),
+        "achieved_kops": round(
+            kops(summary["served"], summary["makespan_ns"]), 2),
+        "latency_p50_us": round(p50 / 1e3, 2),
+        "latency_p99_us": round(p99 / 1e3, 2),
+        "latency_p999_us": round(p999 / 1e3, 2),
+        "queue_depth_max": summary["queue_depth_max"],
+        "queue_depth_mean": round(summary["queue_depth_mean"], 2),
+        "result_cache_hit_rate": round(hit_rate, 4),
+        "staleness_violations": violations,
+    }
+
+
+def _sustained(points: List[Dict], ceiling_us: float) -> float:
+    """Best achieved throughput among load points meeting the p99 ceiling."""
+    ok = [p["achieved_kops"] for p in points
+          if p["latency_p99_us"] <= ceiling_us]
+    return max(ok) if ok else 0.0
+
+
+def main(n_stations: int, pool: int, ops_per_station: int,
+         rc_entries: int) -> List[Dict]:
+    wall0 = time.time()
+    base_rate = probe_capacity(n_stations, pool)
+    print(f"probed closed-loop capacity: {base_rate / 1e3:.1f} kops "
+          f"per station ({n_stations} stations, pool {pool})")
+
+    by_mode: Dict[str, List[Dict]] = {"off": [], "on": []}
+    for mode, entries in (("off", 0), ("on", rc_entries)):
+        for pi, m in enumerate(LOADS):
+            pt = run_point(pi, m, base_rate, n_stations, pool,
+                           ops_per_station, entries)
+            pt["cache"] = mode
+            by_mode[mode].append(pt)
+            print(f"  cache={mode} load={m:>4}x offered={pt['offered_kops']:>8} "
+                  f"achieved={pt['achieved_kops']:>8} kops  "
+                  f"p50={pt['latency_p50_us']:>8}us p99={pt['latency_p99_us']:>9}us "
+                  f"p999={pt['latency_p999_us']:>9}us depth_max={pt['queue_depth_max']:>5} "
+                  f"hit={pt['result_cache_hit_rate']:.2f} "
+                  f"viol={pt['staleness_violations']}")
+
+    ceiling_us = P99_CEILING_MULT * by_mode["off"][0]["latency_p99_us"]
+    sus_off = _sustained(by_mode["off"], ceiling_us)
+    sus_on = _sustained(by_mode["on"], ceiling_us)
+    speedup = sus_on / sus_off if sus_off else float("inf")
+    ref_on = by_mode["on"][LOADS.index(REF_LOAD)]
+    violations = sum(p["staleness_violations"]
+                     for pts in by_mode.values() for p in pts)
+    print(f"p99 ceiling {ceiling_us:.1f}us: cache-off sustains {sus_off} kops, "
+          f"cache-on {sus_on} kops -> speedup {speedup:.2f}x "
+          f"(hit rate at reference load: {ref_on['result_cache_hit_rate']:.2f}); "
+          f"staleness violations: {violations}")
+
+    rows: List[Dict] = [{
+        "name": "open_loop_sweep",
+        "staleness_violations": violations,
+        "p99_ceiling_us": round(ceiling_us, 2),
+        "sustained_off_kops": sus_off,
+        "sustained_on_kops": sus_on,
+        "cache_speedup_at_p99": round(speedup, 2),
+        "hit_rate_at_ref": ref_on["result_cache_hit_rate"],
+        "p99_at_ref_us": ref_on["latency_p99_us"],
+    }]
+    for mode in ("off", "on"):
+        for pt in by_mode[mode]:
+            rows.append({"name": f"open_loop_{mode}_{pt['load_mult']}x", **pt})
+    rows.append({
+        "name": "open_loop_bench_meta",
+        "preload": pool,
+        "n_ops": n_stations * ops_per_station * len(LOADS) * 2,
+        "wall_clock_seconds": round(time.time() - wall0, 1),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: 3 stations, seconds per mode")
+    ap.add_argument("--stations", type=int, default=None)
+    ap.add_argument("--rc-entries", type=int, default=4096,
+                    help="result-cache capacity for the cache-on runs")
+    ap.add_argument("--json", default=None,
+                    help="write the BENCH_open_loop-format record here")
+    add_obs_args(ap)
+    args = ap.parse_args()
+    obs_start(args)
+    if args.smoke:
+        n_stations = args.stations or 3
+        pool, ops_per_station = 300, 400
+    else:
+        n_stations = args.stations or 6
+        pool, ops_per_station = 2000, 2000
+    rows = main(n_stations, pool, ops_per_station, args.rc_entries)
+    obs_finish(args)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")
+    if rows[0]["staleness_violations"]:
+        sys.exit(1)

@@ -195,11 +195,11 @@ def main(preload: int = 15000, n_ops: int = 2560, batch: int = 64,
               f" {row['put_speedup']:>5.1f}x {row['serial_get_kops']:>9.1f}K"
               f" {row['batched_get_kops']:>10.1f}K {row['get_speedup']:>5.1f}x"
               f"  {row['batched_put_wall_ops']:>10.0f}")
-        if "put_p50_us" in row:
-            print(f"{'':<12} put p50/p99/p999 = {row['put_p50_us']:.1f}/"
-                  f"{row['put_p99_us']:.1f}/{row['put_p999_us']:.1f} us   "
-                  f"get p50/p99/p999 = {row['get_p50_us']:.1f}/"
-                  f"{row['get_p99_us']:.1f}/{row['get_p999_us']:.1f} us")
+        if "put_service_p50_us" in row:
+            print(f"{'':<12} put service p50/p99/p999 = {row['put_service_p50_us']:.1f}/"
+                  f"{row['put_service_p99_us']:.1f}/{row['put_service_p999_us']:.1f} us   "
+                  f"get service p50/p99/p999 = {row['get_service_p50_us']:.1f}/"
+                  f"{row['get_service_p99_us']:.1f}/{row['get_service_p999_us']:.1f} us")
     row = bench_cross_structure(preload, n_ops, batch)
     out["cross_structure"] = row
     print(f"{'ht+bst':<12} {row['serial_put_kops']:>9.1f}K"

@@ -1,0 +1,91 @@
+"""Seeded key-distribution generators shared by the benchmark figures.
+
+The figures previously drew keys ad hoc (`random.Random(...).randrange`),
+which is uniform only — fine for capacity micro-benchmarks, useless for
+cache studies: real stores see zipfian popularity (YCSB's default), and
+both the page cache and the front-end result cache live or die on skew.
+This module centralizes the generators so every figure draws from the same
+seeded, reproducible distributions:
+
+  * ``uniform_keys``  — i.i.d. uniform over the keyspace,
+  * ``zipf_keys``     — YCSB-style zipfian (Gray et al.'s rejection-free
+                        inverse-CDF over a precomputed zeta sum), rank 0
+                        most popular, optionally scrambled over the
+                        keyspace with the repo's splitmix64 so popular
+                        keys spread across shards,
+  * ``hot_set_keys``  — a two-tier hot/cold mixture (``hot_prob`` of the
+                        draws land in the first ``hot_frac`` of the
+                        keyspace).
+
+All generators are deterministic for a fixed seed (numpy Generator) and
+return int64 arrays.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.structures.base import mix64_np
+
+
+def uniform_keys(n: int, keyspace: int, seed: int = 0) -> np.ndarray:
+    """``n`` i.i.d. uniform keys in ``[0, keyspace)``."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, keyspace, size=n, dtype=np.int64)
+
+
+def _zeta(n: int, theta: float) -> np.ndarray:
+    """Cumulative generalized harmonic numbers ``H_{k,theta}`` for k=1..n."""
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    return np.cumsum(ranks ** -theta)
+
+
+def zipf_ranks(n: int, keyspace: int, theta: float = 0.99,
+               seed: int = 0) -> np.ndarray:
+    """``n`` zipfian *ranks* in ``[0, keyspace)``: rank 0 is the most
+    popular with probability ``∝ 1``, rank k with ``∝ (k+1)^-theta``.
+    Vectorized inverse-CDF sampling against the exact zeta cumsum."""
+    if not 0.0 < theta < 1.0:
+        raise ValueError("theta must be in (0, 1) (YCSB convention)")
+    rng = np.random.default_rng(seed)
+    zeta = _zeta(keyspace, theta)
+    u = rng.random(n) * zeta[-1]
+    return np.searchsorted(zeta, u, side="left").astype(np.int64)
+
+
+def zipf_keys(n: int, keyspace: int, theta: float = 0.99, seed: int = 0,
+              scramble: bool = True) -> np.ndarray:
+    """``n`` zipfian keys over ``[0, keyspace)``.  With ``scramble`` (the
+    default, YCSB's "scrambled zipfian") ranks map to keys through
+    splitmix64 so the popular keys are spread uniformly over the keyspace
+    — and thus over the cluster's hash shards — instead of clustering at
+    0.  The map is a fixed permutation-like hash: the same rank always
+    yields the same key, so popularity structure is preserved."""
+    ranks = zipf_ranks(n, keyspace, theta, seed)
+    if not scramble:
+        return ranks
+    mixed = mix64_np(ranks.astype(np.uint64))
+    return (mixed % np.uint64(keyspace)).astype(np.int64)
+
+
+def hot_set_keys(n: int, keyspace: int, hot_frac: float = 0.1,
+                 hot_prob: float = 0.9, seed: int = 0) -> np.ndarray:
+    """``n`` keys from a hot/cold mixture: with probability ``hot_prob`` a
+    key is drawn uniformly from the hot set (the first ``hot_frac`` of the
+    keyspace), otherwise uniformly from the whole keyspace."""
+    if not 0.0 < hot_frac <= 1.0:
+        raise ValueError("hot_frac must be in (0, 1]")
+    rng = np.random.default_rng(seed)
+    hot_n = max(1, int(keyspace * hot_frac))
+    keys = rng.integers(0, keyspace, size=n, dtype=np.int64)
+    hot = rng.random(n) < hot_prob
+    keys[hot] = rng.integers(0, hot_n, size=int(hot.sum()), dtype=np.int64)
+    return keys
+
+
+def op_mix(n: int, read_frac: float, seed: int = 0) -> np.ndarray:
+    """Boolean mask of length ``n``: True = read, False = write, with an
+    expected ``read_frac`` of reads.  Seeded separately from the key draw
+    so the same key stream can be replayed under different mixes."""
+    rng = np.random.default_rng(seed)
+    return rng.random(n) < read_frac

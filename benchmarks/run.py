@@ -188,9 +188,12 @@ def main(argv=None) -> None:
         }
         # cluster-wide sim-latency percentiles (virtual µs) ride along in
         # the baseline so regressions in tail latency are visible too
-        for key in ("replica_get_many_p50_us", "replica_get_many_p99_us",
-                    "replica_get_many_p999_us", "replica_put_many_p50_us",
-                    "replica_put_many_p99_us", "replica_put_many_p999_us"):
+        for key in ("replica_get_many_service_p50_us",
+                    "replica_get_many_service_p99_us",
+                    "replica_get_many_service_p999_us",
+                    "replica_put_many_service_p50_us",
+                    "replica_put_many_service_p99_us",
+                    "replica_put_many_service_p999_us"):
             if key in rr:
                 cluster_row[key] = rr[key]
         _write_record(args.cluster_json, [cluster_row],
@@ -220,8 +223,8 @@ def main(argv=None) -> None:
                     "speedup_vs_serial": round(r[f"{op}_speedup"], 2),
                 }
                 for p in ("p50", "p99", "p999"):
-                    if f"{op}_{p}_us" in r:
-                        vrow[f"sim_{p}_us"] = r[f"{op}_{p}_us"]
+                    if f"{op}_service_{p}_us" in r:
+                        vrow[f"service_{p}_us"] = r[f"{op}_service_{p}_us"]
                 rows.append(vrow)
         _write_record(args.bench_json, rows, "vector", preload,
                       max(n_ops, 128), wall_s, phases=_phase_snapshot())

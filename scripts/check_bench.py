@@ -27,6 +27,15 @@ jitter ±30% run to run; the floor exists to catch the order-of-magnitude
 regressions (a vectorized path silently falling back to the serial loop),
 not scheduler noise.
 
+``BENCH_open_loop.json`` rows (benchmarks/fig_open_loop.py) carry their
+own guards on the ``open_loop_sweep`` summary: ``staleness_violations``
+must be ZERO (hard invariant — the result cache may never serve a value
+the bounded-staleness/RYW contract forbids), ``cache_speedup_at_p99`` must
+stay >= 1.5 (the tiered cache's headline claim) and within ``--max-drop``
+of the baseline, ``hit_rate_at_ref`` may not fall below baseline x 0.8,
+and ``p99_at_ref_us`` may not exceed baseline x 1.25.  All are
+deterministic virtual-time numbers.
+
 ``BENCH_availability.json`` rows (benchmarks/fig_availability.py) carry
 their own guards: ``durability_violations`` must be ZERO in the fresh run
 (hard invariant, no tolerance), ``auto_promotions`` and
@@ -115,6 +124,51 @@ def _check_availability(fresh: dict, base: dict, max_recovery_regress: float,
     return failed
 
 
+def _check_open_loop(fresh: dict, base: dict, max_drop: float) -> bool:
+    """Guards for the fig_open_loop record; returns True on failure."""
+    bs = base.get("open_loop_sweep")
+    if bs is None:
+        return False
+    fs = fresh.get("open_loop_sweep")
+    if fs is None:
+        print("check_bench: FAIL open_loop_sweep missing from fresh record",
+              file=sys.stderr)
+        return True
+    failed = False
+    v = fs.get("staleness_violations", 0)
+    if v:
+        print(f"check_bench: FAIL open_loop_sweep: {v} staleness violations "
+              "(must be 0)", file=sys.stderr)
+        failed = True
+    else:
+        print("check_bench: open_loop_sweep: 0 staleness violations ok")
+    cur = fs.get("cache_speedup_at_p99", 0.0)
+    floor = max(1.5, bs["cache_speedup_at_p99"] * (1.0 - max_drop))
+    status = "ok"
+    if cur < floor:
+        status = f"FAIL (<{floor:.2f})"
+        failed = True
+    print(f"check_bench: open_loop cache_speedup_at_p99: baseline "
+          f"{bs['cache_speedup_at_p99']:.2f}x fresh {cur:.2f}x {status}")
+    cur = fs.get("hit_rate_at_ref", 0.0)
+    floor = bs["hit_rate_at_ref"] * 0.8
+    status = "ok"
+    if cur < floor:
+        status = f"FAIL (<{floor:.2f})"
+        failed = True
+    print(f"check_bench: open_loop hit_rate_at_ref: baseline "
+          f"{bs['hit_rate_at_ref']:.2f} fresh {cur:.2f} {status}")
+    cur = fs.get("p99_at_ref_us", float("inf"))
+    ceil = bs["p99_at_ref_us"] * 1.25
+    status = "ok"
+    if cur > ceil:
+        status = f"FAIL (>{ceil:.2f}us)"
+        failed = True
+    print(f"check_bench: open_loop p99_at_ref_us: baseline "
+          f"{bs['p99_at_ref_us']:.2f} fresh {cur:.2f} {status}")
+    return failed
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh")
@@ -149,6 +203,8 @@ def main(argv=None) -> int:
     failed = False
     if _check_availability(fall, ball, args.max_recovery_regress,
                            args.max_dip_increase):
+        failed = True
+    if _check_open_loop(fall, ball, args.max_drop):
         failed = True
     for name, ref in sorted(base.items()):
         cur = fresh.get(name)

@@ -42,6 +42,13 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench-regression guard: cluster replica reads at --quick sizes =="
     python -m benchmarks.run --quick --only cluster --cluster-json "$scratch/cluster_fresh.json"
     python scripts/check_bench.py "$scratch/cluster_fresh.json" BENCH_cluster_reads.json
+    echo "== open-loop smoke: arrival-driven sweep vs the tiered-cache guards =="
+    # exits nonzero itself on any bounded-staleness/RYW violation; the guard
+    # additionally pins the cache speedup, hit rate and p99 knee against the
+    # committed baseline (regenerate: python -m benchmarks.fig_open_loop
+    # --smoke --json BENCH_open_loop.json)
+    python -m benchmarks.fig_open_loop --smoke --json "$scratch/open_loop_fresh.json"
+    python scripts/check_bench.py "$scratch/open_loop_fresh.json" BENCH_open_loop.json
     echo "== chaos smoke: seeded fault schedules vs the durability oracle =="
     # exits nonzero itself on any durability violation or if the
     # front-end-initiated fence+promote path never fired

@@ -75,6 +75,15 @@ class ShardDirectory:
     def shards_on(self, blade_id: int) -> List[int]:
         return [s for s, b in self.assignment.items() if b == blade_id]
 
+    # ---------------------------------------------------- invalidation groups
+    def group_of(self, key: int) -> int:
+        """Result-cache invalidation group of a key: its shard.  The
+        directory is the single authority for the key->group mapping, so a
+        reconfiguration that moves shard ``s`` invalidates exactly the
+        cached results tagged ``s`` (see ``NVMCluster.revoke_leases``);
+        callers with a key range enumerate the groups of its members."""
+        return self.shard_of(key)
+
     # ------------------------------------------------------- reconfiguration
     def bump_epoch(self) -> int:
         self.epoch += 1

@@ -39,8 +39,11 @@ def promote_blade(cluster: "NVMCluster", blade_id: int, mirror_idx: int = 0,
     Lease protocol: every outstanding directory lease is revoked (and the
     invalidation broadcast paid) BEFORE the fresh blade is swapped in and
     the epoch bumped — a lease holder skipping per-op validation must never
-    route another op at the dead primary's binding."""
-    cluster.revoke_leases(clock)
+    route another op at the dead primary's binding.  The failed blade's
+    shard set rides the broadcast as the invalidation groups, so result
+    caches drop exactly the entries whose home just changed hands."""
+    cluster.revoke_leases(clock,
+                          shards=cluster.directory.shards_on(blade_id))
     old = cluster.blades[blade_id]
     # promote_mirror re-seeds the fresh blade's own mirror set with the full
     # arena, so replication fan-in (and replica reads) continue correctly

@@ -122,8 +122,10 @@ def migrate_shard(
     # revoke-before-swap: every outstanding directory lease is invalidated
     # (broadcast cost on this front-end's clock) BEFORE the assignment
     # flips, so no lease holder validating locally can route another op at
-    # the source copy we are about to tombstone and reclaim
-    cluster.revoke_leases(cfe.clock)
+    # the source copy we are about to tombstone and reclaim.  The moved
+    # shard rides the broadcast as the invalidation group: result caches
+    # drop exactly this shard's entries, nothing else.
+    cluster.revoke_leases(cfe.clock, shards=(shard,))
     directory.assign(shard, dst_blade)
     directory.bump_epoch()
     directory.persist(cluster.blades)

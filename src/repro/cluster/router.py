@@ -45,7 +45,7 @@ sub-batch starts at the same client time and the client resumes at the
 from __future__ import annotations
 
 import weakref
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
 
 from ..core.backend import CrashError, NVMBackend
 from ..core.frontend import FEConfig, FrontEnd
@@ -130,14 +130,23 @@ class NVMCluster:
             cfe.clock.advance_to(fe.clock.now)
 
     # ----------------------------------------------------------------- leases
-    def revoke_leases(self, clock: Optional[Clock] = None) -> int:
+    def revoke_leases(self, clock: Optional[Clock] = None,
+                      shards: Optional[Iterable[int]] = None) -> int:
         """Invalidate every outstanding directory lease and re-persist the
         lease table — the mandatory first step of ANY reconfiguration: only
         after the broadcast lands may the mapping swap, so no lease holder
         can keep routing ops at a source that is about to be tombstoned.
         Costs one invalidation round per holder, charged to the initiator's
         `clock` when one is in scope (an external admin action passes
-        None).  Returns the number of leases revoked."""
+        None).  Returns the number of leases revoked.
+
+        ``shards`` names the invalidation **groups** the reconfiguration
+        actually affects: migration passes the moved shard, failover the
+        failed blade's shards, and ``None`` means every group (directory
+        rebuilt / topology changed).  The set rides the revocation round to
+        every registered front-end, which drops exactly those groups from
+        its result caches — no extra messages, so no extra sim-time cost
+        beyond the per-holder invalidation already charged above."""
         n = self.leases.revoke_all()
         if n and clock is not None:
             clock.advance(n * self.cost.lease_invalidate_ns)
@@ -148,6 +157,9 @@ class NVMCluster:
                 self.trace.instant(self._track, "lease_revoke",
                                    clock.now if clock is not None else None,
                                    {"holders": n})
+        groups = None if shards is None else tuple(shards)
+        for cfe in self.frontends():
+            cfe._on_invalidation(groups)
         return n
 
     # ------------------------------------------------------------- membership
@@ -163,7 +175,8 @@ class NVMCluster:
             blade_id=bid,
             name_slots=self.name_slots,
         )
-        self.revoke_leases()
+        # an empty blade joining moves no data: no result group is affected
+        self.revoke_leases(shards=())
         self.directory.add_blade(bid)
         self.directory.bump_epoch()
         self.directory.persist(self.blades)
@@ -188,7 +201,7 @@ class NVMCluster:
                 )
             return promote_blade(self, blade_id, clock=clock)
         be.reboot()
-        self.revoke_leases(clock)
+        self.revoke_leases(clock, shards=self.directory.shards_on(blade_id))
         self.directory.bump_epoch()
         self.directory.persist(self.blades)
         obs.count("blade_reboots")
@@ -293,11 +306,34 @@ class ClusterFrontEnd:
         self.trace = cluster.trace
         self._track = (self.trace.track(f"cfe{fe_id}")
                        if self.trace is not None else None)
+        # result-cache invalidation listeners (sharded structures with a
+        # ResultCache attached); weakrefs — a listener must not outlive its
+        # structure.  Fed by the cluster's lease-revocation broadcast.
+        self._invalidation_listeners: List[weakref.ref] = []
         sess = obs.session()
         if sess is not None:
             sess.register_cluster_frontend(self)
         cluster.register_frontend(self)
         self.ensure_fresh()
+
+    # ------------------------------------------------- result-cache listeners
+    def register_result_cache(self, listener) -> None:
+        """Register an object with ``_invalidate_groups(shards)`` (a sharded
+        structure owning a ResultCache) for reconfiguration broadcasts."""
+        self._invalidation_listeners.append(weakref.ref(listener))
+
+    def _on_invalidation(self, shards) -> None:
+        """Lease-revocation broadcast hook: drop the affected invalidation
+        groups (``None`` = all) from every registered result cache.  Rides
+        the already-charged revocation round — no extra sim-time cost."""
+        if not self._invalidation_listeners:
+            return
+        live = [r() for r in self._invalidation_listeners]
+        self._invalidation_listeners = [
+            r for r, o in zip(self._invalidation_listeners, live) if o is not None]
+        for obj in live:
+            if obj is not None:
+                obj._invalidate_groups(shards)
 
     # ------------------------------------------------------- epoch validation
     def ensure_fresh(self) -> bool:
@@ -497,7 +533,13 @@ class ClusterFrontEnd:
         """Full telemetry snapshot: merged Stats, per-blade breakdown, and
         the op-latency histograms — per-blade histograms merged cluster-wide
         by op type (``op_latency``) plus this client's own batch-level
-        histograms (``cluster_op_latency``)."""
+        histograms (``cluster_op_latency``).
+
+        Both histogram families hold closed-loop **service** times (call to
+        return on this client's clock; ``service_p*`` in bench rows).  True
+        arrival-to-completion latency, which includes queueing under offered
+        load, comes only from the open-loop engine's arrival histograms
+        (``repro.core.sim.OpenLoopEngine``, ``latency_p*`` columns)."""
         st = self.stats()
         merged = self.merged_op_hists()
         return {

@@ -30,8 +30,10 @@ import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..core.backend import CrashError
+from ..core.cache import ResultCache
 from ..core.frontend import ReadPolicy
 from ..core.structures import RemoteBPTree, RemoteHashTable
+from .. import obs
 from .router import ClusterFrontEnd
 
 MAX_RETRIES = 3
@@ -62,15 +64,40 @@ class ShardedStructure:
     write, and its reads stay on the primary until the mirrors' applied
     watermark passes that seq — at which point the mirror provably holds
     the write's effects and the pin is released.  Writes are primary-only
-    always."""
+    always.
+
+    Result cache: with ``result_cache`` entries (or
+    ``cfe.cfg.result_cache_entries``) > 0, point-lookup results are
+    memoized in a :class:`ResultCache` keyed by shard (the invalidation
+    group).  A hit is served locally at DRAM cost; writes through this
+    wrapper drop their keys (per-key tier); migration/failover/directory
+    rebuilds drop the affected groups via the cluster's lease-revocation
+    broadcast (``ClusterFrontEnd.register_result_cache``).  Staleness
+    safety: a pinned key bypasses the cache entirely (read-your-writes —
+    per the contract, until its watermark passes), and results are admitted
+    only when provably the freshest committed value — primary-served reads
+    always; replica-served reads only while the shard blade's mirrors are
+    fully caught up (an admitted bounded-stale value would outlive the
+    staleness contract).  Default is off (``result_cache_entries=0``): the
+    read/write paths are byte-identical to the uncached ones."""
 
     def __init__(self, cfe: ClusterFrontEnd, name: str,
-                 read_policy: Optional[ReadPolicy] = None):
+                 read_policy: Optional[ReadPolicy] = None,
+                 result_cache: Optional[int] = None):
         self.cfe = cfe
         self.name = name
         self.read_policy = read_policy
         self._shards: Dict[int, object] = {}  # shard -> bound structure
         self._pinned: Dict[int, Tuple[int, int]] = {}  # key -> (shard, seq)
+        cap = cfe.cfg.result_cache_entries if result_cache is None else result_cache
+        if cap:
+            self._result_cache: Optional[ResultCache] = ResultCache(cap)
+            cfe.register_result_cache(self)
+            sess = obs.session()
+            if sess is not None:
+                sess.register_result_cache(self._result_cache)
+        else:
+            self._result_cache = None
 
     # ---------------------------------------------------------- observability
     @contextlib.contextmanager
@@ -159,14 +186,56 @@ class ShardedStructure:
         self._pinned[key] = (shard, obj.h.seq)
 
     def _replica_floor(self, obj) -> int:
-        """The lowest applied watermark across the shard blade's mirrors:
-        pins at or below it are releasable (every replica already holds
-        those writes' effects).  -1 when the blade has no mirrors."""
+        """The lowest provably-WHOLE watermark across the shard blade's
+        mirrors: pins at or below it are releasable (every replica already
+        holds those writes' full effects — ``replica_whole_seq`` discounts a
+        watermark whose op may still be partially replicated), and result-
+        cache admission compares the committed tail against it.  -1 when the
+        blade has no mirrors."""
         be = obj.fe.backend
         if not be.mirrors:
             return -1
-        return min(be.replica_applied_seq(obj.name, i)
+        return min(be.replica_whole_seq(obj.name, i)
                    for i in range(len(be.mirrors)))
+
+    # ------------------------------------------------------------ result cache
+    def _invalidate_groups(self, shards) -> None:
+        """Reconfiguration broadcast hook (see ``NVMCluster.revoke_leases``):
+        drop the given invalidation groups — ``None`` means every group."""
+        rc = self._result_cache
+        if rc is None:
+            return
+        if shards is None:
+            rc.invalidate_all()
+        else:
+            for s in shards:
+                rc.invalidate_group(s)
+
+    def _rc_invalidate(self, key: int) -> None:
+        """Per-key write fencing: drop the key's cached result BEFORE the
+        write dispatches, so a failed/retried write can never leave a
+        pre-write value behind (conservative: the entry just refills on the
+        next read).  Local bookkeeping — no sim-time cost."""
+        rc = self._result_cache
+        if rc is not None:
+            rc.invalidate_key(key)
+
+    def _admit_results(self, obj, shard: int, keys: List[int], vals: List) -> None:
+        """Admit freshly fetched results, but only when they are provably
+        the freshest committed values: primary-served always qualifies;
+        replica-served only while every mirror of the shard's blade has
+        applied the full committed op stream (otherwise a bounded-stale
+        value would be frozen past the staleness contract).  Pinned keys
+        never admit — they bypass the cache until their watermark passes."""
+        rc = self._result_cache
+        if self.read_policy is not None:
+            be = obj.fe.backend
+            if be.mirrors and self._replica_floor(obj) < obj.h.seq:
+                return
+        pinned = self._pinned
+        for k, v in zip(keys, vals):
+            if v is not None and k not in pinned:
+                rc.put(k, v, shard)
 
     def _serve_reads(self, obj, keys: List[int], reader: Callable) -> List:
         """Serve a shard's read sub-batch under the read policy: pinned keys
@@ -356,6 +425,9 @@ class ShardedStructure:
         single combined oplog+memlog posted write.  Every written key is
         pinned at the batch's closing op-seq (conservative: the whole batch
         must reach the mirrors before any of its keys reads from one)."""
+        if self._result_cache is not None:
+            for k, _ in pairs:
+                self._rc_invalidate(k)
         groups: Dict[int, List[Tuple[int, int]]] = {}
         for k, v in pairs:
             groups.setdefault(self.cfe.directory.shard_of(k), []).append((k, v))
@@ -378,31 +450,64 @@ class ShardedStructure:
         input order (missing shards contribute None).  Under a read policy
         each shard sub-batch routes through ``_serve_reads``: unpinned keys
         go to mirror endpoints within the staleness bound, pinned keys to
-        the primary."""
-        groups: Dict[int, List[int]] = {}
-        for i, k in enumerate(keys):
-            groups.setdefault(self.cfe.directory.shard_of(k), []).append(i)
-
-        def mk(sub: List[int]) -> Callable:
-            return lambda t: self._serve_reads(
-                t, sub, lambda obj, ks: obj.get_many(ks)
-            )
-
-        with self._cluster_op("get_many", len(keys)):
-            res = self._on_shards(
-                {s: mk([keys[i] for i in idxs]) for s, idxs in groups.items()},
-                create_if_missing=False,
-                default=None,
-                ops_per_shard={s: len(idxs) for s, idxs in groups.items()},
-            )
+        the primary.  With a result cache, unpinned keys probe it first —
+        hits are served locally at DRAM cost, only misses fan out (and
+        cache-safe miss results are admitted on the way back)."""
+        rc = self._result_cache
         out: List[Optional[int]] = [None] * len(keys)
-        for s, idxs in groups.items():
+        if rc is None:
+            with self._cluster_op("get_many", len(keys)):
+                self._fetch_into(keys, range(len(keys)), out, admit=False)
+            return out
+        hits = 0
+        miss: List[int] = []
+        for i, k in enumerate(keys):
+            if k in self._pinned:
+                rc.note_bypass()  # read-your-writes: primary until released
+                miss.append(i)
+                continue
+            hit, v = rc.get(k)
+            if hit:
+                out[i] = v
+                hits += 1
+            else:
+                miss.append(i)
+        with self._cluster_op("get_many", len(keys)):
+            if hits:
+                self.cfe.clock.advance(hits * self.cfe.cost.dram_ns)
+            if miss:
+                self._fetch_into(keys, miss, out, admit=True)
+        return out
+
+    def _fetch_into(self, keys: List[int], idxs, out: List, admit: bool) -> None:
+        """Fan the keys at positions ``idxs`` out by shard and merge results
+        into ``out`` (the uncached ``get_many`` body; ``admit`` feeds
+        cache-safe results to the result cache)."""
+        groups: Dict[int, List[int]] = {}
+        for i in idxs:
+            groups.setdefault(self.cfe.directory.shard_of(keys[i]), []).append(i)
+
+        def mk(shard: int, sub: List[int]) -> Callable:
+            def run(t):
+                vals = self._serve_reads(
+                    t, sub, lambda obj, ks: obj.get_many(ks))
+                if admit:
+                    self._admit_results(t, shard, sub, vals)
+                return vals
+            return run
+
+        res = self._on_shards(
+            {s: mk(s, [keys[i] for i in pos]) for s, pos in groups.items()},
+            create_if_missing=False,
+            default=None,
+            ops_per_shard={s: len(pos) for s, pos in groups.items()},
+        )
+        for s, pos in groups.items():
             vals = res.get(s)
             if vals is None:
                 continue
-            for i, v in zip(idxs, vals):
+            for i, v in zip(pos, vals):
                 out[i] = v
-        return out
 
     insert_many = put_many
     lookup_many = get_many
@@ -430,8 +535,10 @@ class ShardedHashTable(ShardedStructure):
     """Hash table hash-partitioned over the cluster's blades."""
 
     def __init__(self, cfe: ClusterFrontEnd, name: str, n_buckets: int = 1 << 12,
-                 read_policy: Optional[ReadPolicy] = None):
-        super().__init__(cfe, name, read_policy=read_policy)
+                 read_policy: Optional[ReadPolicy] = None,
+                 result_cache: Optional[int] = None):
+        super().__init__(cfe, name, read_policy=read_policy,
+                         result_cache=result_cache)
         # n_buckets is the logical total; each shard gets its slice
         self.buckets_per_shard = max(64, n_buckets // cfe.directory.n_shards)
 
@@ -446,6 +553,7 @@ class ShardedHashTable(ShardedStructure):
 
     # -------------------------------------------------------------------- ops
     def put(self, key: int, value: int) -> None:
+        self._rc_invalidate(key)
         shard = self.cfe.directory.shard_of(key)
 
         def run(t):
@@ -456,16 +564,29 @@ class ShardedHashTable(ShardedStructure):
             self._on_shard(shard, run)
 
     def get(self, key: int):
+        rc = self._result_cache
+        if rc is not None:
+            if key in self._pinned:
+                rc.note_bypass()  # read-your-writes: primary until released
+            else:
+                hit, v = rc.get(key)
+                if hit:
+                    with self._cluster_op("get", 1):
+                        self.cfe.clock.advance(self.cfe.cost.dram_ns)
+                    return v
+        shard = self.cfe.directory.shard_of(key)
+
+        def run(t):
+            v = self._serve_reads(t, [key], lambda obj, ks: obj.get_many(ks))[0]
+            if rc is not None:
+                self._admit_results(t, shard, [key], [v])
+            return v
+
         with self._cluster_op("get", 1):
-            return self._on_key(
-                key,
-                lambda t: self._serve_reads(
-                    t, [key], lambda obj, ks: obj.get_many(ks)
-                )[0],
-                create_if_missing=False,
-            )
+            return self._on_shard(shard, run, create_if_missing=False)
 
     def delete(self, key: int) -> bool:
+        self._rc_invalidate(key)
         shard = self.cfe.directory.shard_of(key)
 
         def run(t):
@@ -503,6 +624,7 @@ class ShardedBPTree(ShardedStructure):
 
     # -------------------------------------------------------------------- ops
     def insert(self, key: int, value: int) -> None:
+        self._rc_invalidate(key)
         shard = self.cfe.directory.shard_of(key)
 
         def run(t):
@@ -513,14 +635,26 @@ class ShardedBPTree(ShardedStructure):
             self._on_shard(shard, run)
 
     def find(self, key: int):
+        rc = self._result_cache
+        if rc is not None:
+            if key in self._pinned:
+                rc.note_bypass()  # read-your-writes: primary until released
+            else:
+                hit, v = rc.get(key)
+                if hit:
+                    with self._cluster_op("get", 1):
+                        self.cfe.clock.advance(self.cfe.cost.dram_ns)
+                    return v
+        shard = self.cfe.directory.shard_of(key)
+
+        def run(t):
+            v = self._serve_reads(t, [key], lambda obj, ks: obj.lookup_many(ks))[0]
+            if rc is not None:
+                self._admit_results(t, shard, [key], [v])
+            return v
+
         with self._cluster_op("get", 1):
-            return self._on_key(
-                key,
-                lambda t: self._serve_reads(
-                    t, [key], lambda obj, ks: obj.lookup_many(ks)
-                )[0],
-                create_if_missing=False,
-            )
+            return self._on_shard(shard, run, create_if_missing=False)
 
     def range_scan(self, lo: int, hi: int) -> List[Tuple[int, int]]:
         """All (key, value) with lo <= key <= hi, globally sorted: per-shard

@@ -69,6 +69,17 @@ class Mirror:
     applied watermark (the mirror's copy of the ``{name}.seq`` slot) then
     genuinely lags the primary's committed tail, which is what the bounded-
     staleness read contract measures against.
+
+    Prefix consistency alone is not enough for replica READS: a flush
+    window's memory logs are write-merged (last value per address), so no
+    intra-transaction write order keeps every pointer-before-payload
+    dependency — a cut inside a transaction can expose a bucket pointer
+    whose target bytes have not landed, making even *old*, watermark-
+    covered keys unreachable mid-chain.  The channel therefore applies
+    transactionally: writes tagged with a tx group queue as one unit and
+    land all-or-none, exactly like ``tx_apply`` on recovery.  Lagging
+    cuts land only on transaction boundaries, where the arena is the
+    end-of-window state the ``{name}.opsn`` watermark describes.
     """
 
     def __init__(self, capacity: int, cost: Optional[CostModel] = None):
@@ -76,25 +87,45 @@ class Mirror:
         self.bytes_replicated = 0
         self.link = Link(cost or CostModel())
         self.lag_writes = 0  # replication-channel depth (0 = synchronous)
-        self._pending: Deque[Tuple[int, bytes]] = collections.deque()
+        # units of (addr, bytes): a standalone write, or a whole tx group
+        self._pending: Deque[List[Tuple[int, bytes]]] = collections.deque()
+        self._n_pending = 0          # queued physical writes across all units
+        self._open_group: Optional[int] = None  # tx id still streaming in
 
     def set_lag(self, n: int) -> None:
         """Re-depth the replication channel mid-run (lag-spike / stall
         injection): lowering the depth drains the excess immediately;
         raising it lets the queue deepen as subsequent writes arrive."""
         self.lag_writes = max(0, n)
-        while len(self._pending) > self.lag_writes:
-            a, d = self._pending.popleft()
-            self._apply_now(a, d)
+        self._drain()
 
-    def apply(self, addr: int, data: bytes) -> None:
+    def apply(self, addr: int, data: bytes, group: Optional[int] = None) -> None:
         if self.lag_writes <= 0 and not self._pending:
             self._apply_now(addr, data)
             return
-        self._pending.append((addr, bytes(data)))
-        while len(self._pending) > self.lag_writes:
-            a, d = self._pending.popleft()
-            self._apply_now(a, d)
+        data = bytes(data)
+        if group is not None and group == self._open_group:
+            self._pending[-1].append((addr, data))
+        else:
+            self._pending.append([(addr, data)])
+            self._open_group = group
+        self._n_pending += 1
+        self._drain()
+
+    def seal(self) -> None:
+        """Close the open tx group: its unit is complete and may now apply
+        (as a whole) when the channel depth pushes it through."""
+        self._open_group = None
+        self._drain()
+
+    def _drain(self) -> None:
+        while self._pending and self._n_pending > self.lag_writes:
+            if len(self._pending) == 1 and self._open_group is not None:
+                break  # the head unit is a tx still streaming: never split it
+            unit = self._pending.popleft()
+            for a, d in unit:
+                self._apply_now(a, d)
+            self._n_pending -= len(unit)
 
     def _apply_now(self, addr: int, data: bytes) -> None:
         self.arena[addr : addr + len(data)] = data
@@ -106,8 +137,10 @@ class Mirror:
         promoted — in-flight bytes were sent, only unsent ones are lost,
         and a dead primary sends nothing)."""
         while self._pending:
-            a, d = self._pending.popleft()
-            self._apply_now(a, d)
+            for a, d in self._pending.popleft():
+                self._apply_now(a, d)
+        self._n_pending = 0
+        self._open_group = None
 
     def read(self, addr: int, size: int) -> bytes:
         return bytes(self.arena[addr : addr + size])
@@ -161,6 +194,11 @@ class NVMBackend:
         self._next_fresh = 0            # bump pointer into never-used blocks
         self._names: Dict[str, int] = {}  # name -> slot index (cache of arena)
         self._log_areas: Dict[str, "LogArea"] = {}
+        # tx group tag for the replication channel: writes inside one
+        # tx_apply transaction share an id so lagging mirrors land the
+        # whole tx or none of it (see Mirror)
+        self._mirror_group: Optional[int] = None
+        self._next_mirror_group = 0
 
     # ------------------------------------------------------------------ util
     def _check_alive(self) -> None:
@@ -223,7 +261,7 @@ class NVMBackend:
         self.arena[addr : addr + len(data)] = data
         if replicate:
             for m in self.mirrors:
-                m.apply(addr, data)
+                m.apply(addr, data, self._mirror_group)
         self.clock.advance(self.cost.nvm_write_ns)
 
     # ------------------------------------------------------- one-sided verbs
@@ -340,6 +378,22 @@ class NVMBackend:
         op-sequence counter — the front-end owns the op stream, so this is
         free local knowledge) minus the mirror's applied watermark."""
         return max(0, committed_seq - self.replica_applied_seq(name, mirror_idx))
+
+    def replica_whole_seq(self, name: str, mirror_idx: int = 0) -> int:
+        """The highest op watermark whose DATA-AREA effects the mirror
+        provably reflects: its (possibly lagging) copy of the
+        ``{name}.opsn`` slot.  The combined flush orders each transaction's
+        opsn write AFTER the data writes it covers, and replication
+        preserves write order, so an opsn copy reading S means every
+        in-place effect of ops <= S has applied on the mirror.  The
+        ``{name}.seq`` watermark (``replica_applied_seq``) tracks commit
+        durability — the op LOG replicated — which runs ahead of in-place
+        application under batched flushes; replica reads serve from the
+        data area, so read-your-writes pins and result-cache admission
+        gate on this slot instead."""
+        if not self.has_name(f"{name}.opsn"):
+            return 0
+        return self.mirrors[mirror_idx].word(self.name_slot_addr(f"{name}.opsn"))
 
     # ------------------------------------------------------------ named blobs
     # Variable-length persistent values (e.g. the cluster shard directory).
@@ -505,10 +559,17 @@ class NVMBackend:
             n_txs = len(txs)
             nbytes = 0
             with profile("apply_phase"):
-                for tx in txs:
-                    for entry in tx:
-                        self._phys_write(entry.addr, entry.data)
-                        nbytes += len(entry.data)
+                try:
+                    for tx in txs:
+                        self._mirror_group = self._next_mirror_group
+                        self._next_mirror_group += 1
+                        for entry in tx:
+                            self._phys_write(entry.addr, entry.data)
+                            nbytes += len(entry.data)
+                        for m in self.mirrors:
+                            m.seal()
+                finally:
+                    self._mirror_group = None
         area.applied += consumed
         self.set_name(f"{area.name}.applied", area.applied)
         self.clock.advance(nbytes * self.cost.backend_apply_ns_per_byte)

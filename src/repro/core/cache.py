@@ -21,6 +21,7 @@ page once the cache is full).
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Dict, Optional
 
 import numpy as np
@@ -379,3 +380,138 @@ class PageCache:
             self.used_bytes -= freed
             freed = 0
         self.evictions += evicted
+
+
+class ResultCache:
+    """Front-end **result** cache: decoded key -> value results, one tier
+    above the byte-level :class:`PageCache`.
+
+    The page cache holds remote NVM pages; a hit still pays node decode and
+    structure traversal.  The result cache memoizes the *answer* of a point
+    lookup, so a hit costs one local DRAM reference.  Every entry is tagged
+    with an **invalidation group** (its shard id in the cluster), giving
+    three invalidation tiers:
+
+      * per-key    — write fencing: a local write overwrites/removes exactly
+                     that key's entry,
+      * per-group  — a shard migrated or failed over: drop that shard's
+                     entries, keep the rest,
+      * global     — directory rebuilt / topology changed: drop everything.
+
+    The cluster wires the group/global tiers into the lease-revocation
+    broadcast (`NVMCluster.revoke_leases`), so reconfigurations invalidate
+    exactly the affected groups.  Admission and bypass policy (bounded
+    staleness, read-your-writes pins) live in the caller — this class is a
+    bounded LRU map with group indexing and counters.
+
+    ``counters`` is a plain dict so an observability session can keep
+    folding it after the owning structure dies (see ``repro.obs``).
+    """
+
+    def __init__(self, capacity_entries: int = 4096):
+        if capacity_entries < 1:
+            raise ValueError("capacity_entries must be >= 1")
+        self.capacity = capacity_entries
+        self._entries: "OrderedDict" = OrderedDict()  # key -> value (LRU order)
+        self._group_of: Dict[object, object] = {}     # key -> group tag
+        self._groups: Dict[object, set] = {}          # group tag -> {keys}
+        self.counters: Dict[str, int] = {
+            "hits": 0,
+            "misses": 0,
+            "admitted": 0,
+            "evictions": 0,
+            "invalidations_key": 0,
+            "invalidations_group": 0,
+            "invalidations_global": 0,
+            "pinned_bypass": 0,
+        }
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # --------------------------------------------------------------- lookups
+    def get(self, key):
+        """Probe: ``(hit, value)``.  A hit refreshes LRU recency."""
+        ent = self._entries
+        if key in ent:
+            ent.move_to_end(key)
+            self.counters["hits"] += 1
+            return True, ent[key]
+        self.counters["misses"] += 1
+        return False, None
+
+    def note_bypass(self) -> None:
+        """Count a read that skipped the cache entirely (pinned key)."""
+        self.counters["pinned_bypass"] += 1
+
+    # ------------------------------------------------------------- admission
+    def put(self, key, value, group) -> None:
+        """Admit (or refresh) a result under an invalidation group."""
+        ent = self._entries
+        if key in ent:
+            old_group = self._group_of[key]
+            if old_group != group:
+                self._groups[old_group].discard(key)
+                if not self._groups[old_group]:
+                    del self._groups[old_group]
+            ent.move_to_end(key)
+        elif len(ent) >= self.capacity:
+            victim, _ = ent.popitem(last=False)
+            g = self._group_of.pop(victim)
+            members = self._groups[g]
+            members.discard(victim)
+            if not members:
+                del self._groups[g]
+            self.counters["evictions"] += 1
+        ent[key] = value
+        self._group_of[key] = group
+        self._groups.setdefault(group, set()).add(key)
+        self.counters["admitted"] += 1
+
+    # ---------------------------------------------------- invalidation tiers
+    def invalidate_key(self, key) -> bool:
+        """Per-key tier (write fencing).  Returns True if an entry dropped."""
+        if key not in self._entries:
+            return False
+        del self._entries[key]
+        g = self._group_of.pop(key)
+        members = self._groups[g]
+        members.discard(key)
+        if not members:
+            del self._groups[g]
+        self.counters["invalidations_key"] += 1
+        return True
+
+    def invalidate_group(self, group) -> int:
+        """Per-group tier (shard migration/failover).  Returns entries dropped.
+
+        Counters record entries dropped (like the per-key tier), not
+        broadcasts received, so the three tiers sum to total evicted-by-
+        invalidation work."""
+        keys = self._groups.pop(group, None)
+        if not keys:
+            return 0
+        for k in keys:
+            del self._entries[k]
+            del self._group_of[k]
+        self.counters["invalidations_group"] += len(keys)
+        return len(keys)
+
+    def invalidate_all(self) -> int:
+        """Global tier (directory rebuilt).  Returns entries dropped."""
+        n = len(self._entries)
+        self._entries.clear()
+        self._group_of.clear()
+        self._groups.clear()
+        self.counters["invalidations_global"] += n
+        return n
+
+    # --------------------------------------------------------------- metrics
+    def stats(self) -> Dict[str, float]:
+        c = self.counters
+        looks = c["hits"] + c["misses"]
+        out = dict(c)
+        out["entries"] = len(self._entries)
+        out["capacity_entries"] = self.capacity
+        out["hit_rate"] = c["hits"] / looks if looks else 0.0
+        return out

@@ -265,6 +265,11 @@ class FEConfig:
     fixed_wave: Optional[int] = None  # pin the doorbell wave width (tests)
     max_retries: int = 3            # resends after a timed-out round before
                                     # the endpoint is declared unreachable
+    result_cache_entries: int = 0   # front-end result-cache capacity for
+                                    # sharded structures bound to this FE
+                                    # (decoded key->value tier above the
+                                    # page cache; 0 = off, the default —
+                                    # see repro.core.cache.ResultCache)
 
     @classmethod
     def naive(cls, **kw) -> "FEConfig":
@@ -367,6 +372,9 @@ class FrontEnd:
         # replica read routing: None = primary-only.  Scoped via the
         # `replica_reads` context manager around read-only call sequences.
         self.read_policy: Optional[ReadPolicy] = None
+        # per-scope pinned read targets ({handle name -> ReadTarget}):
+        # populated by `replica_reads` so one traversal reads one arena
+        self._target_pin: Optional[Dict[str, "ReadTarget"]] = None
         # open doorbell write wave; posted-write completions are deferred to
         # the wave close fence.  `_wave_linger` marks a wave the adaptive
         # controller keeps open across consecutive vector-op calls (the
@@ -398,7 +406,12 @@ class FrontEnd:
     def record_op_latency(self, op: str, dur_ns: float, n: int = 1) -> None:
         """Fold ``n`` occurrences of a ``dur_ns`` sim-latency into this
         front-end's per-op-type histogram (batch windows record the window
-        latency once per item)."""
+        latency once per item).
+
+        These are closed-loop **service** times (call to return on this
+        front-end's clock), surfaced as ``service_p*`` bench columns — not
+        arrival-to-completion latency, which only the open-loop engine
+        (``repro.core.sim.OpenLoopEngine``) can measure."""
         h = self.op_hist.get(op)
         if h is None:
             h = self.op_hist[op] = LatencyHistogram()
@@ -410,15 +423,43 @@ class FrontEnd:
         """Scope a ``ReadPolicy`` over a read-only call sequence: remote
         reads inside resolve their target blade through the policy (mirror
         endpoints become eligible); on exit the previous policy is restored.
-        Passing None is a no-op scope (primary-only)."""
+        Passing None is a no-op scope (primary-only).
+
+        The resolved target is PINNED per handle for the scope's duration:
+        a pointer-chasing traversal issues several dependent read waves, and
+        letting each wave re-pick its endpoint would walk a *mixed* cut —
+        e.g. a bucket head from the primary pointing at node bytes a lagging
+        mirror has not applied yet, which makes even staleness-covered keys
+        unreachable.  One endpoint per scope means one consistent arena (the
+        primary, or a single mirror's prefix cut) for the whole traversal;
+        load still spreads across endpoints scope-to-scope."""
         prev = self.read_policy
+        prev_pin = self._target_pin
         self.read_policy = policy
+        self._target_pin = {} if policy is not None else None
         try:
             yield
         finally:
             self.read_policy = prev
+            self._target_pin = prev_pin
 
     def _read_target(self, h: StructHandle) -> ReadTarget:
+        pin = self._target_pin
+        if pin is None:
+            return self._resolve_read_target(h)
+        tgt = pin.get(h.name)
+        if tgt is not None:
+            return tgt
+        tgt = self._resolve_read_target(h)
+        # pin only when some mirror actually lags: synchronous mirrors are
+        # byte-identical to the primary, so per-wave re-picking (load
+        # spreading) cannot mix cuts there.  Lag state cannot change inside
+        # a read-only scope (single-writer sim), so deciding once is sound.
+        if any(m.lag_writes > 0 or m._pending for m in self.backend.mirrors):
+            pin[h.name] = tgt
+        return tgt
+
+    def _resolve_read_target(self, h: StructHandle) -> ReadTarget:
         """Resolve where the next remote read (wave) for `h` is served.
 
         Mirrors are eligible only when their replica lag — this front-end's
@@ -1179,8 +1220,14 @@ class FrontEnd:
         for h in dirty:
             if not h.wbuf and h.pending_ops == 0:
                 continue
-            entries = [MemLog(self.backend.name_slot_addr(h.opsn_name), struct.pack("<Q", h.seq))]
-            entries += [MemLog(a, d) for a, d in h.wbuf.items()]
+            # the opsn watermark trails the data writes it covers: the tx
+            # still applies all-or-none on recovery (intra-tx order is free
+            # there), but mirrors apply the stream write-by-write, so a
+            # mirror's opsn copy must never advance past data it is missing
+            # — replica reads gate on it (NVMBackend.replica_whole_seq)
+            entries = [MemLog(a, d) for a, d in h.wbuf.items()]
+            entries.append(MemLog(self.backend.name_slot_addr(h.opsn_name),
+                                  struct.pack("<Q", h.seq)))
             payload = encode_tx(entries)
             self.backend.tx_append(h.txlog_area, payload)
             total += len(payload)

@@ -20,8 +20,11 @@ this yields natural contention when several front-ends share one blade
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
+
+from ..obs.hist import LatencyHistogram
 
 
 @dataclasses.dataclass
@@ -381,3 +384,204 @@ class Clock:
         if t > self.now:
             self.now = t
         return self.now
+
+
+# ===================================================== open-loop traffic engine
+#
+# Everything above models *service*: how long an op takes once a front-end
+# starts it.  Closed-loop benchmarks (each thread issues the next op when the
+# last returns) therefore measure service time only — they cannot produce
+# queueing or tail latency, because offered load always exactly equals
+# capacity.  The engine below adds the missing half: arrivals.  Ops carry an
+# arrival timestamp drawn from a seeded Poisson process (or replayed from a
+# trace), queue FIFO at their front-end, and are dispatched in batches by a
+# deterministic event loop, so the recorded latency is true
+# arrival-to-completion time (queueing + service) and offered load is an
+# independent knob.  Nothing here runs unless a benchmark builds an engine —
+# the closed-loop path stays the default and is byte-identical without it.
+
+
+def poisson_arrivals(rate_ops_per_s: float, n: int, seed: int = 0,
+                     start_ns: float = 0.0) -> np.ndarray:
+    """``n`` arrival timestamps (ns, float64, ascending) of a seeded Poisson
+    process with the given mean rate.  Deterministic for a fixed seed."""
+    if n <= 0:
+        return np.empty(0, dtype=np.float64)
+    if rate_ops_per_s <= 0.0:
+        raise ValueError("rate must be positive")
+    rng = np.random.default_rng(seed)
+    mean_gap_ns = 1e9 / rate_ops_per_s
+    gaps = rng.exponential(mean_gap_ns, size=n)
+    return start_ns + np.cumsum(gaps)
+
+
+def trace_arrivals(timestamps_ns) -> np.ndarray:
+    """Validate a replayed arrival trace: float64, sorted, non-negative."""
+    ts = np.asarray(timestamps_ns, dtype=np.float64)
+    if ts.ndim != 1:
+        raise ValueError("trace must be one-dimensional")
+    if len(ts) and float(ts[0]) < 0.0:
+        raise ValueError("trace timestamps must be non-negative")
+    if np.any(np.diff(ts) < 0.0):
+        ts = np.sort(ts, kind="stable")
+    return ts
+
+
+def merge_streams(streams: "dict") -> "tuple[np.ndarray, np.ndarray]":
+    """Merge per-tenant arrival streams ``{tenant_id: timestamps}`` into one
+    timeline.  Returns ``(timestamps, tenant_ids)`` sorted by time; ties
+    break by tenant id so the merge is deterministic."""
+    if not streams:
+        return np.empty(0, dtype=np.float64), np.empty(0, dtype=np.int64)
+    parts_ts, parts_tid = [], []
+    for tid in sorted(streams):
+        ts = np.asarray(streams[tid], dtype=np.float64)
+        parts_ts.append(ts)
+        parts_tid.append(np.full(len(ts), int(tid), dtype=np.int64))
+    all_ts = np.concatenate(parts_ts)
+    all_tid = np.concatenate(parts_tid)
+    order = np.lexsort((all_tid, all_ts))
+    return all_ts[order], all_tid[order]
+
+
+class OpenLoopOp:
+    """One queued operation: an arrival timestamp plus an opaque payload the
+    station's executor interprets (op kind, key, value, tenant...)."""
+
+    __slots__ = ("ts", "kind", "key", "value", "tenant")
+
+    def __init__(self, ts: float, kind: str, key=None, value=None, tenant: int = 0):
+        self.ts = ts
+        self.kind = kind
+        self.key = key
+        self.value = value
+        self.tenant = tenant
+
+
+class OpenLoopStation:
+    """One serving front-end in the open-loop timeline: a clock, a FIFO
+    arrival queue, and an executor ``execute(batch)`` that performs the ops
+    and advances the clock (any closed-loop code — a ``ShardedHashTable``
+    bound to a ``ClusterFrontEnd``, a raw ``FrontEnd`` — works unchanged)."""
+
+    def __init__(self, clock: Clock, execute, station_id: int = 0,
+                 max_batch: int = 64):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.clock = clock
+        self.execute = execute
+        self.station_id = station_id
+        self.max_batch = max_batch
+        self._ts = np.empty(0, dtype=np.float64)  # arrival times, ascending
+        self._ops: "list[OpenLoopOp]" = []
+        self._head = 0  # first unserved op
+        self.served = 0
+
+    def offer(self, ops: "list[OpenLoopOp]") -> None:
+        """Load this station's arrival stream (must be time-sorted)."""
+        ts = np.asarray([op.ts for op in ops], dtype=np.float64)
+        if np.any(np.diff(ts) < 0.0):
+            raise ValueError("arrivals must be time-sorted")
+        self._ops = list(ops)
+        self._ts = ts
+        self._head = 0
+
+    @property
+    def pending(self) -> int:
+        return len(self._ops) - self._head
+
+    def backlog(self, now: float) -> int:
+        """Ops that have arrived by ``now`` but not yet started service."""
+        due = int(np.searchsorted(self._ts, now, side="right"))
+        return max(0, due - self._head)
+
+
+class OpenLoopEngine:
+    """Deterministic event loop dispatching queued arrivals across stations.
+
+    Each step picks the station whose next feasible dispatch time
+    ``max(clock.now, head_arrival)`` is smallest (ties break by station id),
+    batches every op that has arrived by then (up to ``max_batch``), runs the
+    station's executor, and records per-op **arrival-to-completion** latency
+    — queueing delay plus service — into per-kind histograms.  Queue depth is
+    sampled after every dispatch.  The loop is causal (a batch never contains
+    an op that arrives after its dispatch time) and fully deterministic.
+
+    Registers with an active ``repro.obs`` session so arrival-latency
+    histograms and queue-depth gauges ride the normal metrics export.
+    """
+
+    def __init__(self, stations: "list[OpenLoopStation]", name: str = "open_loop"):
+        self.stations = list(stations)
+        self.name = name
+        self.arrival_hist: "dict[str, LatencyHistogram]" = {}
+        # plain dict so an obs session can fold it after the engine dies
+        self.depth = {"max": 0, "sum": 0, "samples": 0}
+        self.served = 0
+        from .. import obs  # lazy: keep the sim substrate import-light
+        sess = obs.session()
+        if sess is not None:
+            sess.register_open_loop(self)
+
+    def _hist(self, kind: str) -> LatencyHistogram:
+        h = self.arrival_hist.get(kind)
+        if h is None:
+            h = self.arrival_hist[kind] = LatencyHistogram()
+        return h
+
+    def run(self) -> "dict":
+        """Drain every station's queue; returns a summary dict."""
+        heap = []
+        for i, st in enumerate(self.stations):
+            if st.pending:
+                heapq.heappush(
+                    heap, (max(st.clock.now, float(st._ts[st._head])), i))
+        while heap:
+            t, i = heapq.heappop(heap)
+            st = self.stations[i]
+            if st._head >= len(st._ops):
+                continue
+            start = max(st.clock.now, float(st._ts[st._head]))
+            if start > t:
+                # the station's clock moved since this entry was pushed
+                # (e.g. another station's recovery touched it) — re-key
+                heapq.heappush(heap, (start, i))
+                continue
+            due = int(np.searchsorted(st._ts, start, side="right"))
+            hi = min(due, st._head + st.max_batch)
+            if hi <= st._head:  # float slop: serve at least the head op
+                hi = st._head + 1
+            batch = st._ops[st._head:hi]
+            st._head = hi
+            st.clock.advance_to(start)
+            st.execute(batch)
+            now = st.clock.now
+            for op in batch:
+                self._hist(op.kind).record(now - op.ts)
+            n = len(batch)
+            st.served += n
+            self.served += n
+            depth = st.backlog(now)
+            d = self.depth
+            if depth > d["max"]:
+                d["max"] = depth
+            d["sum"] += depth
+            d["samples"] += 1
+            if st._head < len(st._ops):
+                heapq.heappush(
+                    heap, (max(now, float(st._ts[st._head])), i))
+        return self.summary()
+
+    def summary(self) -> "dict":
+        makespan = max((st.clock.now for st in self.stations), default=0.0)
+        d = self.depth
+        return {
+            "served": self.served,
+            "makespan_ns": makespan,
+            "throughput_kops": (
+                self.served / makespan * 1e6 if makespan > 0.0 else 0.0),
+            "latency": {k: h.snapshot()
+                        for k, h in sorted(self.arrival_hist.items())},
+            "queue_depth_max": d["max"],
+            "queue_depth_mean": d["sum"] / d["samples"] if d["samples"] else 0.0,
+        }

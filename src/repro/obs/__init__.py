@@ -58,10 +58,16 @@ class ObsSession:
         self._live_fes: List[weakref.ref] = []
         self._live_cfes: List[weakref.ref] = []
         self._live_clusters: List[weakref.ref] = []
+        self._live_result_caches: List[weakref.ref] = []
+        self._live_open_loops: List[weakref.ref] = []
         # accumulators folded from objects that have been garbage-collected
         self._dead_stats: Dict[str, float] = {}
         self._dead_hists: Dict[str, LatencyHistogram] = {}
         self._dead_cfe_hists: Dict[str, LatencyHistogram] = {}
+        self._dead_rc_counters: Dict[str, float] = {}
+        self._dead_arrival_hists: Dict[str, LatencyHistogram] = {}
+        self._dead_depth: Dict[str, float] = {"max": 0, "sum": 0, "samples": 0}
+        self._dead_ol_served = 0
         if metrics:
             _profile.reset()
             _profile.enable()
@@ -78,6 +84,20 @@ class ObsSession:
     def register_cluster(self, cluster) -> None:
         self._live_clusters.append(weakref.ref(cluster))
 
+    def register_result_cache(self, rc) -> None:
+        """Track a ResultCache; its counters dict (small, owned by the
+        cache) survives the cache via finalize-folding, so the export sees
+        every cache's traffic, dead or alive."""
+        self._live_result_caches.append(weakref.ref(rc))
+        weakref.finalize(rc, self._fold_result_cache, rc.counters)
+
+    def register_open_loop(self, engine) -> None:
+        """Track an OpenLoopEngine's arrival-latency histograms and queue
+        depth aggregates (both small dicts, finalize-folded)."""
+        self._live_open_loops.append(weakref.ref(engine))
+        weakref.finalize(engine, self._fold_open_loop,
+                         engine.arrival_hist, engine.depth)
+
     def _fold_fe(self, stats, op_hist: Dict[str, LatencyHistogram]) -> None:
         for k, v in stats.snapshot().items():
             self._dead_stats[k] = self._dead_stats.get(k, 0) + v
@@ -87,6 +107,21 @@ class ObsSession:
     def _fold_cfe(self, op_hist: Dict[str, LatencyHistogram]) -> None:
         for op, h in op_hist.items():
             self._dead_cfe_hists.setdefault(op, LatencyHistogram()).merge(h)
+
+    def _fold_result_cache(self, counters: Dict[str, int]) -> None:
+        for k, v in counters.items():
+            self._dead_rc_counters[k] = self._dead_rc_counters.get(k, 0) + v
+
+    def _fold_open_loop(self, arrival_hist: Dict[str, LatencyHistogram],
+                        depth: Dict[str, float]) -> None:
+        for kind, h in arrival_hist.items():
+            self._dead_arrival_hists.setdefault(
+                kind, LatencyHistogram()).merge(h)
+        d = self._dead_depth
+        d["max"] = max(d["max"], depth["max"])
+        d["sum"] += depth["sum"]
+        d["samples"] += depth["samples"]
+        self._dead_ol_served += sum(h.count for h in arrival_hist.values())
 
     # --------------------------------------------------------- aggregation
     @staticmethod
@@ -115,6 +150,40 @@ class ObsSession:
                 hists.setdefault(op, LatencyHistogram()).merge(h)
         return hists
 
+    def result_cache_totals(self) -> Dict[str, float]:
+        """Summed ResultCache counters over every cache the session ever
+        saw (dead accumulators + live scrape)."""
+        totals = dict(self._dead_rc_counters)
+        for rc in self._alive(self._live_result_caches):
+            for k, v in rc.counters.items():
+                totals[k] = totals.get(k, 0) + v
+        return totals
+
+    def page_cache_totals(self) -> Dict[str, float]:
+        """Summed ``PageCache.stats()`` over the *live* front-ends (page
+        caches are multi-MB arenas, so dead ones are never pinned for
+        folding — gauges describe the caches currently in memory)."""
+        totals: Dict[str, float] = {}
+        for fe in self._alive(self._live_fes):
+            for k, v in fe.cache.stats().items():
+                totals[k] = totals.get(k, 0) + v
+        return totals
+
+    def arrival_totals(self) -> Tuple[Dict[str, LatencyHistogram], Dict[str, float], int]:
+        """Merged open-loop arrival-latency histograms, queue-depth
+        aggregates, and total served ops (dead + live engines)."""
+        hists = {k: h.copy() for k, h in self._dead_arrival_hists.items()}
+        depth = dict(self._dead_depth)
+        served = self._dead_ol_served
+        for eng in self._alive(self._live_open_loops):
+            for kind, h in eng.arrival_hist.items():
+                hists.setdefault(kind, LatencyHistogram()).merge(h)
+            depth["max"] = max(depth["max"], eng.depth["max"])
+            depth["sum"] += eng.depth["sum"]
+            depth["samples"] += eng.depth["samples"]
+            served += eng.served
+        return hists, depth, served
+
     def rebase(self) -> None:
         if self.tracer is not None:
             self.tracer.rebase()
@@ -134,6 +203,26 @@ class ObsSession:
             reg.histogram("cluster_op_latency_ns", h,
                           help="per-op sim-time latency (cluster front-end level)",
                           op=op)
+        for k, v in sorted(self.page_cache_totals().items()):
+            reg.gauge(f"fe_page_cache_{k}", v,
+                      help="summed PageCache.stats() over live front-ends")
+        rc_totals = self.result_cache_totals()
+        for k, v in sorted(rc_totals.items()):
+            reg.counter(f"fe_result_cache_{k}", v,
+                        help="summed ResultCache counters over all result "
+                             "caches (hits/misses/invalidation tiers)")
+        arr_hists, depth, served = self.arrival_totals()
+        if served:
+            for kind, h in sorted(arr_hists.items()):
+                reg.histogram("arrival_latency_ns", h,
+                              help="open-loop arrival-to-completion latency "
+                                   "(queueing + service)", op=kind)
+            reg.counter("open_loop_ops_served", served)
+            reg.gauge("open_loop_queue_depth_max", depth["max"],
+                      help="deepest front-end arrival queue observed")
+            reg.gauge("open_loop_queue_depth_mean",
+                      depth["sum"] / depth["samples"] if depth["samples"] else 0.0,
+                      help="mean arrival-queue depth sampled per dispatch")
         for name, v in sorted(self.counters.items()):
             reg.counter(name, v)
         for ci, cl in enumerate(self.clusters()):

@@ -45,6 +45,15 @@ class strategies:
         return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
     @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    @staticmethod
     def binary(min_size: int = 0, max_size: int = 64) -> _Strategy:
         def draw(rng: random.Random) -> bytes:
             n = rng.randint(min_size, max_size)

@@ -1,0 +1,118 @@
+"""Seeded key-distribution generators (benchmarks.keydist).
+
+These feed the open-loop figure and the cache panels, so the tests pin the
+exact streams for a fixed seed — a silent numpy/RNG behavior change would
+otherwise quietly re-baseline every committed benchmark number.
+"""
+
+import numpy as np
+import pytest
+
+from benchmarks.keydist import (
+    hot_set_keys,
+    op_mix,
+    uniform_keys,
+    zipf_keys,
+    zipf_ranks,
+)
+
+
+# ----------------------------------------------------------- pinned streams
+def test_uniform_keys_pinned_for_seed_zero():
+    assert uniform_keys(8, 1000, seed=0).tolist() == \
+        [850, 636, 511, 269, 307, 40, 75, 16]
+
+
+def test_zipf_ranks_pinned_for_seed_zero():
+    assert zipf_ranks(8, 1000, theta=0.99, seed=0).tolist() == \
+        [69, 3, 0, 0, 257, 531, 55, 138]
+
+
+def test_zipf_keys_pinned_for_seed_zero():
+    # the scrambled stream: same ranks pushed through splitmix64
+    assert zipf_keys(8, 1000, theta=0.99, seed=0).tolist() == \
+        [871, 53, 535, 535, 452, 39, 508, 774]
+
+
+def test_hot_set_keys_pinned_for_seed_zero():
+    assert hot_set_keys(8, 1000, seed=0).tolist() == \
+        [39, 636, 85, 55, 3, 40, 76, 72]
+
+
+def test_op_mix_pinned_for_seed_zero():
+    assert op_mix(8, 0.75, seed=0).tolist() == \
+        [True, True, True, True, False, False, True, True]
+
+
+# ------------------------------------------------------------- determinism
+@pytest.mark.parametrize("gen", [
+    lambda s: uniform_keys(512, 4096, seed=s),
+    lambda s: zipf_keys(512, 4096, seed=s),
+    lambda s: zipf_keys(512, 4096, seed=s, scramble=False),
+    lambda s: hot_set_keys(512, 4096, seed=s),
+    lambda s: op_mix(512, 0.9, seed=s),
+])
+def test_generators_deterministic_per_seed(gen):
+    assert np.array_equal(gen(7), gen(7))
+    assert not np.array_equal(gen(7), gen(8))
+
+
+def test_all_keys_in_range():
+    for arr in (uniform_keys(2000, 333, seed=1),
+                zipf_keys(2000, 333, seed=1),
+                hot_set_keys(2000, 333, seed=1)):
+        assert arr.dtype == np.int64
+        assert arr.min() >= 0 and arr.max() < 333
+
+
+# ------------------------------------------------------------ distribution
+def test_zipf_ranks_are_skewed_head_heavy():
+    ranks = zipf_ranks(20000, 1000, theta=0.99, seed=3)
+    counts = np.bincount(ranks, minlength=1000)
+    # rank 0 is the mode, and the top decile dominates the draw
+    assert counts[0] == counts.max()
+    assert counts[:100].sum() > 0.55 * len(ranks)
+    # uniform draws nowhere near that concentration
+    ucounts = np.bincount(uniform_keys(20000, 1000, seed=3), minlength=1000)
+    assert ucounts[:100].sum() < 0.2 * len(ranks)
+
+
+def test_scramble_preserves_popularity_structure():
+    """Scrambling relabels keys through a fixed hash: the sorted frequency
+    profile (who cares which key is hottest) is identical to the ranks'."""
+    n, ks = 20000, 1000
+    ranks = zipf_keys(n, ks, seed=5, scramble=False)
+    keys = zipf_keys(n, ks, seed=5, scramble=True)
+    rfreq = np.sort(np.bincount(ranks, minlength=ks))
+    # splitmix64 % keyspace can collide two ranks onto one key, which only
+    # merges adjacent frequencies — the top-of-head mass must still match
+    kfreq = np.sort(np.bincount(keys, minlength=ks))
+    assert kfreq[-1] >= rfreq[-1]
+    assert kfreq[-10:].sum() >= rfreq[-10:].sum()
+    # and the hot mass is spread over the keyspace, not clustered at 0
+    hot = np.argsort(np.bincount(keys, minlength=ks))[-10:]
+    assert hot.max() > ks // 4
+
+
+def test_hot_set_concentration():
+    keys = hot_set_keys(20000, 1000, hot_frac=0.1, hot_prob=0.9, seed=2)
+    in_hot = (keys < 100).mean()
+    assert 0.85 < in_hot < 0.95  # hot_prob + the uniform draws that land hot
+
+
+def test_op_mix_fraction():
+    reads = op_mix(20000, 0.95, seed=4)
+    assert 0.94 < reads.mean() < 0.96
+
+
+# -------------------------------------------------------------- validation
+def test_zipf_theta_validated():
+    with pytest.raises(ValueError):
+        zipf_ranks(10, 100, theta=0.0)
+    with pytest.raises(ValueError):
+        zipf_ranks(10, 100, theta=1.0)
+
+
+def test_hot_frac_validated():
+    with pytest.raises(ValueError):
+        hot_set_keys(10, 100, hot_frac=0.0)

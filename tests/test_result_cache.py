@@ -1,0 +1,278 @@
+"""Front-end result cache: LRU tiers, group invalidation wiring, and the
+staleness/RYW safety contract (PR 9).
+
+The contract under test:
+
+  * ``ResultCache`` is a bounded LRU with three invalidation tiers —
+    per-key, per-group (shard), global — and exact counters;
+  * every reconfiguration's lease-revocation broadcast drops exactly the
+    affected groups from every registered cache (migration: the moved
+    shard; failover/reboot: the blade's shards; directory bootstrap:
+    everything);
+  * a result-cache read NEVER violates read-your-writes pins or the
+    bounded-staleness contract: pinned keys bypass the cache entirely,
+    admission accepts replica-served values only when the mirrors provably
+    cover the op, and writes fence their key before dispatch.
+"""
+
+import random
+
+import pytest
+
+from repro.cluster import (
+    ClusterFrontEnd,
+    NVMCluster,
+    ReadPolicy,
+    ShardedHashTable,
+    migrate_shard,
+)
+from repro.cluster.failover import promote_blade
+from repro.core import FEConfig
+from repro.core.cache import ResultCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+except Exception:  # pragma: no cover - container without hypothesis
+    from _hypothesis_shim import given, settings, strategies as st
+
+
+def _mk_cluster(n_blades=2, n_shards=8, **kw):
+    return NVMCluster(n_blades=n_blades, n_shards=n_shards,
+                      capacity_per_blade=1 << 24, **kw)
+
+
+def _mk_table(cluster, rc_entries=512, policy=None, fe_id=0, name="ht"):
+    cfe = ClusterFrontEnd(cluster, FEConfig(use_oplog=True, use_cache=False,
+                                            use_batch=True,
+                                            result_cache_entries=rc_entries),
+                          fe_id=fe_id)
+    return cfe, ShardedHashTable(cfe, name, read_policy=policy)
+
+
+# ------------------------------------------------------------- unit: tiers
+def test_result_cache_lru_eviction_order():
+    rc = ResultCache(capacity_entries=3)
+    for k in (1, 2, 3):
+        rc.put(k, k * 10, group=0)
+    rc.get(1)            # 1 becomes most-recent
+    rc.put(4, 40, group=0)  # evicts 2, the least-recent
+    assert rc.get(2) == (False, None)
+    assert rc.get(1) == (True, 10)
+    assert rc.get(3) == (True, 30)
+    assert rc.get(4) == (True, 40)
+    assert rc.counters["evictions"] == 1
+    assert rc.stats()["entries"] == 3
+
+
+def test_result_cache_invalidation_tiers():
+    rc = ResultCache(capacity_entries=64)
+    for k in range(10):
+        rc.put(k, k, group=k % 3)
+    assert rc.invalidate_key(4)
+    assert not rc.invalidate_key(4)       # already gone
+    assert rc.get(4) == (False, None)
+    n = rc.invalidate_group(0)            # keys 0,3,6,9
+    assert n == 4
+    assert rc.get(0) == (False, None) and rc.get(9) == (False, None)
+    assert rc.get(1) == (True, 1)         # other groups untouched
+    n = rc.invalidate_all()
+    assert n == 5                          # 10 - 1 (key) - 4 (group)
+    assert rc.stats()["entries"] == 0
+    assert rc.counters["invalidations_key"] == 1
+    assert rc.counters["invalidations_group"] == 4
+    assert rc.counters["invalidations_global"] == 5
+
+
+def test_result_cache_group_reassignment_and_hit_rate():
+    rc = ResultCache(capacity_entries=8)
+    rc.put(7, 70, group=1)
+    rc.put(7, 71, group=2)       # same key moves group
+    assert rc.invalidate_group(1) == 0
+    assert rc.get(7) == (True, 71)
+    assert rc.invalidate_group(2) == 1
+    assert rc.get(7) == (False, None)
+    s = rc.stats()
+    assert s["hits"] == 1 and s["misses"] == 1 and s["hit_rate"] == 0.5
+
+
+def test_result_cache_capacity_validated():
+    with pytest.raises(ValueError):
+        ResultCache(capacity_entries=0)
+
+
+# ------------------------------------------------- integration: cluster path
+def test_sharded_get_hits_cache_and_write_fences():
+    cluster = _mk_cluster(num_mirrors=0)
+    cfe, ht = _mk_table(cluster)
+    rc = ht._result_cache
+    ht.put(5, 50)
+    assert ht.get(5) == 50          # miss -> fetch -> admit
+    assert rc.counters["misses"] == 1 and rc.counters["admitted"] == 1
+    t0 = cfe.clock.now
+    assert ht.get(5) == 50          # served locally
+    assert rc.counters["hits"] == 1
+    # a local hit costs DRAM, not a network round trip
+    assert cfe.clock.now - t0 < cfe.cost.rtt_ns
+    ht.put(5, 51)                   # write fences the key pre-dispatch
+    assert rc.counters["invalidations_key"] >= 1
+    assert ht.get(5) == 51
+
+
+def test_get_many_mixes_hits_and_misses():
+    cluster = _mk_cluster(num_mirrors=0)
+    _, ht = _mk_table(cluster)
+    ht.put_many([(k, k + 100) for k in range(20)])
+    assert ht.get_many(list(range(20))) == [k + 100 for k in range(20)]
+    rc = ht._result_cache
+    assert rc.counters["admitted"] == 20
+    ht.put_many([(k, k + 200) for k in range(5)])   # invalidates 0..4
+    got = ht.get_many(list(range(20)))
+    assert got == [k + 200 for k in range(5)] + [k + 100 for k in range(5, 20)]
+    assert rc.counters["hits"] >= 15
+
+
+def test_migration_invalidates_exactly_the_moved_group():
+    cluster = _mk_cluster(n_shards=8, num_mirrors=0)
+    _, ht = _mk_table(cluster)
+    ht.put_many([(k, k) for k in range(200)])
+    ht.get_many(list(range(200)))   # warm every group
+    rc = ht._result_cache
+    before = rc.stats()["entries"]
+    shard = 2
+    expect_drop = sum(1 for k in range(200)
+                      if cluster.directory.shard_of(k) == shard)
+    dst = cluster.add_blade()
+    migrate_shard(ht, shard, dst)
+    assert rc.counters["invalidations_group"] == expect_drop
+    assert rc.counters["invalidations_global"] == 0
+    assert rc.stats()["entries"] == before - expect_drop
+    # post-migration reads are correct and repopulate the moved group
+    assert ht.get_many(list(range(200))) == list(range(200))
+
+
+def test_failover_invalidates_the_dead_blades_shards():
+    cluster = _mk_cluster(n_blades=2, n_shards=8, num_mirrors=1)
+    cfe, ht = _mk_table(cluster)
+    ht.put_many([(k, k) for k in range(200)])
+    ht.drain()
+    ht.get_many(list(range(200)))
+    rc = ht._result_cache
+    before = rc.stats()["entries"]
+    victim = cluster.directory.blade_of(cluster.directory.shard_of(0))
+    dead_shards = set(cluster.directory.shards_on(victim))
+    expect_drop = sum(1 for k in range(200)
+                      if cluster.directory.shard_of(k) in dead_shards)
+    cluster.blades[victim].crash()
+    promote_blade(cluster, victim, clock=cfe.clock)
+    assert rc.counters["invalidations_group"] == expect_drop
+    assert rc.stats()["entries"] == before - expect_drop
+    assert ht.get_many(list(range(200))) == list(range(200))
+
+
+def test_global_revocation_drops_everything():
+    cluster = _mk_cluster(num_mirrors=0)
+    _, ht = _mk_table(cluster)
+    ht.put_many([(k, k) for k in range(50)])
+    ht.get_many(list(range(50)))
+    rc = ht._result_cache
+    assert rc.stats()["entries"] == 50
+    cluster.revoke_leases()          # no shard scope -> global
+    assert rc.stats()["entries"] == 0
+    assert rc.counters["invalidations_global"] == 50
+
+
+def test_pinned_keys_bypass_the_cache_until_watermark():
+    """With frozen mirrors every write pins its key: reads must go to the
+    primary (bypassing the cache both ways) and still see the write."""
+    cluster = _mk_cluster(num_mirrors=1)
+    for be in cluster.blades.values():
+        for m in be.mirrors:
+            m.lag_writes = 1 << 30
+    policy = ReadPolicy(mode="auto", max_staleness_ops=1 << 40)
+    _, ht = _mk_table(cluster, policy=policy)
+    rc = ht._result_cache
+    ht.put_many([(k, k + 7) for k in range(30)])
+    assert ht.get_many(list(range(30))) == [k + 7 for k in range(30)]
+    assert all(ht.get(k) == k + 7 for k in range(30))
+    # every one of those reads bypassed: nothing admitted, nothing hit
+    assert rc.counters["admitted"] == 0
+    assert rc.counters["hits"] == 0
+    assert rc.counters["pinned_bypass"] > 0
+    # mirrors catch up -> pins release -> the cache starts serving
+    for be in cluster.blades.values():
+        for m in be.mirrors:
+            m.lag_writes = 0
+            m.sync()
+    ht.drain()
+    assert ht.get_many(list(range(30))) == [k + 7 for k in range(30)]
+    assert ht.get_many(list(range(30))) == [k + 7 for k in range(30)]
+    assert rc.counters["hits"] > 0
+
+
+def test_result_cache_disabled_by_default():
+    cluster = _mk_cluster(num_mirrors=0)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rcb(cache_bytes=4096), fe_id=0)
+    ht = ShardedHashTable(cfe, "ht")
+    assert ht._result_cache is None
+    ht.put(1, 2)
+    assert ht.get(1) == 2
+
+
+# ----------------------------------------------------- property: safety net
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=999),
+       st.sampled_from([0, 3, 1 << 30]),
+       st.booleans())
+def test_result_cache_reads_never_violate_ryw_or_staleness(seed, lag, strict):
+    """Random writes + reads + all three invalidation tiers + lease
+    revocations, against a per-key version-history oracle.
+
+    The policy is strict (bound 0) or unbounded-with-pins; in BOTH cases a
+    single-writer front-end must always read its own latest value: strict
+    mode forbids stale replica serves outright, and unbounded mode pins
+    every write until the mirror watermark covers it.  Any stale result
+    cache entry — admitted from a lagging mirror, surviving a write fence,
+    or surviving a revocation its group was named in — breaks the check.
+    """
+    cluster = _mk_cluster(n_blades=2, n_shards=8, num_mirrors=1)
+    for be in cluster.blades.values():
+        for m in be.mirrors:
+            m.lag_writes = lag
+    bound = 0 if strict else 1 << 40
+    policy = ReadPolicy(mode="auto", max_staleness_ops=bound)
+    cfe, ht = _mk_table(cluster, rc_entries=128, policy=policy)
+    rc = ht._result_cache
+    rng = random.Random(seed)
+    history = {}     # key -> list of values, latest last
+    next_value = 1
+    for step in range(150):
+        r = rng.random()
+        k = rng.randrange(40)
+        if r < 0.35:
+            ht.put(k, next_value)
+            history.setdefault(k, []).append(next_value)
+            next_value += 1
+        elif r < 0.45:
+            pairs = [(rng.randrange(40), next_value + j) for j in range(4)]
+            next_value += 4
+            ht.put_many(pairs)
+            for pk, pv in pairs:
+                history.setdefault(pk, []).append(pv)
+        elif r < 0.85:
+            want = history[k][-1] if k in history else None
+            before_hits = rc.counters["hits"]
+            got = ht.get(k)
+            assert got == want, (
+                f"step {step}: key {k} -> {got}, want {want} "
+                f"(cache hit: {rc.counters['hits'] > before_hits})")
+        elif r < 0.90:
+            rc.invalidate_group(rng.randrange(8))
+        elif r < 0.95:
+            cluster.revoke_leases(cfe.clock,
+                                  shards=(rng.randrange(8), rng.randrange(8)))
+        else:
+            cluster.revoke_leases(cfe.clock)   # global
+    # final sweep: every key must read back its latest history entry
+    keys = sorted(history)
+    assert ht.get_many(keys) == [history[k][-1] for k in keys]
+    assert ht.get_many(keys) == [history[k][-1] for k in keys]
