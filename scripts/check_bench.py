@@ -36,6 +36,18 @@ of the baseline, ``hit_rate_at_ref`` may not fall below baseline x 0.8,
 and ``p99_at_ref_us`` may not exceed baseline x 1.25.  All are
 deterministic virtual-time numbers.
 
+``BENCH_multi_writer.json`` rows (benchmarks/fig10_multi_frontend.py)
+carry their own guards on the ``multi_writer_sweep`` summary:
+``committed_stale_epochs`` and ``read_back_mismatches`` must be ZERO
+(hard invariants — a fenced stale writer's ops vanish whole, never land),
+``speedup_8v1`` must stay >= 2.0 (the multi-writer scaling headline) and
+within ``--max-drop`` of the baseline, ``write_lease_steals`` must not
+collapse to zero while the baseline exercised steals, and
+``steal_p99_us`` may not exceed baseline x 1.25.
+
+Pointing either argument at a ``*.smoke.json`` file is an immediate error
+(exit 2): smoke records are toy-size artifacts and guard nothing.
+
 ``BENCH_availability.json`` rows (benchmarks/fig_availability.py) carry
 their own guards: ``durability_violations`` must be ZERO in the fresh run
 (hard invariant, no tolerance), ``auto_promotions`` and
@@ -169,6 +181,59 @@ def _check_open_loop(fresh: dict, base: dict, max_drop: float) -> bool:
     return failed
 
 
+def _check_multi_writer(fresh: dict, base: dict, max_drop: float) -> bool:
+    """Guards for the fig10 multi-writer record; returns True on failure.
+
+    ``committed_stale_epochs`` and ``read_back_mismatches`` are hard
+    invariants (the epoch fence may reject a stale writer's group commit —
+    counted in ``fenced_appends`` — but NONE of its entries may land);
+    ``speedup_8v1`` is the scaling headline (absolute floor 2x, and within
+    ``--max-drop`` of the baseline); ``steal_p99_us`` is the lease-steal
+    latency ceiling (deterministic virtual time, 1.25x baseline)."""
+    bs = base.get("multi_writer_sweep")
+    if bs is None:
+        return False
+    fs = fresh.get("multi_writer_sweep")
+    if fs is None:
+        print("check_bench: FAIL multi_writer_sweep missing from fresh record",
+              file=sys.stderr)
+        return True
+    failed = False
+    for key in ("committed_stale_epochs", "read_back_mismatches"):
+        v = fs.get(key, 0)
+        if v:
+            print(f"check_bench: FAIL multi_writer_sweep: {key}={v} "
+                  "(must be 0)", file=sys.stderr)
+            failed = True
+        else:
+            print(f"check_bench: multi_writer_sweep: {key}=0 ok")
+    cur = fs.get("speedup_8v1", 0.0)
+    floor = max(2.0, bs["speedup_8v1"] * (1.0 - max_drop))
+    status = "ok"
+    if cur < floor:
+        status = f"FAIL (<{floor:.2f})"
+        failed = True
+    print(f"check_bench: multi_writer speedup_8v1: baseline "
+          f"{bs['speedup_8v1']:.2f}x fresh {cur:.2f}x {status}")
+    cur = fs.get("write_lease_steals", 0)
+    status = "ok"
+    if cur == 0 and bs.get("write_lease_steals", 0) > 0:
+        # the high-contention cells stopped exercising the steal path
+        status = "FAIL (=0)"
+        failed = True
+    print(f"check_bench: multi_writer write_lease_steals: baseline "
+          f"{bs.get('write_lease_steals', 0)} fresh {cur} {status}")
+    cur = fs.get("steal_p99_us", float("inf"))
+    ceil = bs["steal_p99_us"] * 1.25
+    status = "ok"
+    if cur > ceil:
+        status = f"FAIL (>{ceil:.2f}us)"
+        failed = True
+    print(f"check_bench: multi_writer steal_p99_us: baseline "
+          f"{bs['steal_p99_us']:.2f} fresh {cur:.2f} {status}")
+    return failed
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh")
@@ -189,6 +254,14 @@ def main(argv=None) -> int:
                          "throughput_dip_frac over the baseline")
     args = ap.parse_args(argv)
 
+    for role, path in (("fresh", args.fresh), ("baseline", args.baseline)):
+        if path.endswith(".smoke.json"):
+            print(f"check_bench: {role} record {path} is a --smoke artifact "
+                  "(toy sizes, .gitignore'd, never a baseline) — regenerate "
+                  "at the committed baseline's sizes and point the guard at "
+                  "that instead", file=sys.stderr)
+            return 2
+
     fresh, fwall_ops, fmeta, fall = _load(args.fresh)
     base, bwall_ops, bmeta, ball = _load(args.baseline)
 
@@ -205,6 +278,8 @@ def main(argv=None) -> int:
                            args.max_dip_increase):
         failed = True
     if _check_open_loop(fall, ball, args.max_drop):
+        failed = True
+    if _check_multi_writer(fall, ball, args.max_drop):
         failed = True
     for name, ref in sorted(base.items()):
         cur = fresh.get(name)

@@ -49,6 +49,14 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # --smoke --json BENCH_open_loop.json)
     python -m benchmarks.fig_open_loop --smoke --json "$scratch/open_loop_fresh.json"
     python scripts/check_bench.py "$scratch/open_loop_fresh.json" BENCH_open_loop.json
+    echo "== multi-writer smoke: lease-fenced contended writers vs the scaling guards =="
+    # exits nonzero itself if any stale-epoch append survives or a solo
+    # key reads back wrong; the guard additionally pins the 8-writer
+    # scaling floor and the steal-latency ceiling against the committed
+    # baseline (regenerate: python -m benchmarks.fig10_multi_frontend
+    # --quick --json BENCH_multi_writer.json)
+    python -m benchmarks.fig10_multi_frontend --quick --json "$scratch/multi_writer_fresh.json"
+    python scripts/check_bench.py "$scratch/multi_writer_fresh.json" BENCH_multi_writer.json
     echo "== chaos smoke: seeded fault schedules vs the durability oracle =="
     # exits nonzero itself on any durability violation or if the
     # front-end-initiated fence+promote path never fired

@@ -13,7 +13,8 @@ from .directory import DIRECTORY_NAME, LEASES_NAME, LeaseTable, ShardDirectory
 from .failover import blade_health, promote_blade
 from .rebalance import migrate_shard, rebalance
 from .router import ClusterFrontEnd, ClusterWaveScheduler, NVMCluster
-from .sharded import ShardedBPTree, ShardedHashTable, ShardedStructure
+from .sharded import (ShardedBPTree, ShardedHashTable, ShardedMVBPTree,
+                      ShardedStructure)
 
 __all__ = [
     "ShardDirectory",
@@ -27,6 +28,7 @@ __all__ = [
     "ShardedStructure",
     "ShardedHashTable",
     "ShardedBPTree",
+    "ShardedMVBPTree",
     "promote_blade",
     "blade_health",
     "migrate_shard",

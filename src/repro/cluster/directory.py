@@ -29,6 +29,7 @@ fresh.
 from __future__ import annotations
 
 import struct
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 from ..core.backend import CrashError, NVMBackend
@@ -39,9 +40,35 @@ DIRECTORY_NAME = "cluster.directory"
 LEASES_NAME = "cluster.leases"
 _MAGIC = 0x52444952  # "RDIR"
 _HEADER = struct.Struct("<IQII")  # magic, epoch, n_shards, n_blades
-_LEASE_MAGIC = 0x5341454C  # "LEAS"
+_LEASE_MAGIC = 0x5341454C   # "LEAS" (v1: read leases only)
+_LEASE_MAGIC2 = 0x3253454C  # "LES2" (v2: + write leases)
+_LEASE_MAGIC3 = 0x3353454C  # "LES3" (v3: write leases scoped per structure)
 _LEASE_HEADER = struct.Struct("<II")   # magic, n_entries
 _LEASE_ENTRY = struct.Struct("<IQd")   # fe_id, epoch, expiry_ns
+# v3 trailer: write_epoch counter, n_write_leases, n_shared_shards, then
+# per-write-lease records and the shared-mode (scope, shard) list
+_WLEASE_HEADER = struct.Struct("<QII")
+_WLEASE_ENTRY = struct.Struct("<IIIQdQ")  # scope, shard, fe_id, epoch, expiry, watermark
+
+
+def scope_of(name: str) -> int:
+    """Stable 32-bit lease scope of a structure name.
+
+    Write leases are per (structure, shard): two structures sharing a
+    cluster have independent op streams and independent blade fence slots
+    (``{name}.wep``), so their writers must never fence each other — keying
+    the lease table by bare shard index would false-share it across every
+    structure on the cluster (each one's writer stealing the others' leases
+    on the same shard index every batch).  CRC32 keeps the key compact and
+    deterministic; a collision merely merges two structures' lease domains
+    (spurious steals — conservative, never unsafe)."""
+    return zlib.crc32(name.encode())
+
+# a shard whose write lease changes hands this many times (without the same
+# holder renewing in between) flips to "shared" mode: further ping-pong
+# would cost a grant+invalidate round per flip, so contended writers
+# serialize through the per-shard writer mutex / MVCC instead
+STEAL_PINGPONG_LIMIT = 3
 
 
 class ShardDirectory:
@@ -206,11 +233,110 @@ class LeaseTable:
     to a tombstoned source.  Persisted as a checksummed blob on every live
     blade (like the directory): a restarted authority recovers which leases
     are outstanding and must be waited out / revoked, instead of silently
-    breaking the holders' contract."""
+    breaking the holders' contract.
+
+    Write leases (PR 10) extend the same table from read routing to write
+    *fencing*: a front-end must hold shard ``s``'s write lease before
+    appending to any of ``s``'s op logs.  Each grant/steal carries an epoch
+    from one global monotone counter (``write_epoch``) that is never reused
+    — it is the fencing token stamped into every blade-side fence slot, so
+    a stolen-from writer's later group commit compares stale at the blade
+    and vanishes instead of interleaving.  A lease release/handoff records
+    the holder's committed-tail ``watermark`` so the next writer can skip
+    replay when the durable tail already matches.  Shards that ping-pong
+    between writers flip to *shared* mode: every writer gets the same
+    epoch and serializes through the per-shard writer mutex
+    (``core.locks.WriterPreferredLock.acquire_writer``) or MVCC instead of
+    stealing the lease back and forth."""
 
     def __init__(self) -> None:
         self.leases: Dict[int, Tuple[int, float]] = {}
         self.revocations = 0  # total leases revoked (observability)
+        # (scope, shard) -> (holder fe_id, epoch, expiry sim-ns); scope is
+        # ``scope_of(structure name)`` so structures sharing a cluster never
+        # false-share their writers' leases (independent op streams)
+        self.write_leases: Dict[Tuple[int, int], Tuple[int, int, float]] = {}
+        # the global fencing-epoch counter: bumped on every exclusive
+        # grant/steal, NEVER reused (monotonicity is what makes a stale
+        # epoch detectable forever)
+        self.write_epoch = 0
+        self.steals = 0  # write leases taken from a live distinct holder
+        # (scope, shard) -> committed-tail watermark at release/handoff
+        self.watermarks: Dict[Tuple[int, int], int] = {}
+        # (scope, shard) -> consecutive distinct-holder handoffs (ping-pong
+        # score); resets when a holder renews, flips the shard to shared
+        # mode at STEAL_PINGPONG_LIMIT
+        self._flips: Dict[Tuple[int, int], int] = {}
+        self.shared_shards: set = set()  # of (scope, shard)
+
+    # ------------------------------------------------------- write fencing
+    def acquire_write(self, shard: int, fe_id: int, now_ns: float,
+                      ttl_ns: float, shared: bool = False, scope: int = 0
+                      ) -> Tuple[int, bool, Optional[int]]:
+        """Grant / renew / steal shard ``shard``'s write lease for ``fe_id``.
+
+        Returns ``(epoch, stolen, prev_holder)``.  Renewal by the current
+        holder keeps its epoch (no fence churn) and resets the ping-pong
+        score.  Taking the lease from a different unexpired holder is a
+        *steal*: the epoch counter bumps so the old holder's appends fence,
+        and the ping-pong score may flip the shard to shared mode.  In
+        shared mode every caller receives the shard's current epoch —
+        writers fence only against a future exclusive steal, and serialize
+        among themselves through the writer mutex.
+        """
+        key = (scope, shard)
+        shared = shared or key in self.shared_shards
+        cur = self.write_leases.get(key)
+        if cur is not None and cur[0] == fe_id:
+            if not shared:
+                self._flips[key] = 0
+            self.write_leases[key] = (fe_id, cur[1], now_ns + ttl_ns)
+            return cur[1], False, None
+        if shared and cur is not None:
+            # join the current epoch; the mutex serializes the holders
+            self.write_leases[key] = (fe_id, cur[1], now_ns + ttl_ns)
+            return cur[1], False, cur[0]
+        stolen = cur is not None and now_ns < cur[2]
+        prev = cur[0] if cur is not None else None
+        self.write_epoch += 1
+        self.write_leases[key] = (fe_id, self.write_epoch, now_ns + ttl_ns)
+        if stolen:
+            self.steals += 1
+            self._flips[key] = self._flips.get(key, 0) + 1
+            if self._flips[key] >= STEAL_PINGPONG_LIMIT:
+                self.shared_shards.add(key)
+        return self.write_epoch, stolen, prev
+
+    def write_holder(self, shard: int, scope: int = 0
+                     ) -> Optional[Tuple[int, int, float]]:
+        return self.write_leases.get((scope, shard))
+
+    def valid_write(self, shard: int, fe_id: int, epoch: int,
+                    now_ns: float, scope: int = 0) -> bool:
+        cur = self.write_leases.get((scope, shard))
+        return (cur is not None and cur[0] == fe_id and cur[1] == epoch
+                and now_ns < cur[2])
+
+    def release_write(self, shard: int, fe_id: int,
+                      watermark: Optional[int] = None,
+                      scope: int = 0) -> bool:
+        key = (scope, shard)
+        cur = self.write_leases.get(key)
+        if cur is None or cur[0] != fe_id:
+            return False
+        del self.write_leases[key]
+        if watermark is not None:
+            self.watermarks[key] = watermark
+        return True
+
+    def set_watermark(self, shard: int, watermark: int,
+                      scope: int = 0) -> None:
+        """Record a (stolen-from or draining) holder's committed tail so
+        the next writer's attach can skip replay (lease-handoff piggyback)."""
+        self.watermarks[(scope, shard)] = watermark
+
+    def handoff_watermark(self, shard: int, scope: int = 0) -> Optional[int]:
+        return self.watermarks.get((scope, shard))
 
     # -------------------------------------------------------------- protocol
     def grant(self, fe_id: int, epoch: int, now_ns: float, ttl_ns: float) -> bool:
@@ -236,18 +362,33 @@ class LeaseTable:
 
     def revoke_all(self) -> int:
         """Invalidate every outstanding lease; returns how many holders the
-        invalidation broadcast must reach (its cost scales with this)."""
-        n = len(self.leases)
+        invalidation broadcast must reach (its cost scales with this).
+
+        Write leases are revoked too: a reconfiguration (or lease-expiry
+        fault) must fence every in-flight writer — each will re-acquire
+        with a fresh, higher epoch, so blade fence slots only ever move
+        forward and any pre-revocation append compares stale."""
+        n = len(self.leases) + len(self.write_leases)
         self.leases.clear()
+        self.write_leases.clear()
         self.revocations += n
         return n
 
     # ----------------------------------------------------------- wire format
     def encode(self) -> bytes:
-        body = _LEASE_HEADER.pack(_LEASE_MAGIC, len(self.leases))
+        body = _LEASE_HEADER.pack(_LEASE_MAGIC3, len(self.leases))
         for fe_id in sorted(self.leases):
             epoch, expiry = self.leases[fe_id]
             body += _LEASE_ENTRY.pack(fe_id, epoch, expiry)
+        shared = sorted(self.shared_shards)
+        body += _WLEASE_HEADER.pack(self.write_epoch,
+                                    len(self.write_leases), len(shared))
+        for key in sorted(self.write_leases):
+            fe_id, epoch, expiry = self.write_leases[key]
+            body += _WLEASE_ENTRY.pack(key[0], key[1], fe_id, epoch, expiry,
+                                       self.watermarks.get(key, 0))
+        for scope, shard in shared:
+            body += struct.pack("<II", scope, shard)
         return body + struct.pack("<Q", fletcher64(body))
 
     @classmethod
@@ -258,7 +399,7 @@ class LeaseTable:
         if fletcher64(body) != csum:
             return None
         magic, n = _LEASE_HEADER.unpack_from(body, 0)
-        if magic != _LEASE_MAGIC:
+        if magic not in (_LEASE_MAGIC, _LEASE_MAGIC2, _LEASE_MAGIC3):
             return None
         t = cls()
         off = _LEASE_HEADER.size
@@ -266,6 +407,34 @@ class LeaseTable:
             fe_id, epoch, expiry = _LEASE_ENTRY.unpack_from(body, off)
             off += _LEASE_ENTRY.size
             t.leases[fe_id] = (epoch, expiry)
+        if magic == _LEASE_MAGIC:
+            return t  # v1 blob: read leases only, no writers outstanding
+        we, nw, ns = _WLEASE_HEADER.unpack_from(body, off)
+        off += _WLEASE_HEADER.size
+        t.write_epoch = we
+        if magic == _LEASE_MAGIC2:  # v2 blob: unscoped write leases
+            v2_entry = struct.Struct("<IIQdQ")
+            for _ in range(nw):
+                shard, fe_id, epoch, expiry, wm = v2_entry.unpack_from(body, off)
+                off += v2_entry.size
+                t.write_leases[(0, shard)] = (fe_id, epoch, expiry)
+                if wm:
+                    t.watermarks[(0, shard)] = wm
+            if ns:
+                t.shared_shards = {
+                    (0, s) for s in struct.unpack_from(f"<{ns}I", body, off)}
+            return t
+        for _ in range(nw):
+            scope, shard, fe_id, epoch, expiry, wm = \
+                _WLEASE_ENTRY.unpack_from(body, off)
+            off += _WLEASE_ENTRY.size
+            t.write_leases[(scope, shard)] = (fe_id, epoch, expiry)
+            if wm:
+                t.watermarks[(scope, shard)] = wm
+        for _ in range(ns):
+            scope, shard = struct.unpack_from("<II", body, off)
+            off += 8
+            t.shared_shards.add((scope, shard))
         return t
 
     # ------------------------------------------------------------ persistence

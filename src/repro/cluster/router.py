@@ -45,7 +45,7 @@ sub-batch starts at the same client time and the client resumes at the
 from __future__ import annotations
 
 import weakref
-from typing import Callable, Dict, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from ..core.backend import CrashError, NVMBackend
 from ..core.frontend import FEConfig, FrontEnd
@@ -294,6 +294,15 @@ class ClusterFrontEnd:
         self.directory_fetches = 0
         self.lease_validations = 0  # ops validated locally under the lease
         self.failovers_initiated = 0  # data-path-triggered fence+promote
+        # write-lease cache: (scope, shard) -> fencing epoch this client
+        # holds (scope = ``scope_of(structure name)``).  A write validates
+        # locally against the authoritative table (free, the same contract
+        # as read leases); a miss/steal pays the grant round.
+        self._write_epochs: Dict[Tuple[int, int], int] = {}
+        self.write_lease_validations = 0
+        # writer listeners: sharded structures that own op streams on this
+        # client (weakrefs); a steal victim drains/fences through them
+        self._writer_listeners: List[weakref.ref] = []
         self.scheduler = ClusterWaveScheduler(self)
         # observability: cluster-level op latencies (whole sharded batches /
         # singles, as seen by this client) + a trace track of its own.
@@ -384,6 +393,118 @@ class ClusterFrontEnd:
             tr.instant(self._track, "lease_grant", self.clock.now,
                        {"fe": self.fe_id, "epoch": self.epoch})
         return changed
+
+    # ------------------------------------------------------------ write leases
+    def register_writer(self, listener) -> None:
+        """Register an object with ``_surrender_shard(shard)`` (a sharded
+        structure owning op streams) so a steal can drain/fence this
+        client's staged windows for the taken shard."""
+        self._writer_listeners.append(weakref.ref(listener))
+
+    def ensure_write_lease(self, shard: int, shared: bool = False,
+                           scope: int = 0) -> int:
+        """Hold shard ``shard``'s write lease; returns the fencing epoch.
+
+        ``scope`` is the structure's lease scope (``scope_of(name)``) —
+        leases are per (structure, shard), so co-tenant structures never
+        contend.  Holding an unexpired lease at the cached epoch validates
+        locally — free, like read-lease validation.  Otherwise one grant
+        round is charged; if a different live holder stands, this is a
+        *steal*: the victim is asked to surrender gracefully (drain its
+        staged window under its old epoch, piggyback its committed-tail
+        watermark on the handoff) and is charged one invalidation round —
+        an unreachable victim is simply fenced, its unacked ops left to die
+        against the epoch check at the blade.
+        """
+        now = self.clock.now
+        table = self.cluster.leases
+        key = (scope, shard)
+        cached = self._write_epochs.get(key)
+        if cached is not None and table.valid_write(shard, self.fe_id,
+                                                    cached, now, scope=scope):
+            self.write_lease_validations += 1
+            return cached
+        tr = self.trace
+        t0 = now
+        self.clock.advance(self.cost.issue_ns + self.cost.rtt_ns
+                           + self.cost.lease_grant_ns)
+        holder = table.write_holder(shard, scope=scope)
+        victim = None
+        if (holder is not None and holder[0] != self.fe_id
+                and now < holder[2]
+                and not (shared or key in table.shared_shards)):
+            for cfe in self.cluster.frontends():
+                if cfe.fe_id == holder[0]:
+                    victim = cfe
+                    break
+        was_shared = key in table.shared_shards
+        epoch, stolen, prev = table.acquire_write(
+            shard, self.fe_id, self.clock.now, self.cluster.lease_ttl_ns,
+            shared=shared, scope=scope)
+        if not was_shared and key in table.shared_shards:
+            # steal ping-pong tripped the limit: writers on this shard now
+            # share one epoch and serialize through the writer mutex
+            obs.count("shared_mode_flips")
+        if stolen:
+            self.clock.advance(self.cost.lease_invalidate_ns)
+            if victim is not None:
+                victim.clock.advance_to(self.clock.now)
+                wm = victim._surrender_write_lease(shard, scope=scope)
+                self.clock.advance_to(victim.clock.now)
+                if wm is not None:
+                    table.set_watermark(shard, wm, scope=scope)
+            obs.count("write_lease_steals")
+            self.record_op_latency("lease_steal", self.clock.now - t0)
+            if tr is not None:
+                tr.instant(self._track, "lease_steal", self.clock.now,
+                           {"shard": shard, "from": prev, "to": self.fe_id,
+                            "epoch": epoch})
+        if cached != epoch:
+            obs.count("write_lease_grants")
+            table.persist(self.cluster.blades)
+        self._write_epochs[key] = epoch
+        if tr is not None:
+            tr.span(self._track, "write_lease", t0, self.clock.now,
+                    {"shard": shard, "epoch": epoch, "stolen": stolen,
+                     "shared": shared or key in table.shared_shards})
+        return epoch
+
+    def release_write_lease(self, shard: int,
+                            watermark: Optional[int] = None,
+                            scope: int = 0) -> None:
+        """Hand shard ``shard``'s write lease back voluntarily, piggybacking
+        the committed-tail watermark so the next holder can skip replay."""
+        if self._write_epochs.pop((scope, shard), None) is None:
+            return
+        self.cluster.leases.release_write(shard, self.fe_id, watermark,
+                                          scope=scope)
+
+    def _surrender_write_lease(self, shard: int,
+                               scope: int = 0) -> Optional[int]:
+        """Steal-victim hook: drain every staged window for ``shard`` under
+        the OLD epoch (the fence slot has not moved yet — the thief stamps
+        it after this returns), drop the cached lease, and return the
+        highest committed-tail watermark so the handoff can skip replay.
+        Only listeners in the thief's lease scope surrender — a steal on
+        one structure must not drain (or fence) a co-tenant structure's
+        staged windows on the same shard index.  An already-dead blade
+        means nothing can drain: return None and let the epoch fence kill
+        whatever was in flight."""
+        self._write_epochs.pop((scope, shard), None)
+        wm: Optional[int] = None
+        live = [r() for r in self._writer_listeners]
+        self._writer_listeners = [
+            r for r, o in zip(self._writer_listeners, live) if o is not None]
+        for obj in live:
+            if obj is None or getattr(obj, "_lease_scope", scope) != scope:
+                continue
+            try:
+                w = obj._surrender_shard(shard)
+            except CrashError:
+                continue  # blade down: the fence handles the rest
+            if w is not None:
+                wm = w if wm is None else max(wm, w)
+        return wm
 
     # --------------------------------------------------------------- binding
     def fe_for_blade(self, blade_id: int) -> FrontEnd:
@@ -549,6 +670,7 @@ class ClusterFrontEnd:
             "cluster_op_latency": {op: h.snapshot()
                                    for op, h in sorted(self.op_hist.items())},
             "lease_validations": self.lease_validations,
+            "write_lease_validations": self.write_lease_validations,
             "directory_fetches": self.directory_fetches,
             "failovers_initiated": self.failovers_initiated,
             "epoch": self.epoch,

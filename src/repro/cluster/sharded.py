@@ -14,13 +14,21 @@ an op that hits a crashed blade recovers it through the cluster (reboot or
 mirror promotion), rebinds, replays the shard's op-log tail via the
 existing ``RemoteStructure.recover`` path, and retries.
 
-Concurrency model: as in the seed's single-blade design, each structure
-assumes **one writer front-end at a time** (op-sequence numbers are a
-single per-structure stream; concurrent interleaved writers would collide
-on them).  Reader front-ends and writer *hand-off* — attach, recover,
-continue, as exercised by the failover and migration tests — are fully
-supported; concurrent multi-writer needs the locks/MV machinery and is a
-ROADMAP follow-up.
+Concurrency model (multi-writer, PR 10): many front-ends may mutate the
+same sharded structure concurrently.  Ownership of each shard's op stream
+is mediated by the cluster's write leases (``LeaseTable.acquire_write``):
+every write entry point ensures the shard's write lease first, and the
+lease's fencing epoch is stamped both into the op stream (epoch-marker
+records) and into the blade-side fence slot ``{shard-name}.wep`` — so a
+writer whose lease was stolen has its next group commit rejected whole at
+the blade (``StaleWriterError``), its unacked ops vanishing instead of
+interleaving.  A graceful steal drains the victim first and piggybacks its
+committed-tail watermark on the lease handoff, letting the new writer
+re-attach without replaying the op log.  Shards that ping-pong between
+writers flip to *shared* mode: writers share one epoch and serialize
+through the per-shard writer mutex (``core.locks``) — or, for
+``ShardedMVBPTree``, through MVCC copy-on-write publication — with a
+flush-before-unlock discipline that keeps op-sequence numbers disjoint.
 """
 
 from __future__ import annotations
@@ -29,11 +37,14 @@ import contextlib
 import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
-from ..core.backend import CrashError
+from ..core.backend import CrashError, StaleWriterError
 from ..core.cache import ResultCache
 from ..core.frontend import ReadPolicy
+from ..core.locks import WriterPreferredLock
 from ..core.structures import RemoteBPTree, RemoteHashTable
+from ..core.structures.mv_bpt import RemoteMVBPTree
 from .. import obs
+from .directory import scope_of
 from .router import ClusterFrontEnd
 
 MAX_RETRIES = 3
@@ -50,6 +61,11 @@ class _ShardHashTable(RemoteHashTable):
 
 
 class _ShardBPTree(RemoteBPTree):
+    OPLOG_BLOCKS = SHARD_LOG_BLOCKS
+    TXLOG_BLOCKS = SHARD_LOG_BLOCKS
+
+
+class _ShardMVBPTree(RemoteMVBPTree):
     OPLOG_BLOCKS = SHARD_LOG_BLOCKS
     TXLOG_BLOCKS = SHARD_LOG_BLOCKS
 
@@ -81,6 +97,12 @@ class ShardedStructure:
     staleness contract).  Default is off (``result_cache_entries=0``): the
     read/write paths are byte-identical to the uncached ones."""
 
+    #: subclasses that must serialize concurrent writers through the shard
+    #: mutex even before the lease table flips the shard to shared mode
+    #: (MV structures publish via root CAS — two unserialized writers would
+    #: lose updates on the losing CAS).
+    FORCE_LOCK = False
+
     def __init__(self, cfe: ClusterFrontEnd, name: str,
                  read_policy: Optional[ReadPolicy] = None,
                  result_cache: Optional[int] = None):
@@ -98,6 +120,14 @@ class ShardedStructure:
                 sess.register_result_cache(self._result_cache)
         else:
             self._result_cache = None
+        # write-lease bookkeeping: the epoch this wrapper last stamped into
+        # each shard's fence slot (a steal bumps the table's epoch, making
+        # ours stale — _ensure_write re-stamps on the next write).  Leases
+        # are scoped per structure so co-tenant structures on one cluster
+        # never contend for the same shard index.
+        self._write_epochs: Dict[int, int] = {}
+        self._lease_scope = scope_of(name)
+        cfe.register_writer(self)
 
     # ---------------------------------------------------------- observability
     @contextlib.contextmanager
@@ -139,6 +169,7 @@ class ShardedStructure:
         fe = self.cfe.fe_for_blade(bid)
         obj = self._shards.get(shard)
         if obj is not None and obj.fe is fe:
+            self._resync_external(shard, obj)
             return obj
         fe.clock.advance_to(self.cfe.clock.now)
         try:
@@ -153,6 +184,15 @@ class ShardedStructure:
                 dirty = be.get_name(f"{name}.seq") > be.get_name(f"{name}.opsn")
                 if obj is None and not dirty:
                     obj = self._attach(fe, name)       # first touch: plain attach
+                elif (not dirty and self.cfe.cluster.leases.handoff_watermark(
+                            shard, scope=self._lease_scope)
+                        == be.get_name(f"{name}.seq")):
+                    # graceful lease handoff: the previous writer drained and
+                    # its committed-tail watermark rode the lease — the op
+                    # stream holds nothing unapplied, so re-attach without
+                    # the full replay pass.
+                    obj = self._attach(fe, name)
+                    obs.count("lease_handoff_clean")
                 else:
                     obj = self._recover(fe, name)      # rebound: replay the tail
             elif create_if_missing:
@@ -173,6 +213,22 @@ class ShardedStructure:
                 if entry[0] == shard:
                     self._pinned[k] = (shard, obj.h.seq)
         return obj
+
+    def _resync_external(self, shard: int, obj) -> None:
+        """Multi-writer freshness check on the cached-shard fast path:
+        another front-end may have committed past our view of the shard's
+        op stream (only possible after our write lease moved — while we
+        hold it, nobody else can commit, and this is a free no-op).  Roll
+        the committed-tail view forward and drop caches whose pages the
+        other writer's commits may shadow."""
+        durable = obj.fe.backend.get_name(f"{obj.name}.seq")
+        if durable > obj.h.seq:
+            obj.h.seq = durable
+            obj.fe.cache.clear()
+            refresh = getattr(obj, "refresh_root", None)
+            if refresh is not None:
+                refresh()
+            self._invalidate_groups([shard])
 
     # --------------------------------------------------- replica read routing
     def _note_write(self, key: int, shard: int, obj) -> None:
@@ -301,12 +357,106 @@ class ShardedStructure:
         with obj.fe.replica_reads(pol):
             return scanner(obj)
 
+    # ------------------------------------------------------------ write leases
+    def _lock_mode(self, shard: int) -> bool:
+        """True when writers on this shard serialize through the per-shard
+        writer mutex instead of exclusive lease ownership: either the lease
+        table flipped the shard to shared mode (steal ping-pong) or the
+        subclass forces it (MVCC structures)."""
+        return (self.FORCE_LOCK or (self._lease_scope, shard)
+                in self.cfe.cluster.leases.shared_shards)
+
+    def _ensure_write(self, shard: int, obj) -> None:
+        """Hold the shard's write lease and make sure its fencing epoch is
+        stamped — into the blade-side fence slot ``{name}.wep`` (checked by
+        every group commit) and into the handle (so ``op_begin`` stages an
+        epoch marker ahead of this writer's next ops)."""
+        epoch = self.cfe.ensure_write_lease(shard, shared=self._lock_mode(shard),
+                                            scope=self._lease_scope)
+        if self._write_epochs.get(shard) != epoch or obj.h.writer_epoch != epoch:
+            fe = obj.fe
+            if (obj.h.writer_epoch and obj.h.writer_epoch != epoch
+                    and (obj.h.oplog_staged or obj.h.wbuf or obj.h.pending_ops)
+                    and fe.backend.get_name(f"{obj.name}.wep")
+                    > obj.h.writer_epoch):
+                # the blade fence moved past our old epoch: another writer
+                # held the shard in between, so our staged window is already
+                # condemned — drop it here so its ops can't ride the new
+                # epoch.  (An epoch bump with the fence UNMOVED is just a
+                # revocation/renewal landing on this same writer: the staged
+                # ops were never fenced and simply continue under the new
+                # epoch's marker.)
+                fe.discard_staged(obj.h)
+            # pre-stamp the fence once per grant: epochs only move forward,
+            # so re-stamping an already-newer slot is impossible (the newer
+            # epoch belongs to us — we just acquired it).
+            fe.backend.set_name(f"{obj.name}.wep", epoch)
+            # resume from whatever the previous holder committed (graceful
+            # handoff watermark or plain committed tail): roll the seq
+            # forward and drop pages its writes may shadow.
+            durable = fe.backend.get_name(f"{obj.name}.seq")
+            if durable > obj.h.seq:
+                obj.h.seq = durable
+                fe.cache.clear()
+                refresh = getattr(obj, "refresh_root", None)
+                if refresh is not None:
+                    refresh()
+            self._write_epochs[shard] = epoch
+            obj.h.writer_epoch = epoch
+
+    @contextlib.contextmanager
+    def _locked(self, shard: int, obj):
+        """Shared-mode write window: take the shard's writer mutex, resync
+        to whatever the previous holder committed, run the ops, and flush
+        BEFORE unlocking — op-sequence numbers stay disjoint because no two
+        holders ever stage against the same committed tail."""
+        fe = obj.fe
+        lock = WriterPreferredLock(fe, obj.name)
+        lock.acquire_writer()
+        try:
+            durable = fe.backend.get_name(f"{obj.name}.seq")
+            if durable > obj.h.seq:
+                # another writer committed past our view: roll the seq
+                # forward (never back — we may carry staged ops from an
+                # exclusive phase) and drop cached pages that its writes
+                # may shadow.  MV structures also re-read the published
+                # root so the post-flush CAS advances from it.
+                obj.h.seq = durable
+                fe.cache.clear()
+                refresh = getattr(obj, "refresh_root", None)
+                if refresh is not None:
+                    refresh()
+            yield
+            fe.drain(obj.h)  # flush-before-unlock
+        finally:
+            lock.release_writer()
+
+    def _surrender_shard(self, shard: int) -> Optional[int]:
+        """Victim side of a graceful lease steal (called by the thief's CFE
+        through the writer registry): drain the shard's staged state under
+        the OLD epoch — the fence isn't stamped yet, so the flush commits —
+        and hand back the committed-tail watermark for the lease handoff."""
+        self._write_epochs.pop(shard, None)
+        obj = self._shards.get(shard)
+        if obj is None:
+            return None
+        fe = obj.fe
+        fe.clock.advance_to(self.cfe.clock.now)
+        try:
+            fe.drain(obj.h)
+        finally:
+            self.cfe.clock.advance_to(fe.clock.now)
+        obj.h.writer_epoch = 0
+        return obj.h.seq
+
     # ------------------------------------------------------------ op dispatch
     def _on_shard(self, shard: int, fn: Callable, *, create_if_missing: bool = True,
-                  default=None):
+                  default=None, write: bool = False):
         """Run `fn(shard_structure)` with epoch validation, clock threading,
-        and recover-and-retry on blade failure."""
-        last: Optional[CrashError] = None
+        and recover-and-retry on blade failure.  ``write=True`` additionally
+        ensures the shard's write lease (fencing epoch stamped) and, in
+        shared mode, runs `fn` inside the writer-mutex window."""
+        last: Optional[Exception] = None
         for _ in range(1 + MAX_RETRIES):
             self.cfe.ensure_fresh()
             bid = self.cfe.directory.blade_of(shard)
@@ -317,13 +467,27 @@ class ShardedStructure:
                 fe = obj.fe
                 fe.clock.advance_to(self.cfe.clock.now)
                 try:
-                    result = fn(obj)
+                    if write:
+                        self._ensure_write(shard, obj)
+                        if self._lock_mode(shard):
+                            with self._locked(shard, obj):
+                                result = fn(obj)
+                        else:
+                            result = fn(obj)
+                    else:
+                        result = fn(obj)
                 finally:
                     self.cfe.clock.advance_to(fe.clock.now)
                 # load accounting on success only: a failed attempt retries
                 # and must not double-count its op into the shard weight
                 self.cfe.cluster.directory.record_ops(shard)
                 return result
+            except StaleWriterError as e:
+                # lease stolen between stamp and flush: the staged window is
+                # already discarded (frontend fencing) — re-acquire and rerun
+                # the (idempotent-upsert) ops under the new epoch.
+                last = e
+                self._write_epochs.pop(shard, None)
             except CrashError as e:
                 last = e
                 self.cfe.recover_blade(bid)
@@ -334,17 +498,20 @@ class ShardedStructure:
 
     def _on_shards(self, shard_fns: Dict[int, Callable], *,
                    create_if_missing: bool = True, default=None,
-                   ops_per_shard: Optional[Dict[int, int]] = None) -> Dict[int, object]:
+                   ops_per_shard: Optional[Dict[int, int]] = None,
+                   write: bool = False) -> Dict[int, object]:
         """Batch dispatch: run `shard_fns[shard](shard_structure)` for every
         shard with ONE epoch check per attempt (not per op), sub-batches to
         different blades overlapping in time (same-blade shards serialize on
         their shared front-end), and recover-and-retry per blade on
         failure.  ``ops_per_shard`` feeds the load-weight accounting with
         the real sub-batch sizes (default 1 per shard; pass 0 for non-op
-        dispatches like drains).  Returns {shard: result}."""
+        dispatches like drains).  ``write=True`` ensures each shard's write
+        lease during resolution and serializes lock-mode shards through the
+        writer mutex.  Returns {shard: result}."""
         out: Dict[int, object] = {}
         remaining = dict(shard_fns)
-        last: Optional[CrashError] = None
+        last: Optional[Exception] = None
         for _ in range(1 + MAX_RETRIES):
             if not remaining:
                 break
@@ -356,6 +523,8 @@ class ShardedStructure:
                 bid = self.cfe.directory.blade_of(shard)
                 try:
                     obj = self._get_shard(shard, create_if_missing)
+                    if obj is not None and write:
+                        self._ensure_write(shard, obj)
                 except CrashError as e:
                     last = e
                     failed_bids.add(bid)
@@ -380,15 +549,38 @@ class ShardedStructure:
             # exactly-once guarantee for non-idempotent ops.
             done: List[int] = []
             errs: List[CrashError] = []
+            stale: List[StaleWriterError] = []
 
             def _blade_fn(bid: int, shards: List[int]) -> Callable:
                 def run(fe) -> None:
                     ran: List[int] = []
                     try:
-                        with fe.batch_all():
-                            for shard in shards:
+                        locked = ([s for s in shards if self._lock_mode(s)]
+                                  if write else [])
+                        plain = [s for s in shards if s not in locked]
+                        if plain:
+                            with fe.batch_all():
+                                for shard in plain:
+                                    out[shard] = remaining[shard](objs[shard])
+                                    ran.append(shard)
+                        for shard in locked:
+                            # lock-mode shards flush inside the mutex window
+                            # (flush-before-unlock), so they stay out of the
+                            # blade's combined batch_all window
+                            with self._locked(shard, objs[shard]):
                                 out[shard] = remaining[shard](objs[shard])
-                                ran.append(shard)
+                            ran.append(shard)
+                    except StaleWriterError as e:
+                        # a steal fenced this blade's window mid-flight: the
+                        # fenced shard's staged ops are already discarded and
+                        # every op here is an idempotent upsert, so rerun the
+                        # whole sub-batch under a fresh lease — no blade
+                        # recovery involved.
+                        stale.append(e)
+                        for shard in ran:
+                            out.pop(shard, None)
+                        for shard in shards:
+                            self._write_epochs.pop(shard, None)
                     except CrashError as e:
                         errs.append(e)
                         failed_bids.add(bid)
@@ -404,6 +596,8 @@ class ShardedStructure:
             )
             if errs:
                 last = errs[-1]
+            elif stale:
+                last = stale[-1]
             for shard in done:
                 remaining.pop(shard, None)
                 n = 1 if ops_per_shard is None else ops_per_shard.get(shard, 1)
@@ -443,7 +637,8 @@ class ShardedStructure:
         with self._cluster_op("put_many", len(pairs)):
             self._on_shards(
                 {s: mk(s, sub) for s, sub in groups.items()},
-                ops_per_shard={s: len(sub) for s, sub in groups.items()})
+                ops_per_shard={s: len(sub) for s, sub in groups.items()},
+                write=True)
 
     def get_many(self, keys: List[int]) -> List[Optional[int]]:
         """Partition a read batch by shard, fan out, merge results back into
@@ -561,7 +756,7 @@ class ShardedHashTable(ShardedStructure):
             self._note_write(key, shard, t)
 
         with self._cluster_op("put", 1):
-            self._on_shard(shard, run)
+            self._on_shard(shard, run, write=True)
 
     def get(self, key: int):
         rc = self._result_cache
@@ -594,7 +789,8 @@ class ShardedHashTable(ShardedStructure):
             self._note_write(key, shard, t)  # deletions pin too (no resurrection)
             return ok
 
-        return self._on_shard(shard, run, create_if_missing=False, default=False)
+        return self._on_shard(shard, run, create_if_missing=False, default=False,
+                              write=True)
 
     def items(self) -> List[Tuple[int, int]]:
         out: List[Tuple[int, int]] = []
@@ -632,7 +828,7 @@ class ShardedBPTree(ShardedStructure):
             self._note_write(key, shard, t)
 
         with self._cluster_op("put", 1):
-            self._on_shard(shard, run)
+            self._on_shard(shard, run, write=True)
 
     def find(self, key: int):
         rc = self._result_cache
@@ -685,3 +881,64 @@ class ShardedBPTree(ShardedStructure):
             if part:
                 streams.append(part)
         return list(heapq.merge(*streams))
+
+
+class ShardedMVBPTree(ShardedStructure):
+    """Multi-version B+Tree hash-partitioned over the cluster: the MVCC leg
+    of the multi-writer story.  Writers on a shard always serialize through
+    the per-shard writer mutex (``FORCE_LOCK``) instead of exclusive lease
+    ownership — each window copies-on-write against the last published root,
+    flushes, and publishes with a root CAS, so contended writers pay mutex
+    handoff instead of lease ping-pong and readers always traverse an
+    immutable published version."""
+
+    FORCE_LOCK = True
+
+    def _create(self, fe, name):
+        return _ShardMVBPTree(fe, name, create=True)
+
+    def _attach(self, fe, name):
+        return _ShardMVBPTree(fe, name, create=False)
+
+    def _recover(self, fe, name):
+        return _ShardMVBPTree.recover(fe, name)
+
+    # -------------------------------------------------------------------- ops
+    def insert(self, key: int, value: int) -> None:
+        self._rc_invalidate(key)
+        shard = self.cfe.directory.shard_of(key)
+
+        def run(t):
+            t.insert(key, value)
+            self._note_write(key, shard, t)
+
+        with self._cluster_op("put", 1):
+            self._on_shard(shard, run, write=True)
+
+    def find(self, key: int):
+        shard = self.cfe.directory.shard_of(key)
+
+        def run(t):
+            return self._serve_reads(
+                t, [key], lambda obj, ks: obj.lookup_many(ks))[0]
+
+        with self._cluster_op("get", 1):
+            return self._on_shard(shard, run, create_if_missing=False)
+
+    def range_scan(self, lo: int, hi: int) -> List[Tuple[int, int]]:
+        streams: List[List[Tuple[int, int]]] = []
+        for shard in range(self.cfe.directory.n_shards):
+            part = self._on_shard(
+                shard,
+                lambda t, s=shard: self._serve_scan(
+                    s, t, lambda o: o.range_items(lo, hi)
+                ),
+                create_if_missing=False,
+                default=[],
+            )
+            if part:
+                streams.append(part)
+        return list(heapq.merge(*streams))
+
+    def items(self) -> List[Tuple[int, int]]:
+        return self.range_scan(-(1 << 63), (1 << 63) - 1)

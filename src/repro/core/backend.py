@@ -49,6 +49,19 @@ class CrashError(RuntimeError):
     """Raised when the blade is down (transient or permanent failure)."""
 
 
+class StaleWriterError(RuntimeError):
+    """A fenced append carried a writer epoch below the blade's fence slot.
+
+    Raised by ``tx_append``/``set_name_fenced`` when the caller's write
+    lease was stolen: the new holder stamped a higher epoch into the
+    structure's fence slot, so the old writer's group commit is rejected
+    whole — its unacked ops vanish instead of interleaving.  Deliberately
+    NOT a ``CrashError``: the blade is healthy, so the self-healing
+    retry/recovery path must not fire; the caller re-acquires the lease
+    and replays its intent instead.
+    """
+
+
 class Mirror:
     """A read-only mirror blade: receives the replicated log channel.
 
@@ -70,6 +83,14 @@ class Mirror:
     genuinely lags the primary's committed tail, which is what the bounded-
     staleness read contract measures against.
 
+    Channel v2 adds sim-*time* lag: ``set_lag_ns(d)`` stamps every queued
+    unit with its arrival sim-time and holds it until ``now >= stamp + d``
+    — the replication delay a real one-sided channel exhibits, independent
+    of how bursty the write stream is.  Depth (``lag_writes``, kept as the
+    compat alias/knob) and delay compose: a unit applies only when BOTH
+    constraints release it.  Time-held units also drain on reads, so the
+    mirror catches up as sim time advances even with no new writes.
+
     Prefix consistency alone is not enough for replica READS: a flush
     window's memory logs are write-merged (last value per address), so no
     intra-transaction write order keeps every pointer-before-payload
@@ -86,11 +107,24 @@ class Mirror:
         self.arena = bytearray(capacity)
         self.bytes_replicated = 0
         self.link = Link(cost or CostModel())
-        self.lag_writes = 0  # replication-channel depth (0 = synchronous)
-        # units of (addr, bytes): a standalone write, or a whole tx group
-        self._pending: Deque[List[Tuple[int, bytes]]] = collections.deque()
+        self.lag_writes = 0   # replication-channel depth (0 = synchronous)
+        self.lag_ns = 0.0     # apply-at delay in sim-time (0 = immediate)
+        self.clock: Optional[Clock] = None  # attached by the owning backend
+        # units of [arrival_stamp, [(addr, bytes), ...]]: a standalone
+        # write, or a whole tx group (stamp = latest arrival in the group)
+        self._pending: Deque[List] = collections.deque()
         self._n_pending = 0          # queued physical writes across all units
         self._open_group: Optional[int] = None  # tx id still streaming in
+
+    @property
+    def synchronous(self) -> bool:
+        """True iff the channel applies writes at the instant they arrive —
+        no depth, no delay, nothing queued.  The gate every staleness-
+        sensitive fast path checks (caching, pins, columnar apply)."""
+        return self.lag_writes <= 0 and self.lag_ns <= 0 and not self._pending
+
+    def _now(self) -> float:
+        return self.clock.now if self.clock is not None else 0.0
 
     def set_lag(self, n: int) -> None:
         """Re-depth the replication channel mid-run (lag-spike / stall
@@ -99,15 +133,25 @@ class Mirror:
         self.lag_writes = max(0, n)
         self._drain()
 
+    def set_lag_ns(self, d: float) -> None:
+        """Set the channel's apply-at delay in sim-time nanoseconds: a unit
+        arriving at time t becomes applicable at t + d.  Lowering the delay
+        releases newly-eligible units immediately."""
+        self.lag_ns = max(0.0, d)
+        self._drain()
+
     def apply(self, addr: int, data: bytes, group: Optional[int] = None) -> None:
-        if self.lag_writes <= 0 and not self._pending:
+        if self.synchronous:
             self._apply_now(addr, data)
             return
         data = bytes(data)
+        now = self._now()
         if group is not None and group == self._open_group:
-            self._pending[-1].append((addr, data))
+            unit = self._pending[-1]
+            unit[0] = now  # whole group becomes eligible at its last arrival
+            unit[1].append((addr, data))
         else:
-            self._pending.append([(addr, data)])
+            self._pending.append([now, [(addr, data)]])
             self._open_group = group
         self._n_pending += 1
         self._drain()
@@ -119,10 +163,14 @@ class Mirror:
         self._drain()
 
     def _drain(self) -> None:
+        now = self._now()
         while self._pending and self._n_pending > self.lag_writes:
             if len(self._pending) == 1 and self._open_group is not None:
                 break  # the head unit is a tx still streaming: never split it
-            unit = self._pending.popleft()
+            stamp, unit = self._pending[0]
+            if self.lag_ns > 0 and now < stamp + self.lag_ns:
+                break  # head not yet eligible; later units are even younger
+            self._pending.popleft()
             for a, d in unit:
                 self._apply_now(a, d)
             self._n_pending -= len(unit)
@@ -137,15 +185,19 @@ class Mirror:
         promoted — in-flight bytes were sent, only unsent ones are lost,
         and a dead primary sends nothing)."""
         while self._pending:
-            for a, d in self._pending.popleft():
+            for a, d in self._pending.popleft()[1]:
                 self._apply_now(a, d)
         self._n_pending = 0
         self._open_group = None
 
     def read(self, addr: int, size: int) -> bytes:
+        if self.lag_ns > 0 and self._pending:
+            self._drain()  # time-held units apply as sim time advances
         return bytes(self.arena[addr : addr + size])
 
     def word(self, addr: int) -> int:
+        if self.lag_ns > 0 and self._pending:
+            self._drain()
         return struct.unpack_from("<Q", self.arena, addr)[0]
 
 
@@ -172,6 +224,8 @@ class NVMBackend:
         self.clock = Clock()
         self.stats = Stats()
         self.mirrors: List[Mirror] = [Mirror(capacity, self.cost) for _ in range(num_mirrors)]
+        for m in self.mirrors:
+            m.clock = self.clock  # time-lagged units drain against blade time
         self.alive = True
         self.permanent_failure = False
         # fail the next physical write after `fail_after` bytes (test hook);
@@ -340,6 +394,16 @@ class NVMBackend:
     def set_name(self, name: str, value: int) -> None:
         self._phys_write(self.name_slot_addr(name), struct.pack("<Q", value))
 
+    def set_name_fenced(self, name: str, value: int,
+                        epoch: Optional[int], fence: Optional[str]) -> None:
+        """``set_name`` guarded by the write-lease fence: a stale writer
+        must not advance a commit watermark (``{name}.seq``) after losing
+        its lease — the watermark is what commits entry bytes, so fencing
+        it closes the ack path even if log bytes already landed."""
+        self._check_alive()
+        self.check_fence(epoch, fence)
+        self.set_name(name, value)
+
     def has_name(self, name: str) -> bool:
         """True iff `name` already occupies a naming slot (no allocation)."""
         if name in self._names:
@@ -481,14 +545,39 @@ class NVMBackend:
         return self._log_areas[name]
 
     # ------------------------------------------------- transactional interface
-    def tx_append(self, area: "LogArea", payload: bytes) -> int:
+    def check_fence(self, epoch: Optional[int], fence: Optional[str]) -> None:
+        """Reject a stale writer's append before any byte lands.
+
+        `fence` names the structure's write-epoch slot (``{name}.wep``),
+        stamped by the lease layer at every write-lease grant/steal; a
+        caller whose `epoch` is below the slot lost its lease to a newer
+        writer and its whole group commit must vanish — the asymmetric
+        analogue of checking ownership metadata co-located with the data.
+        The slot is pre-stamped at acquisition, so ``get_name`` here is a
+        cached dict probe, not a naming-table scan.
+        """
+        if epoch is not None and fence is not None:
+            if self.get_name(fence) > epoch:
+                raise StaleWriterError(
+                    f"write fenced: epoch {epoch} < {fence}={self.get_name(fence)}"
+                )
+
+    def tx_append(self, area: "LogArea", payload: bytes,
+                  epoch: Optional[int] = None,
+                  fence: Optional[str] = None) -> int:
         """Land a pre-encoded transaction (or op-log batch) in a log area.
 
         This is what a one-sided RDMA_Write into the log region does; the
         head pointer (LPN) bump is part of the same write on real hardware
         (the commit flag delimits entries), here modeled by the head slot.
+
+        With `epoch`/`fence` the append is write-lease fenced: the blade
+        compares the caller's writer epoch against the structure's fence
+        slot and raises ``StaleWriterError`` instead of landing a stale
+        writer's bytes (see ``check_fence``).
         """
         self._check_alive()
+        self.check_fence(epoch, fence)
         if area.head + len(payload) > area.size:
             area.compact()
         while area.head + len(payload) > area.size:
@@ -535,7 +624,7 @@ class NVMBackend:
         # then it is byte- and clock-identical to the per-entry
         # ``_phys_write`` loop, which remains the fault-injection path.
         if self._torn_write_at is None and all(
-            m.lag_writes <= 0 and not m._pending for m in self.mirrors
+            m.synchronous for m in self.mirrors
         ):
             with profile("log_decode"):
                 addrs, offs, lens, n_txs, consumed = decode_txs_columnar(buf)

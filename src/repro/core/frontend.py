@@ -90,9 +90,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .allocator import FrontEndAllocator
-from .backend import CrashError, LogArea, NVMBackend
+from .backend import CrashError, LogArea, NVMBackend, StaleWriterError
 from .cache import PageCache
-from .oplog import MemLog, OpLog, committed_tail, encode_oplog, encode_tx
+from .oplog import (MemLog, OpLog, committed_tail, encode_epoch_mark,
+                    encode_oplog, encode_tx)
 from .sim import Clock, CostModel, Stats
 from .. import obs
 from ..obs.hist import LatencyHistogram
@@ -240,8 +241,7 @@ class ReadTarget:
         scope).  A synchronous mirror serves byte-identical data — safe."""
         if self.mirror_idx is None:
             return True
-        m = self.backend.mirrors[self.mirror_idx]
-        return m.lag_writes <= 0 and not m._pending
+        return self.backend.mirrors[self.mirror_idx].synchronous
 
     def fetch(self, addr: int, size: int) -> bytes:
         if self.mirror_idx is None:
@@ -301,6 +301,13 @@ class StructHandle:
         self.seq = 0                               # operation sequence number
         self.oplog_staged: List[bytes] = []
         self.oplog_staged_ops = 0
+        # write-lease fencing (0 = unfenced single-writer legacy path):
+        # every flush of this handle carries `writer_epoch` and the blade
+        # rejects it if the structure's fence slot has moved past it.  The
+        # op stream is stamped with an epoch-marker record once per epoch
+        # (`_staged_epoch` tracks what the staged window already carries).
+        self.writer_epoch = 0
+        self._staged_epoch: Optional[int] = None
         # structures may defer materialization (stack/queue compaction);
         # the hook runs right before a memory-log flush.
         self.pre_flush = None
@@ -455,7 +462,7 @@ class FrontEnd:
         # byte-identical to the primary, so per-wave re-picking (load
         # spreading) cannot mix cuts there.  Lag state cannot change inside
         # a read-only scope (single-writer sim), so deciding once is sound.
-        if any(m.lag_writes > 0 or m._pending for m in self.backend.mirrors):
+        if any(not m.synchronous for m in self.backend.mirrors):
             pin[h.name] = tgt
         return tgt
 
@@ -1075,6 +1082,12 @@ class FrontEnd:
         if self.cfg.symmetric:
             return h.seq
         if self.cfg.use_oplog:
+            if h.writer_epoch and h._staged_epoch != h.writer_epoch:
+                # first op under a (new) write-lease epoch: stamp the stream
+                # so replay can audit epoch monotonicity (markers don't count
+                # toward the group-commit cadence)
+                h.oplog_staged.append(encode_epoch_mark(h.writer_epoch))
+                h._staged_epoch = h.writer_epoch
             entry = encode_oplog(OpLog(opcode, struct.pack("<Q", h.seq) + payload))
             h.oplog_staged.append(entry)
             h.oplog_staged_ops += 1
@@ -1145,14 +1158,50 @@ class FrontEnd:
             self.flush_memlogs(h)  # per-op, but pipelined (R makes it safe)
 
     # ================================================================ flushes
+    def _fence_of(self, h: StructHandle):
+        """(epoch, fence-slot-name) a fenced handle's blade writes must
+        carry; (None, None) on the unfenced single-writer legacy path."""
+        if h.writer_epoch:
+            return h.writer_epoch, f"{h.name}.wep"
+        return None, None
+
+    def discard_staged(self, h: StructHandle) -> None:
+        """Throw away `h`'s staged-but-unflushed window after the blade
+        fenced this writer (lease stolen): none of it was acked, so it must
+        vanish — including the page-cache copies of dirty nodes, which now
+        diverge from what the new lease holder will write.  The op counter
+        rolls back to the durable watermark so a re-acquired lease resumes
+        numbering where the committed tail actually ends."""
+        for addr in h.wbuf:
+            self.cache.invalidate(addr)
+        h.wbuf.clear()
+        h.pending_ops = 0
+        h.oplog_staged.clear()
+        h.oplog_staged_ops = 0
+        h._staged_epoch = None
+        try:
+            h.seq = self.backend.get_name(f"{h.name}.seq")
+        except CrashError:
+            pass  # blade down: recovery re-reads the watermark on re-attach
+        self.stats.fenced_appends += 1
+        obs.count("fenced_appends")
+        if self.trace is not None:
+            self.trace.instant(self._tk, "write_fence", self.clock.now,
+                               {"struct": h.name, "epoch": h.writer_epoch})
+
     def flush_oplog(self, h: StructHandle, sync: bool = True) -> None:
         if not h.oplog_staged:
             return
         tr = self.trace
         t0 = self.clock.now
         payload = b"".join(h.oplog_staged)
-        self.backend.tx_append(h.oplog_area, payload)
-        self.backend.set_name(f"{h.name}.seq", h.seq)
+        epoch, fence = self._fence_of(h)
+        try:
+            self.backend.tx_append(h.oplog_area, payload, epoch, fence)
+            self.backend.set_name_fenced(f"{h.name}.seq", h.seq, epoch, fence)
+        except StaleWriterError:
+            self.discard_staged(h)
+            raise
         self.stats.rdma_writes += 1
         self.stats.bytes_written += len(payload)
         if sync:
@@ -1204,13 +1253,23 @@ class FrontEnd:
         if not dirty:
             return
         total = 0
-        # op-log bytes first, every handle (durability ordering)
+        # op-log bytes first, every handle (durability ordering).  A fenced
+        # handle whose lease was stolen raises StaleWriterError here: its
+        # staged window is discarded (unacked, so it simply vanishes) and
+        # the error propagates — handles already flushed in this loop were
+        # committed by their own watermark write and stay committed, the
+        # same per-handle all-or-none story as a torn flush.
         for h in dirty:
             if not h.oplog_staged:
                 continue
             oplog_payload = b"".join(h.oplog_staged)
-            self.backend.tx_append(h.oplog_area, oplog_payload)
-            self.backend.set_name(f"{h.name}.seq", h.seq)
+            epoch, fence = self._fence_of(h)
+            try:
+                self.backend.tx_append(h.oplog_area, oplog_payload, epoch, fence)
+                self.backend.set_name_fenced(f"{h.name}.seq", h.seq, epoch, fence)
+            except StaleWriterError:
+                self.discard_staged(h)
+                raise
             h.oplog_staged.clear()
             h.oplog_staged_ops = 0
             total += len(oplog_payload)
@@ -1229,7 +1288,12 @@ class FrontEnd:
             entries.append(MemLog(self.backend.name_slot_addr(h.opsn_name),
                                   struct.pack("<Q", h.seq)))
             payload = encode_tx(entries)
-            self.backend.tx_append(h.txlog_area, payload)
+            epoch, fence = self._fence_of(h)
+            try:
+                self.backend.tx_append(h.txlog_area, payload, epoch, fence)
+            except StaleWriterError:
+                self.discard_staged(h)
+                raise
             total += len(payload)
             self.stats.memlogs_flushed += len(h.wbuf)
             h.wbuf.clear()

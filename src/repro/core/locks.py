@@ -7,6 +7,13 @@ SN is even, remember it, and validate after reading: a changed SN means the
 snapshot may be torn and the read must retry.  The writer is never blocked
 (writer-preferred); readers pay retries under write pressure — the effect
 measured in paper Fig. 9a.
+
+Multi-writer extension (``acquire_writer``/``release_writer``): when a shard
+runs in *shared* write-lease mode (contended range, lease ping-pong would
+thrash), concurrent writer front-ends serialize through a CAS mutex on a
+second well-known slot (``{name}.wlk``, 0 = free, else holder token).  The
+blade's same-address atomic serialization prices the contention (CAS storms
+cost sim-time); the seqlock keeps doing reader-side consistency.
 """
 
 from __future__ import annotations
@@ -18,6 +25,7 @@ class WriterPreferredLock:
     def __init__(self, fe: FrontEnd, name: str):
         self.fe = fe
         self.addr = fe.backend.name_slot_addr(f"{name}.sn")
+        self.lock_addr = fe.backend.name_slot_addr(f"{name}.wlk")
 
     # writer side ----------------------------------------------------------
     def writer_lock(self) -> None:
@@ -25,6 +33,28 @@ class WriterPreferredLock:
 
     def writer_unlock(self) -> None:
         self.fe.atomic_add(self.addr, 1)
+
+    # writer-writer mutual exclusion ---------------------------------------
+    def acquire_writer(self, max_spins: int = 64) -> None:
+        """Take the writer mutex with a one-sided CAS (0 -> holder token).
+
+        Callers hold the mutex only across one op window (ops + drain), so
+        a failed CAS means another front-end is mid-window; spin with the
+        op-timeout backoff charged to the clock.  Exhausting the spins
+        means a holder died without unlocking — the write-lease layer above
+        recovers that by fencing, so surface it loudly here.
+        """
+        fe = self.fe
+        token = fe.fe_id + 1  # nonzero holder id
+        for _ in range(max_spins):
+            if fe.atomic_cas(self.lock_addr, 0, token):
+                return
+            fe.clock.advance(fe.cost.op_timeout_ns)
+        raise RuntimeError(f"writer mutex: holder never released {fe.fe_id}")
+
+    def release_writer(self) -> None:
+        fe = self.fe
+        fe.atomic_cas(self.lock_addr, fe.fe_id + 1, 0)
 
     # reader side ----------------------------------------------------------
     def reader_begin(self) -> int:

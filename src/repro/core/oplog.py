@@ -5,6 +5,8 @@ Follows the paper's Figure 2:
   memory log entry :=  FLAG_MEM(1B) | address(8B) | length(4B) | data(length)
   transaction      :=  mem-log*     | FLAG_COMMIT(1B) | checksum(8B)
   operation log    :=  FLAG_OP(1B)  | op(1B) | length(4B) | payload(length)
+  epoch marker     :=  operation-log record with op=OP_EPOCH_MARK(0xFF) and
+                       an 8-byte writer-epoch payload (write-lease fencing)
 
 The checksum is a Fletcher-64 over 32-bit words (zero-padded), matching the
 pure-jnp oracle in ``repro.kernels.ref.fletcher64_ref`` so the Pallas kernel,
@@ -37,6 +39,15 @@ from ..obs.profile import profile
 FLAG_MEM = 0x01
 FLAG_COMMIT = 0x02
 FLAG_OP = 0x03
+
+# Reserved opcode: a writer-epoch marker in an op-log stream.  A front-end
+# holding a shard's WRITE lease stamps its fencing epoch into the stream
+# (once per epoch, before the first op it covers); replay treats epochs as
+# monotone — an entry under a marker LOWER than one already seen is a stale
+# writer's append that slipped in out of order and is dropped rather than
+# interleaved (see ``committed_tail``).  Structure opcodes are small ints;
+# 0xFF can never collide.
+OP_EPOCH_MARK = 0xFF
 
 _MOD = np.uint64(0xFFFFFFFF)
 
@@ -163,15 +174,59 @@ def committed_tail(buf: bytes, lo_seq: int, hi_seq: int) -> List[OpLog]:
     a front-end re-attached after a torn flush restarts numbering at the
     watermark, so stale ghost entries from the torn window may precede live
     ones with the same seq.  Returned in seq order.
+
+    Epoch fencing: ``OP_EPOCH_MARK`` entries stamp the writer epoch of the
+    entries that follow.  Epochs must be monotone in log order — every
+    landed entry passed the blade-side fence (``tx_append`` epoch check) at
+    append time, so a marker LOWER than one already seen means a stale
+    writer's append slipped past the fence out of order; entries under it
+    are skipped until a marker at or above the high-water epoch restores
+    monotonicity.  Logs without markers (single-writer / legacy) are
+    accepted unfiltered.
     """
     by_seq: dict = {}
     with profile("log_decode"):
         entries = decode_oplogs(buf)
+    max_epoch = 0
+    stale = False
     for e in entries:
+        if e.op == OP_EPOCH_MARK:
+            ep = struct.unpack_from("<Q", e.payload, 0)[0]
+            stale = ep < max_epoch
+            max_epoch = max(max_epoch, ep)
+            continue
+        if stale:
+            continue
         seq = entry_seq(e)
         if lo_seq < seq <= hi_seq:
             by_seq[seq] = OpLog(e.op, e.payload[8:])
     return [by_seq[s] for s in sorted(by_seq)]
+
+
+def encode_epoch_mark(epoch: int) -> bytes:
+    """Encoded op-log record stamping the writer epoch of what follows."""
+    return encode_oplog(OpLog(OP_EPOCH_MARK, struct.pack("<Q", epoch)))
+
+
+def stale_epoch_entries(buf: bytes) -> int:
+    """Count op-log entries shadowed by a non-monotone epoch marker.
+
+    A landed entry under a marker lower than the log's high-water epoch is
+    a stale writer's append that survived past a fence bump — the bench and
+    chaos oracles assert this is always zero (the blade-side ``tx_append``
+    fence rejects such groups before they land).
+    """
+    max_epoch = 0
+    stale = False
+    n = 0
+    for e in decode_oplogs(buf):
+        if e.op == OP_EPOCH_MARK:
+            ep = struct.unpack_from("<Q", e.payload, 0)[0]
+            stale = ep < max_epoch
+            max_epoch = max(max_epoch, ep)
+        elif stale:
+            n += 1
+    return n
 
 
 def entry_seq(e: OpLog) -> int:

@@ -123,6 +123,9 @@ class Stats:
     breaker_trips: int = 0      # circuit breakers opened by this front-end
     degraded_reads: int = 0     # reads routed to a replica because the
                                 # primary's circuit breaker was open
+    fenced_appends: int = 0     # group commits rejected at the blade because
+                                # this front-end's write lease was stolen
+                                # (stale epoch); the staged window vanished
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)

@@ -55,6 +55,45 @@ class RemoteMVBPTree(RemoteStructure):
     def snapshot_root(self) -> int:
         return self.fe.atomic_read(self.root_addr)
 
+    def refresh_root(self) -> None:
+        """Re-sync to the currently published root: another front-end may
+        have advanced it (writers serialized by the shard writer mutex), in
+        which case our remembered ``_published`` would make the next publish
+        CAS fail.  Any unpublished local working state is abandoned — the
+        caller resyncs only at window boundaries, when the op log already
+        re-covers it."""
+        self._published = self.fe.atomic_read(self.root_addr)
+        self._working = self._published
+        self._epoch.clear()
+
+    # ---------------------------------------------------------------- scans
+    def range_items(self, lo: int, hi: int) -> List[Tuple[int, int]]:
+        """All (key, value) with lo <= key <= hi, sorted.  Descends from the
+        working root instead of chasing the leaf chain: copy-on-write splits
+        leave old leaves' next pointers aimed at pre-copy siblings, so the
+        chain can cross into a stale snapshot — the root-down walk cannot."""
+        out: List[Tuple[int, int]] = []
+        self._collect(self._working, lo, hi, out)
+        return out
+
+    def items(self) -> List[Tuple[int, int]]:
+        return self.range_items(-(1 << 63), (1 << 63) - 1)
+
+    def _collect(self, addr: int, lo: int, hi: int,
+                 out: List[Tuple[int, int]]) -> None:
+        if not addr:
+            return
+        node = self._read(addr)
+        if node.kind == LEAF:
+            for i, k in enumerate(node.keys):
+                if lo <= k <= hi:
+                    out.append((k, node.ptrs[i]))
+            return
+        i0 = bisect_left(node.keys, lo)
+        i1 = bisect_right(node.keys, hi)
+        for p in node.ptrs[i0:i1 + 1]:
+            self._collect(p, lo, hi, out)
+
     # ------------------------------------------------------------ primitives
     def _read(self, addr: int) -> BNode:
         return BNode.decode(self.fe.read(self.h, addr, NODE_SIZE))

@@ -59,6 +59,16 @@ class RemoteMVBST(RemoteStructure):
         """Reader entry point: the latest *published* version."""
         return self.fe.atomic_read(self.root_addr)
 
+    def refresh_root(self) -> None:
+        """Re-sync to the currently published root: another front-end may
+        have advanced it (writers serialized by the shard writer mutex), in
+        which case our remembered ``_published`` would make the next publish
+        CAS fail.  Unpublished local working state is abandoned — callers
+        resync only at window boundaries, when the op log re-covers it."""
+        self._published = self.fe.atomic_read(self.root_addr)
+        self._working = self._published
+        self._epoch.clear()
+
     # ------------------------------------------------------------ primitives
     def _new_node(self, key: int, value: int, left: int = 0, right: int = 0) -> int:
         addr = self.fe.alloc(NODE_SIZE)

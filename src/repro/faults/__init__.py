@@ -19,7 +19,7 @@ fault-free replay of the acked prefix).
 
 from .plan import ALL_FAULT_KINDS, FaultPlan, FaultSpec
 from .inject import FaultInjector
-from .harness import ChaosResult, run_chaos_schedule
+from .harness import ChaosResult, run_chaos_schedule, run_steal_schedule
 
 __all__ = [
     "ALL_FAULT_KINDS",
@@ -28,4 +28,5 @@ __all__ = [
     "FaultInjector",
     "ChaosResult",
     "run_chaos_schedule",
+    "run_steal_schedule",
 ]

@@ -27,7 +27,9 @@ from repro.cluster import ClusterFrontEnd, NVMCluster, ReadPolicy, ShardedHashTa
 from repro.core import (CircuitBreaker, CrashError, EndpointUnreachable,
                         FEConfig, FrontEnd, NVMBackend)
 from repro.core.structures import RemoteHashTable
-from repro.faults import ALL_FAULT_KINDS, FaultInjector, FaultPlan, run_chaos_schedule
+from repro.faults import (ALL_FAULT_KINDS, FaultInjector, FaultPlan,
+                          run_chaos_schedule, run_steal_schedule)
+from repro.faults.harness import _stale_epoch_total
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -328,6 +330,126 @@ def test_lagging_mirror_bytes_stay_out_of_cache_under_spike():
     be.mirrors[0].set_lag(0)  # spike ends: queued writes drain
     be.mirrors[0].sync()
     assert bytes(be.mirrors[0].arena) == bytes(be.arena)
+
+
+# ------------------------------------------- write-lease fencing chaos
+def test_steal_schedule_sweep_no_durability_or_fence_violations():
+    """Two writers racing lease steals under lease_expiry + crash faults:
+    every acked op survives, no stale-epoch op is ever committed, and the
+    sweep genuinely exercises the steal path (steals > 0 per run)."""
+    kinds = set()
+    for seed in range(8):
+        r = run_steal_schedule(seed)
+        assert r.ok, f"seed {seed}: {r.violations[:5]}"
+        assert r.stats["write_lease_steals"] > 0, f"seed {seed}: no steals"
+        assert r.stats["stale_epoch_entries"] == 0
+        kinds.update(r.injected)
+    assert {"lease_expiry", "crash"} <= kinds, f"only {sorted(kinds)} injected"
+
+
+def test_fenced_stale_writer_group_commit_vanishes_whole():
+    """The tentpole fencing contract, deterministically: writer A stages a
+    group-commit window, its lease expires, writer B acquires the shard
+    (epoch bumps, no graceful surrender — A never saw the steal) and
+    commits.  A's later flush must be rejected at the blade by the epoch
+    fence: its staged ops vanish whole (never interleave with B's stream)
+    and A's next read sees B's value."""
+    cluster = NVMCluster(n_blades=2, capacity_per_blade=1 << 22,
+                         n_shards=4, num_mirrors=1)
+    a = ClusterFrontEnd(cluster, FEConfig.rcb(), fe_id=0)
+    b = ClusterFrontEnd(cluster, FEConfig.rcb(), fe_id=1)
+    ta = ShardedHashTable(a, "f", n_buckets=256)
+    tb = ShardedHashTable(b, "f", n_buckets=256)
+    for k in range(16):
+        ta.put(k, k)
+    ta.drain()
+    ta.put(3, 111)              # staged under A's epoch, not yet flushed
+    # B's clock runs past the TTL: A's lease is expired at acquisition
+    # time, so the epoch bumps with stolen=False and no surrender drain
+    b.clock.advance_to(a.clock.now + cluster.lease_ttl_ns + 1)
+    tb.put(3, 222)
+    tb.drain()
+    fenced0 = sum(fe.stats.fenced_appends for fe in a.fes.values())
+    ta.drain()                  # flush rejected at the blade, then retried empty
+    fenced1 = sum(fe.stats.fenced_appends for fe in a.fes.values())
+    assert fenced1 > fenced0, "stale writer's group commit was not fenced"
+    assert ta.get(3) == 222     # A's 111 vanished whole; A resynced
+    assert tb.get(3) == 222
+    assert _stale_epoch_total(cluster) == 0
+    # untouched keys are unaffected by the fence
+    assert ta.get_many([k for k in range(16) if k != 3]) == \
+        [k for k in range(16) if k != 3]
+
+
+# --------------------------------- replication channel v2: sim-time lag
+def test_mirror_lag_ns_holds_bytes_until_sim_time():
+    """set_lag_ns holds replicated units until now >= arrival + lag_ns,
+    composes with lag_writes depth, and reads drain time-held units as
+    sim time advances with no new writes."""
+    be = NVMBackend(capacity=1 << 22, num_mirrors=1)
+    m = be.mirrors[0]
+    m.set_lag_ns(1_000.0)
+    addr = be.heap_start
+    t0 = be.clock.now
+    be.write(addr, b"\xab" * 16)
+    assert not m.synchronous
+    assert bytes(m.arena[addr:addr + 16]) == b"\x00" * 16  # held by time
+    assert m.read(addr, 16) == b"\x00" * 16                # still too young
+    be.clock.advance_to(t0 + 1_001.0)
+    assert m.read(addr, 16) == b"\xab" * 16  # read drained the held unit
+    # depth AND delay compose: a unit applies only when both release it
+    m.lag_writes = 4
+    t1 = be.clock.now
+    be.write(addr + 64, b"\xcd" * 8)
+    be.clock.advance_to(t1 + 10_000.0)       # time constraint long released
+    assert m.read(addr + 64, 8) == b"\x00" * 8  # depth still holds it
+    for i in range(4):
+        be.write(addr + 128 + i * 8, b"\xee" * 8)
+    assert m.read(addr + 64, 8) == b"\xcd" * 8  # pushed through by depth
+    # spike ends: zeroing both knobs + sync restores byte-identity
+    m.lag_writes = 0
+    m.set_lag_ns(0)
+    m.sync()
+    assert bytes(m.arena) == bytes(be.arena)
+    assert m.synchronous
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=1, max_value=1 << 40),
+       st.integers(min_value=0, max_value=999))
+def test_lag_ns_spike_mid_run_never_violates_ryw_pins(spike_ns, seed):
+    """Satellite regression: a *timestamp*-lagged mirror (set_lag_ns)
+    injected mid-run composes with the staleness/RYW pins exactly like a
+    depth-lagged one — every key this client wrote reads back fresh."""
+    cluster = NVMCluster(n_blades=2, capacity_per_blade=1 << 22,
+                         n_shards=4, num_mirrors=1)
+    policy = ReadPolicy(mode="auto", max_staleness_ops=8)
+    cfe = ClusterFrontEnd(cluster, FEConfig.rc(cache_bytes=4096), fe_id=0)
+    t = ShardedHashTable(cfe, "t", n_buckets=256, read_policy=policy)
+    rng = random.Random(seed)
+    model = {}
+    pairs = [(k, k) for k in range(48)]
+    t.put_many(pairs)
+    model.update(pairs)
+    for step in range(12):
+        if step == 5:  # mid-run sim-time spike on every blade's mirror
+            for be in cluster.blades.values():
+                be.mirrors[0].set_lag_ns(float(spike_ns))
+        if step == 8:  # compose: depth lag joins the time lag mid-wave
+            for be in cluster.blades.values():
+                be.mirrors[0].set_lag(3)
+        ks = [rng.randrange(64) for _ in range(16)]
+        if rng.random() < 0.5:
+            t.put_many([(k, 1000 + step * 100 + j) for j, k in enumerate(ks)])
+            for j, k in enumerate(ks):
+                model[k] = 1000 + step * 100 + j
+        else:
+            got = t.get_many(ks)
+            for k, v in zip(ks, got):
+                assert v == model.get(k), (step, k, v, model.get(k))
+    for be in cluster.blades.values():
+        be.mirrors[0].set_lag_ns(0)
+        be.mirrors[0].set_lag(0)
 
 
 # ------------------------------------- crash -> reboot -> rejoin
